@@ -1,0 +1,112 @@
+"""Fig. 7(b) — Optimal5 vs XNOR5: optimal model quantization for deep nets.
+
+The paper trains Caffe's CIFAR-10 CNN with 5-level weight quantization:
+uniform levels (XNOR-Net's multi-bit scheme) vs the variance-optimal levels
+(C4+C5). CIFAR-10 is unavailable offline; we train a small MLP on a synthetic
+32×32×3 image-classification proxy with QAT fake-quant in both schemes and
+compare training losses — the claim is the *ordering*, which is driven by the
+weight distribution being bell-shaped rather than uniform.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import optimal
+
+
+def _make_data(n=2048, seed=0, classes=20):
+    # hard enough that 5-level weight quantization error is the bottleneck
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(0, 1, (classes, 32 * 32 * 3))
+    y = rng.integers(0, classes, n)
+    x = protos[y] + rng.normal(0, 4.0, (n, 32 * 32 * 3))
+    return jnp.asarray(x, jnp.float32), jnp.asarray(y)
+
+
+def _init(key, d_in=3072, width=128, classes=20):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": jax.random.normal(k1, (d_in, width)) * d_in**-0.5,
+        "w2": jax.random.normal(k2, (width, width)) * width**-0.5,
+        "w3": jax.random.normal(k3, (width, classes)) * width**-0.5,
+    }
+
+
+def _levels_for(w, scheme: str, n_levels: int = 5):
+    hi = float(jnp.max(jnp.abs(w)))
+    if scheme == "uniform":
+        return jnp.linspace(-hi, hi, n_levels)
+    lv = optimal.fit_levels(np.asarray(w).ravel(), n_levels - 1, symmetric=True)
+    # symmetric fit may give n_levels±1; resample to exactly n_levels by DP
+    if len(lv) != n_levels:
+        z = (np.asarray(w).ravel() + hi) / (2 * hi)
+        lv01 = optimal.optimal_levels_discretized(z, n_levels - 1, M=128)
+        lv = lv01 * 2 * hi - hi
+    return jnp.asarray(lv, jnp.float32)
+
+
+def _quantize_to(w, levels):
+    d = jnp.abs(w[..., None] - levels)
+    return levels[jnp.argmin(d, axis=-1)]
+
+
+def _loss(params, x, y, scheme, refit_levels):
+    def q(w, name):
+        return w + jax.lax.stop_gradient(_quantize_to(w, refit_levels[name]) - w)
+    h = jax.nn.relu(x @ q(params["w1"], "w1"))
+    h = jax.nn.relu(h @ q(params["w2"], "w2"))
+    logits = h @ q(params["w3"], "w3")
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def train(scheme: str, steps=300, lr=0.1, seed=0):
+    x, y = _make_data()
+    params = _init(jax.random.PRNGKey(seed))
+    losses = []
+    grad_fn = jax.jit(jax.value_and_grad(_loss), static_argnames=("scheme",))
+    for t in range(steps):
+        # refit levels every 25 steps (the DP runs off the training hot path)
+        if t % 25 == 0:
+            refit = {k: _levels_for(w, scheme) for k, w in params.items()}
+        idx = np.random.default_rng(t).integers(0, x.shape[0], 128)
+        lv, g = grad_fn(params, x[idx], y[idx], scheme, refit)
+        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+        losses.append(float(lv))
+    return np.asarray(losses)
+
+
+def run(quick: bool = False):
+    steps = 120 if quick else 300
+    uni = train("uniform", steps=steps)
+    opt = train("optimal", steps=steps)
+    # An over-parameterized net eventually ADAPTS its weights to either level
+    # grid (losses both → ~0), so the discriminating regime is the early
+    # phase, before adaptation — matching the paper's "converges to lower
+    # training loss faster" framing for Fig. 7(b). Average over seeds.
+    early = slice(15, 80)
+    uni_e = [train("uniform", steps=90, seed=sd)[early].mean() for sd in (0, 1, 2)]
+    opt_e = [train("optimal", steps=90, seed=sd)[early].mean() for sd in (0, 1, 2)]
+    tail = slice(-20, None)
+    return [{
+        "mode": "XNOR5-uniform", "early_loss": float(np.mean(uni_e)),
+        "final_loss": float(uni[tail].mean()),
+    }, {
+        "mode": "Optimal5", "early_loss": float(np.mean(opt_e)),
+        "final_loss": float(opt[tail].mean()),
+    }, {
+        "mode": "CHECKS",
+        "optimal5_beats_xnor5": float(np.mean(opt_e)) < float(np.mean(uni_e)),
+    }]
+
+
+def main():
+    for row in run():
+        print(",".join(f"{k}={v}" for k, v in row.items()))
+
+
+if __name__ == "__main__":
+    main()

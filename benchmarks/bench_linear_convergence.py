@@ -1,0 +1,63 @@
+"""Fig. 4 / App. J — linear regression + LS-SVM with end-to-end low precision.
+
+Paper claims validated:
+  (1) double sampling at 5–6 bits converges to the fp32 solution at a
+      comparable rate (linreg + LS-SVM);
+  (2) naive (biased) quantization converges to a worse solution at low bits;
+  (3) end-to-end (samples+model+gradient) quantization adds only a small
+      constant variance factor.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.linear import Precision, eval_accuracy, make_dataset, train_linear
+
+
+def run(quick: bool = False):
+    rows = []
+    epochs = 8 if quick else 15
+    n_train = 2000 if quick else 10_000
+    for ds_name, model in (("synthetic100", "linreg"), ("cod-rna", "lssvm")):
+        ds = make_dataset(ds_name, n_train=n_train, n_test=2000)
+        runs = {
+            "fp32": Precision("full"),
+            "double_6b": Precision("double", bits_sample=6),
+            "double_2b": Precision("double", bits_sample=2),
+            "naive_2b": Precision("naive", bits_sample=2),
+            "e2e_6b_8b_8b": Precision("e2e", bits_sample=6, bits_model=8,
+                                      bits_grad=8),
+        }
+        losses = {}
+        for name, prec in runs.items():
+            r = train_linear(ds, prec, model=model, epochs=epochs, lr=0.3,
+                             ridge_c=1e-3)
+            losses[name] = r.losses
+            rows.append({
+                "dataset": ds_name, "model": model, "mode": name,
+                "final_loss": float(r.losses[-1]),
+                "acc": eval_accuracy(ds, r.x) if model == "lssvm" else None,
+            })
+        fp32 = losses["fp32"][-1]
+        checks = {
+            "double6_matches_fp32": losses["double_6b"][-1] < fp32 * 1.15 + 1e-4,
+            "e2e_converges": losses["e2e_6b_8b_8b"][-1] < fp32 * 1.4 + 1e-4,
+        }
+        if model == "linreg":
+            # the App. B.1 bias D_a·x scales with 1/s² — visible at 2 bits
+            # (s=3 intervals); on ±1-label classification the biased minimum
+            # can still classify equally (informational there)
+            checks["naive2_worse_than_double2"] = bool(
+                losses["naive_2b"][-1] > losses["double_2b"][-1] * 1.02)
+        rows.append({"dataset": ds_name, "model": model, "mode": "CHECKS",
+                     **checks})
+    return rows
+
+
+def main():
+    for row in run():
+        print(",".join(f"{k}={v}" for k, v in row.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,393 @@
+"""Compositional roofline extraction — exact per-step FLOP/byte/collective
+totals for every (arch × shape) cell on the single-pod production mesh.
+
+Why compositional: the full-program dry-run compiles with `lax.scan` over
+layers (fast, and its memory_analysis is the true peak), but XLA's
+cost_analysis counts loop bodies ONCE. Here each distinct piece (layer
+fwd+bwd, embed, loss head, optimizer, decode layer, …) is lowered and compiled
+*separately* with the production shardings and UNROLLED inner loops, measured
+with XLA's own cost model, then composed:
+
+    train   = accum × (embed' + L × layer' + loss') + optimizer
+    prefill = embed + L × layer_collect + readout_last
+    decode  = embed₁ + L × layer_decode + readout₁
+
+(' = includes the backward). Per-piece compiles are seconds each, so the
+whole 33-cell table lands in ~10 min on one CPU core.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.bench_roofline --arch gemma-7b --shape train_4k
+  PYTHONPATH=src python -m benchmarks.bench_roofline --all --out roofline.json
+"""
+from __future__ import annotations
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import hlostats as H
+from repro.launch import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as T
+from repro.optim import adamw
+
+_PIECE_CACHE: dict = {}
+
+
+def _compile_piece(name, fn, arg_specs, arg_shardings, mesh, donate=(),
+                   out_shardings=None):
+    key = name
+    if key in _PIECE_CACHE:
+        return _PIECE_CACHE[key]
+    kw = {"out_shardings": out_shardings} if out_shardings is not None else {}
+    jfn = jax.jit(fn, in_shardings=arg_shardings, donate_argnums=donate, **kw)
+    with jax.sharding.set_mesh(mesh):
+        compiled = jfn.lower(*arg_specs).compile()
+    stats = H.compiled_stats(compiled)
+    stats["name"] = name
+    _PIECE_CACHE[key] = stats
+    return stats
+
+
+def _tree_shardings(mesh, tree, spec_fn):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec_fn(path, leaf)), tree)
+
+
+def _named(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _layer_specs(cfg):
+    """ShapeDtypeStructs for ONE (unstacked) layer of each kind."""
+    return jax.eval_shape(lambda: T._init_layer(cfg, jax.random.PRNGKey(0)))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def measure_cell(arch: str, shape_name: str, precision=None,
+                 accum_override=None, verbose=True) -> dict:
+    from repro.launch.dryrun import TRAIN_ACCUM, model_flops_for  # shares tables
+    mesh = make_production_mesh(multi_pod=False)
+    shape = configs.SHAPES[shape_name]
+    overrides = {"dp_axes": ("data",), "scan_layers": False, "q_chunk": 2048,
+                 "ssd_chunk": 2048 if shape.kind == "prefill" else 1024}
+    if precision is not None:
+        overrides["precision"] = precision
+    cfg = configs.get_config(arch, **overrides)
+    accum = accum_override or (TRAIN_ACCUM.get(cfg.name, 1)
+                               if shape.kind == "train" else 1)
+    b = shape.global_batch // accum if shape.kind == "train" else shape.global_batch
+    s = shape.seq_len
+    dtype = cfg.dtype
+    act = _sds((b, s, cfg.d_model), dtype)
+    act_sh = _named(mesh, T._act_spec(cfg))
+    lp = _layer_specs(cfg)
+    if cfg.precision.weight_bits and cfg.precision.weight_storage == "int" \
+            and shape.kind != "train":
+        from repro.precision.qat import quantize_param_tree
+        lp = jax.eval_shape(
+            lambda q: quantize_param_tree(q, cfg.precision.weight_bits), lp)
+    lp_sh = _tree_shardings(mesh, lp, sh.param_spec)
+    emb = jax.eval_shape(lambda: {"t": T.init_embedding(
+        jax.random.PRNGKey(0), cfg.vocab_padded, cfg.d_model, dtype)["table"]})
+    emb_spec = {"table": emb["t"]}
+    emb_sh = {"table": _named(mesh, P("model", None))}
+    tag = f"{arch}/{shape_name}/{cfg.precision}"
+
+    pieces = []   # (stats, multiplier)
+
+    if shape.kind in ("train",):
+        tok = _sds((b, s), jnp.int32)
+        tok_sh = _named(mesh, P("data", None))
+
+        # --- embed (fwd+bwd: scatter-add of cot into the table) ---
+        def embed_fb(table, tokens, cot):
+            x = jnp.take(table["table"], tokens, axis=0).astype(dtype)
+            # bwd wrt table via vjp, weighted by cot
+            return jnp.sum(x.astype(jnp.float32) * cot)
+        g_embed = jax.grad(embed_fb, argnums=0)
+        st = _compile_piece(
+            tag + "/embed", g_embed,
+            (emb_spec, tok, _sds((b, s, cfg.d_model), jnp.float32)),
+            (emb_sh, tok_sh, act_sh), mesh, out_shardings=emb_sh)
+        pieces.append((st, accum))
+
+        # --- one layer fwd+bwd ---
+        from repro.precision import qat as qat_mod
+
+        def layer_fb(layer, x):
+            if cfg.precision.weight_bits and cfg.precision.weight_storage == "ship":
+                layer = qat_mod.ship_quant_tree(layer, cfg.precision.weight_bits)
+            y = T._layer_fwd(cfg, layer, x)
+            return jnp.sum(y.astype(jnp.float32))
+        g_layer = jax.value_and_grad(layer_fb, argnums=(0, 1))
+        repl = _named(mesh, P())
+        st = _compile_piece(tag + "/layer", g_layer, (lp, act),
+                            (lp_sh, act_sh), mesh,
+                            out_shardings=(repl, (lp_sh, act_sh)))
+        n_main = cfg.n_layers
+        pieces.append((st, accum * n_main))
+
+        # hybrid / vlm extra blocks
+        if cfg.family == "hybrid":
+            blk = jax.eval_shape(lambda: T._init_attn_block(cfg, jax.random.PRNGKey(0)))
+            blk_sh = _tree_shardings(mesh, blk, sh.param_spec)
+            def blk_fb(bp, x):
+                return jnp.sum(T._attn_block_fwd(cfg, bp, x).astype(jnp.float32))
+            st = _compile_piece(tag + "/shared", jax.value_and_grad(blk_fb, argnums=(0, 1)),
+                                (blk, act), (blk_sh, act_sh), mesh,
+                                out_shardings=(_named(mesh, P()), (blk_sh, act_sh)))
+            pieces.append((st, accum * (cfg.n_layers // cfg.shared_attn_every)))
+        if cfg.family == "vlm":
+            blk = jax.eval_shape(lambda: T._init_attn_block(cfg, jax.random.PRNGKey(0), cross=True))
+            blk_sh = _tree_shardings(mesh, blk, sh.param_spec)
+            vis = _sds((b, cfg.n_vis_tokens, cfg.d_model), jnp.float32)
+            vis_sh = _named(mesh, P("data", None, None))
+            def cross_fb(bp, x, v):
+                return jnp.sum(T._attn_block_fwd(cfg, bp, x, kv_tokens=v.astype(dtype))
+                               .astype(jnp.float32))
+            st = _compile_piece(tag + "/cross", jax.value_and_grad(cross_fb, argnums=(0, 1)),
+                                (blk, act, vis), (blk_sh, act_sh, vis_sh), mesh,
+                                out_shardings=(_named(mesh, P()), (blk_sh, act_sh)))
+            pieces.append((st, accum * (cfg.n_layers // cfg.cross_attn_every)))
+
+        # --- loss head fwd+bwd (tied readout) ---
+        def loss_fb(table, h, targets):
+            params = {"embed": {"table": table["table"]},
+                      "final_norm": {"g": jnp.zeros((cfg.d_model,), dtype)}}
+            # chunked xent exactly as transformer.loss_fn (unrolled)
+            hh = T.rmsnorm(params["final_norm"], h)
+            cs = min(cfg.logit_chunk, s)
+            n_chunks = s // cs
+            dpa = "data"
+            total = jnp.float32(0.0)
+            for i in range(n_chunks):
+                hc = jax.lax.dynamic_slice_in_dim(hh, i * cs, cs, axis=1)
+                tc = jax.lax.dynamic_slice_in_dim(targets, i * cs, cs, axis=1)
+                logits = T._readout(params, cfg, hc)
+                logits = T.shard_hint(logits, P(dpa, None, "model"))
+                logz = jax.nn.logsumexp(logits, axis=-1)
+                vpos = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+                gold = jnp.sum(jnp.where(vpos == tc[..., None], logits, 0.0), -1)
+                total = total + jnp.sum(logz - gold)
+            return total / (b * s)
+        g_loss = jax.value_and_grad(loss_fb, argnums=(0, 1))
+        st = _compile_piece(tag + "/loss", g_loss, (emb_spec, act, tok),
+                            (emb_sh, act_sh, tok_sh), mesh,
+                            out_shardings=(_named(mesh, P()), (emb_sh, act_sh)))
+        pieces.append((st, accum))
+
+        # --- optimizer ---
+        params = T.param_specs(cfg)
+        p_sh = sh.make_param_shardings(mesh, params)
+        ocfg = adamw.AdamWConfig()
+        opt = jax.eval_shape(lambda p: adamw.init(p, ocfg), params)
+        o_sh = sh.make_opt_shardings(mesh, opt)
+        def opt_piece(p, g, o):
+            return adamw.apply_updates(p, g, o, ocfg)
+        st = _compile_piece(tag + "/opt", opt_piece, (params, params, opt),
+                            (p_sh, p_sh, o_sh), mesh, donate=(0, 2))
+        pieces.append((st, 1))
+
+    elif shape.kind == "prefill":
+        def layer_f(layer, x):
+            if cfg.family in ("ssm", "hybrid"):
+                out, mc = ssm_mod.mamba2_forward(
+                    layer["mamba"], T.rmsnorm(layer["norm"], x), cfg.ssm_spec,
+                    return_state=True)
+                return x + out, mc
+            a_out, (kk, vv) = attn.attention_block(
+                layer["attn"], T.rmsnorm(layer["ln1"], x), cfg.attn_spec,
+                return_kv=True)
+            h = x + a_out
+            z = T.rmsnorm(layer["ln2"], h)
+            if cfg.family == "moe":
+                from repro.models import moe as moe_mod
+                y = moe_mod.moe_block(layer["moe"], z, cfg.moe_spec)
+            else:
+                y = T.mlp(layer["mlp"], z, cfg.mlp_act)
+            cache = attn.prefill_cache_from_kv(kk, vv, window=cfg.window,
+                                               kv_bits=cfg.precision.kv_bits)
+            return h + y, cache
+        st = _compile_piece(tag + "/layer_prefill", layer_f, (lp, act),
+                            (lp_sh, act_sh), mesh)
+        pieces.append((st, cfg.n_layers))
+        if cfg.family == "hybrid":
+            blk = jax.eval_shape(lambda: T._init_attn_block(cfg, jax.random.PRNGKey(0)))
+            blk_sh = _tree_shardings(mesh, blk, sh.param_spec)
+            def blk_f(bp, x):
+                return T._attn_block_fwd(cfg, bp, x)
+            st = _compile_piece(tag + "/shared_prefill", blk_f, (blk, act),
+                                (blk_sh, act_sh), mesh)
+            pieces.append((st, cfg.n_layers // cfg.shared_attn_every))
+
+        def head_f(table, tokens, h):
+            x = jnp.take(table["table"], tokens, axis=0).astype(dtype)
+            params = {"embed": {"table": table["table"]},
+                      "final_norm": {"g": jnp.zeros((cfg.d_model,), dtype)}}
+            hl = T.rmsnorm(params["final_norm"], h[:, -1:, :])
+            return jnp.sum(x.astype(jnp.float32)), T._readout(params, cfg, hl)
+        tok = _sds((b, s), jnp.int32)
+        st = _compile_piece(tag + "/head_prefill", head_f,
+                            (emb_spec, tok, act),
+                            (emb_sh, _named(mesh, P("data", None)), act_sh), mesh)
+        pieces.append((st, 1))
+
+    else:  # decode
+        x1 = _sds((b, 1, cfg.d_model), dtype)
+        bspec = sh.batch_spec(mesh, b)
+        x1_sh = _named(mesh, P(bspec, None, None))
+        state = jax.eval_shape(lambda: T.init_decode_state(cfg, b, smax=s))
+        c_sh = sh.cache_shardings(mesh, state, b)
+        kvb = cfg.precision.kv_bits
+
+        def one_layer_cache(tree):
+            # drop the stacked layer dim from the SDS skeleton
+            return jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), tree)
+        lc = one_layer_cache(state.layers)
+        lc_sh = sh.cache_shardings(mesh, lc, b)  # rules are ndim-aware
+
+        if cfg.family in ("ssm", "hybrid"):
+            def dec_layer(layer, cache, x):
+                z = T.rmsnorm(layer["norm"], x)
+                y, nc = ssm_mod.mamba2_decode_step(layer["mamba"], z, cache,
+                                                   cfg.ssm_spec)
+                return x + y, nc
+            st = _compile_piece(tag + "/layer_decode", dec_layer, (lp, lc, x1),
+                                (lp_sh, lc_sh, x1_sh), mesh, donate=(1,))
+            pieces.append((st, cfg.n_layers))
+            if cfg.family == "hybrid":
+                blk = jax.eval_shape(lambda: T._init_attn_block(cfg, jax.random.PRNGKey(0)))
+                blk_sh = _tree_shardings(mesh, blk, sh.param_spec)
+                sc = one_layer_cache(state.shared)
+                sc_sh = sh.cache_shardings(mesh, sc, b)
+                def dec_shared(bp, cache, x):
+                    z = T.rmsnorm(bp["ln1"], x)
+                    a_out, nc = attn.attention_decode_step(bp["attn"], z, cache,
+                                                           cfg.attn_spec, kv_bits=kvb)
+                    h = x + a_out
+                    h = h + T.mlp(bp["mlp"], T.rmsnorm(bp["ln2"], h), cfg.mlp_act)
+                    return h, nc
+                st = _compile_piece(tag + "/shared_decode", dec_shared,
+                                    (blk, sc, x1), (blk_sh, sc_sh, x1_sh), mesh,
+                                    donate=(1,))
+                pieces.append((st, cfg.n_layers // cfg.shared_attn_every))
+        else:
+            def dec_layer(layer, cache, x):
+                z = T.rmsnorm(layer["ln1"], x)
+                a_out, nc = attn.attention_decode_step(layer["attn"], z, cache,
+                                                       cfg.attn_spec, kv_bits=kvb)
+                h = x + a_out
+                if cfg.family == "moe":
+                    from repro.models import moe as moe_mod
+                    y = moe_mod.moe_block(layer["moe"], T.rmsnorm(layer["ln2"], h),
+                                          cfg.moe_spec)
+                else:
+                    y = T.mlp(layer["mlp"], T.rmsnorm(layer["ln2"], h), cfg.mlp_act)
+                return h + y, nc
+            st = _compile_piece(tag + "/layer_decode", dec_layer, (lp, lc, x1),
+                                (lp_sh, lc_sh, x1_sh), mesh, donate=(1,))
+            pieces.append((st, cfg.n_layers))
+            if cfg.family == "vlm":
+                blk = jax.eval_shape(
+                    lambda: T._init_attn_block(cfg, jax.random.PRNGKey(0), cross=True))
+                blk_sh = _tree_shardings(mesh, blk, sh.param_spec)
+                ck = _sds((b, cfg.n_vis_tokens, cfg.n_kv_heads, cfg.head_dim), dtype)
+                ck_sh = _named(mesh, P(bspec, None, None, None))
+                def dec_cross(bp, x, ckk, cvv):
+                    return T._cross_decode(cfg, bp, x, ckk, cvv)
+                st = _compile_piece(tag + "/cross_decode", dec_cross,
+                                    (blk, x1, ck, ck), (blk_sh, x1_sh, ck_sh, ck_sh),
+                                    mesh)
+                pieces.append((st, cfg.n_layers // cfg.cross_attn_every))
+
+        def head_dec(table, tokens, h):
+            x = jnp.take(table["table"], tokens, axis=0).astype(dtype)
+            params = {"embed": {"table": table["table"]},
+                      "final_norm": {"g": jnp.zeros((cfg.d_model,), dtype)}}
+            hl = T.rmsnorm(params["final_norm"], h)
+            return jnp.sum(x.astype(jnp.float32)), T._readout(params, cfg, hl)
+        tok1 = _sds((b, 1), jnp.int32)
+        st = _compile_piece(tag + "/head_decode", head_dec, (emb_spec, tok1, x1),
+                            (emb_sh, _named(mesh, P(bspec, None)), x1_sh), mesh)
+        pieces.append((st, 1))
+
+    if verbose:
+        for st, w in pieces:
+            print(f"    piece {st.get('name','?').split('/')[-1]:16s} ×{w:4d}: "
+                  f"flops {st['flops']:.2e} hbm {st['hbm_bytes']:.2e} "
+                  f"coll {st['collective_bytes']:.2e} "
+                  f"{ {k: f'{v:.1e}' for k, v in st['collective_breakdown'].items() if v} }")
+    total = H.add_stats(*[p[0] for p in pieces],
+                        weights=[p[1] for p in pieces])
+    terms = H.roofline_terms(total)
+    mf = model_flops_for(cfg, shape)
+    n_dev = 256
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": "16x16", "accum": accum,
+        **{k: total[k] for k in ("flops", "hbm_bytes", "collective_bytes")},
+        "collective_breakdown": total["collective_breakdown"],
+        **terms,
+        "model_flops": mf,
+        "useful_ratio": mf / (total["flops"] * n_dev) if total["flops"] else 0.0,
+        "dominant": max(terms, key=terms.get).replace("_term_s", ""),
+    }
+    if verbose:
+        print(f"[{arch} × {shape_name}] compute {terms['compute_term_s']*1e3:.2f} ms | "
+              f"memory {terms['memory_term_s']*1e3:.2f} ms | "
+              f"collective {terms['collective_term_s']*1e3:.2f} ms "
+              f"→ {result['dominant']}-bound, useful={result['useful_ratio']:.3f}")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--kv-bits", type=int, default=0)
+    ap.add_argument("--weight-bits", type=int, default=0)
+    ap.add_argument("--weight-storage", default="int", choices=("int", "ship", "fake"))
+    args = ap.parse_args(argv)
+    precision = None
+    if args.kv_bits or args.weight_bits:
+        precision = T.PrecisionPlan(weight_bits=args.weight_bits,
+                                    weight_storage=args.weight_storage,
+                                    kv_bits=args.kv_bits)
+    cells = configs.all_cells() if args.all else [(args.arch, args.shape)]
+    results = []
+    for arch, shape in cells:
+        t0 = time.time()
+        try:
+            r = measure_cell(arch, shape, precision=precision)
+        except Exception as e:  # noqa: BLE001
+            r = {"arch": arch, "shape": shape, "error": f"{type(e).__name__}: {e}"}
+            print(f"[{arch} × {shape}] FAILED: {r['error'][:300]}")
+        r["wall_s"] = time.time() - t0
+        results.append(r)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

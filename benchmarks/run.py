@@ -1,0 +1,61 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``benchmark,key=value,...`` lines plus a final CHECKS summary
+validating the paper's claims. Roofline extraction (which needs the
+512-device placeholder env) lives in benchmarks/bench_roofline.py as its own
+entry point.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+import numpy as np
+
+BENCHES = [
+    ("fig4_linear_convergence", "benchmarks.bench_linear_convergence"),
+    ("fig5_bandwidth_model", "benchmarks.bench_bandwidth_model"),
+    ("fig6_minibatch", "benchmarks.bench_minibatch"),
+    ("fig7a_fig8_optimal_quant", "benchmarks.bench_optimal_quant"),
+    ("fig7b_dl_quant", "benchmarks.bench_dl_quant"),
+    ("fig9_chebyshev_negative", "benchmarks.bench_chebyshev"),
+    ("fig12_refetch", "benchmarks.bench_refetch"),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced datasets/epochs (CI mode)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    all_checks = []
+    for name, module in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        mod = importlib.import_module(module)
+        rows = mod.run(quick=args.quick)
+        dt = time.time() - t0
+        for row in rows:
+            line = ",".join(f"{k}={v}" for k, v in row.items())
+            print(f"{name},{line}")
+            for k, v in row.items():
+                if isinstance(v, (bool, np.bool_)):
+                    all_checks.append((f"{name}/{k}", bool(v)))
+        print(f"{name},_timing,seconds={dt:.1f}")
+    print()
+    n_pass = sum(1 for _, v in all_checks if v)
+    for label, v in all_checks:
+        print(f"CHECK {'PASS' if v else 'FAIL'}: {label}")
+    print(f"\n{n_pass}/{len(all_checks)} paper-claim checks passed")
+    return 0 if n_pass == len(all_checks) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,2 @@
+from . import checkpoint  # noqa: F401
+from .checkpoint import CheckpointManager  # noqa: F401

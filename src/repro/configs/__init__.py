@@ -1,0 +1,79 @@
+"""Architecture registry + assigned input shapes.
+
+Each assigned architecture has its own module defining:
+  CONFIG   — the full published configuration (exercised via dry-run only)
+  REDUCED  — a same-family miniature for CPU smoke tests
+
+``get_config(name)`` / ``get_reduced(name)`` look them up; ``--arch`` flags in
+the launchers resolve through here. ``SHAPES`` are the assigned input shapes;
+``supported_shapes(cfg)`` applies the long_500k sub-quadratic rule
+(DESIGN.md §6): SSM/hybrid/windowed-attention architectures run it, pure
+full-attention architectures skip it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.transformer import ModelConfig, PrecisionPlan  # noqa: F401
+
+ARCH_IDS = (
+    "mixtral-8x7b",
+    "granite-moe-3b-a800m",
+    "gemma-7b",
+    "granite-3-8b",
+    "qwen2.5-14b",
+    "gemma-2b",
+    "zamba2-2.7b",
+    "llama-3.2-vision-11b",
+    "musicgen-medium",
+    "mamba2-780m",
+)
+
+_MODULES = {name: name.replace("-", "_").replace(".", "_") for name in ARCH_IDS}
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    cfg = mod.CONFIG
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def get_reduced(name: str, **overrides) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    cfg = mod.REDUCED
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str           # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def supported_shapes(cfg: ModelConfig) -> list[str]:
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    subquadratic = cfg.family in ("ssm", "hybrid") or cfg.window > 0
+    if subquadratic:
+        names.append("long_500k")
+    return names
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """Every live (arch, shape) cell for the dry-run matrix."""
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in supported_shapes(cfg):
+            cells.append((arch, shape))
+    return cells

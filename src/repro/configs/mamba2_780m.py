@@ -1,0 +1,19 @@
+"""mamba2-780m [arXiv:2405.21060; unverified] — attention-free SSD stack.
+d_inner=3072 (expand 2), 48 SSM heads of dim 64, state 128. long_500k decode
+is O(1)-state. The paper's KV-channel quantization is inapplicable (no KV
+cache); the SSM state is the analogous quantization target (DESIGN.md §5)."""
+from repro.models.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m", family="ssm",
+    n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24, head_dim=64,
+    d_ff=0, vocab_size=50280, ssm_state=128, ssm_head_dim=64,
+    attn_shard="none",
+)
+
+REDUCED = ModelConfig(
+    name="mamba2-780m-reduced", family="ssm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=0, vocab_size=256, ssm_state=16, ssm_head_dim=16,
+    attn_shard="none", q_chunk=16, logit_chunk=16,
+)

@@ -1,0 +1,17 @@
+"""musicgen-medium [arXiv:2306.05284; hf] — decoder-only over EnCodec tokens
+(vocab 2048). Frontend (EnCodec + delay pattern) is a stub: input_specs feeds
+flattened codebook token ids. H=24 → sequence-sharded attention."""
+from repro.models.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium", family="audio",
+    n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24, head_dim=64,
+    d_ff=6144, vocab_size=2048, mlp_act="gelu", attn_shard="seq",
+)
+
+REDUCED = ModelConfig(
+    name="musicgen-medium-reduced", family="audio",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=128, mlp_act="gelu", attn_shard="seq",
+    q_chunk=16, logit_chunk=16,
+)

@@ -1,0 +1,17 @@
+"""qwen2.5-14b [hf:Qwen] — dense GQA with QKV bias. H=40 does not divide the
+16-way model axis → sequence-sharded attention activations."""
+from repro.models.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-14b", family="dense",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+    d_ff=13824, vocab_size=152064, qkv_bias=True, mlp_act="silu",
+    attn_shard="seq",
+)
+
+REDUCED = ModelConfig(
+    name="qwen2.5-14b-reduced", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256, qkv_bias=True, mlp_act="silu", attn_shard="seq",
+    q_chunk=16, logit_chunk=16,
+)

@@ -1,0 +1,11 @@
+"""ZipML core: the paper's contribution as composable JAX modules.
+
+C1 quantize — unbiased stochastic quantization (row/column scaling, int storage)
+C2 double_sampling — unbiased low-precision gradients for linear models
+C3 linear.Precision(mode='e2e') — end-to-end sample+model+gradient quantization
+C4 optimal — variance-optimal level DP / discretized / 2-approx solvers
+C6 chebyshev — polynomial gradient approximation for non-linear losses
+"""
+from . import chebyshev, double_sampling, linear, optimal, quantize  # noqa: F401
+from .linear import Dataset, Precision, TrainResult, make_dataset, train_linear  # noqa: F401
+from .quantize import IntTensor, Quantized, int_quantize, stochastic_quantize  # noqa: F401

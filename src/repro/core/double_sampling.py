@@ -1,0 +1,131 @@
+"""C2/C3 — Double sampling and end-to-end quantized gradients (ZipML §2.2, App. B/E).
+
+For least-squares-family losses the stochastic gradient g = a(aᵀx − b) is
+*quadratic* in the sample a, so E[Q(a)Q(a)ᵀ] = aaᵀ + D_a ≠ aaᵀ — naive sample
+quantization is biased (App. B.1) and SGD diverges when minimizers are large.
+
+Double sampling draws two *independent* quantizations and uses
+
+    g = ½ [ Q₁(a)(Q₂(a)ᵀx − b) + Q₂(a)(Q₁(a)ᵀx − b) ]
+
+(the symmetrized estimator of the paper's footnote 2 — same unbiasedness, lower
+variance by a constant). Independence gives E[g] = a(aᵀx − b) exactly.
+
+The end-to-end variant (App. E) additionally quantizes the model (Q₃, row-scaled)
+and the produced gradient (Q₄, row-scaled):
+
+    g = Q₄( ½[Q₁(a)(Q₂(a)ᵀQ₃(x) − b) + Q₂(a)(Q₁(a)ᵀQ₃(x) − b)] ).
+
+Model quantization commutes with the (linear) gradient → still unbiased (App. C);
+gradient quantization is unbiased by Lemma 6 (App. D).
+
+Everything here is vectorized over a minibatch: ``a`` has shape (B, n).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .quantize import row_scale, stochastic_quantize
+
+
+class DSConfig(NamedTuple):
+    """Bit/level budget of each channel. s = #intervals (levels = s+1).
+
+    ``s_sample``  — Q₁/Q₂ on samples (column-scaled by the data pipeline).
+    ``s_model``   — Q₃ on the model (row-scaled), 0 = full precision.
+    ``s_grad``    — Q₄ on the produced gradient (row-scaled), 0 = full precision.
+    """
+
+    s_sample: int = 15
+    s_model: int = 0
+    s_grad: int = 0
+
+
+def double_sample_pair(a: jax.Array, s: int, key: jax.Array,
+                       scale: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Two independent unbiased quantizations of the same sample batch.
+
+    Note on storage (paper §2.2 'Overhead of Storing Samples'): Q₁ and Q₂ share
+    the same base level ⌊a·s⌋ and differ only in the up/down bit, so shipping
+    both costs log₂(2)=1 extra bit, not 2×. We model that in the bandwidth
+    accounting (benchmarks/bench_bandwidth_model.py); numerically we just draw
+    two independent dequantized tensors.
+    """
+    k1, k2 = jax.random.split(key)
+    q1 = stochastic_quantize(a, s, k1, scale=scale)
+    q2 = stochastic_quantize(a, s, k2, scale=scale)
+    return q1, q2
+
+
+def lsq_gradient_fullprec(x: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """g^(full): mean over batch of a(aᵀx − b)."""
+    resid = a @ x - b  # (B,)
+    return a.T @ resid / a.shape[0]
+
+
+def lsq_gradient_naive_quant(
+    x: jax.Array, a: jax.Array, b: jax.Array, s: int, key: jax.Array,
+    scale: jax.Array | None = None,
+) -> jax.Array:
+    """The *broken* estimator (App. B.1): one quantization used twice. Biased by
+    D_a x; kept as a baseline so tests/benches can demonstrate the divergence."""
+    qa = stochastic_quantize(a, s, key, scale=scale)
+    resid = qa @ x - b
+    return qa.T @ resid / a.shape[0]
+
+
+def lsq_gradient_double_sampling(
+    x: jax.Array, a: jax.Array, b: jax.Array, s: int, key: jax.Array,
+    scale: jax.Array | None = None,
+) -> jax.Array:
+    """Unbiased double-sampling gradient (symmetrized form, §2.2 + footnote 2)."""
+    q1, q2 = double_sample_pair(a, s, key, scale=scale)
+    B = a.shape[0]
+    r2 = q2 @ x - b
+    r1 = q1 @ x - b
+    return (q1.T @ r2 + q2.T @ r1) / (2.0 * B)
+
+
+def lsq_gradient_e2e(
+    x: jax.Array, a: jax.Array, b: jax.Array, cfg: DSConfig, key: jax.Array,
+    sample_scale: jax.Array | None = None,
+) -> jax.Array:
+    """End-to-end quantized gradient (App. E, Eq. 13): samples + model + gradient.
+
+    Update itself stays full precision (Eq. 14), matching the paper.
+    """
+    k_s, k_m, k_g = jax.random.split(key, 3)
+    xq = x
+    if cfg.s_model > 0:
+        xq = stochastic_quantize(x, cfg.s_model, k_m, scale=row_scale(x))
+    g = lsq_gradient_double_sampling(xq, a, b, cfg.s_sample, k_s, scale=sample_scale)
+    if cfg.s_grad > 0:
+        g = stochastic_quantize(g, cfg.s_grad, k_g, scale=row_scale(g))
+    return g
+
+
+def polynomial_estimator(
+    coeffs: jax.Array, a: jax.Array, x: jax.Array, s: int, key: jax.Array,
+    scale: jax.Array | None = None,
+) -> jax.Array:
+    """C6 helper — §4.1: unbiased estimator of P(aᵀx) = Σ m_i (aᵀx)^i using
+    i independent quantizations per monomial: Π_{j≤i} Q_j(a)ᵀx.
+
+    ``coeffs``: (d+1,) monomial coefficients m_0..m_d. Returns (B,) estimates.
+    Variance grows with degree (Lemma 4) — the price of unbiasedness the paper's
+    negative result (§5.4) is about.
+    """
+    d = coeffs.shape[0] - 1
+    keys = jax.random.split(key, max(d, 1))
+    B = a.shape[0]
+    # products[i] = Π_{j<=i} Q_j(a)ᵀx ; build progressively
+    out = jnp.full((B,), coeffs[0], jnp.float32)
+    prod = jnp.ones((B,), jnp.float32)
+    for i in range(1, d + 1):
+        qa = stochastic_quantize(a, s, keys[i - 1], scale=scale)
+        prod = prod * (qa @ x)
+        out = out + coeffs[i] * prod
+    return out

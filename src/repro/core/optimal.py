@@ -1,0 +1,266 @@
+"""C4 — Variance-optimal quantization levels (ZipML §3, App. H/I).
+
+Given an empirical distribution Ω = {x_1..x_N} ⊂ [0,1], choose s+1 quantization
+points (s intervals) minimizing the mean stochastic-rounding variance
+
+    MV(I) = (1/N) Σ_j Σ_{x∈I_j} (b_j - x)(x - a_j).
+
+Three solvers, matching the paper:
+
+* ``optimal_levels_exact``       — O(kN²) DP over data points (Lemma 3: an optimal
+                                   solution has endpoints in Ω ∪ {0,1}).
+* ``optimal_levels_discretized`` — the practical one-pass heuristic: histogram
+                                   the data into M buckets, run the DP on the M
+                                   candidate points (Thm 2: error O(1/Mk)).
+* ``adaquant``                   — App. I greedy merge: 2(1+γ)k+δ intervals with
+                                   err ≤ (1+1/γ)·OPT_k in O(N log N · rounds).
+
+All solvers use prefix sums so interval variance V(j, m) is O(1):
+    err(Ω,[a,b]) = Σ (b-x)(x-a) = (a+b)Σx - ab·cnt - Σx².
+
+These run in NumPy at setup time (the paper computes levels once per feature /
+layer, off the training hot path); ``fit_levels`` is the user-facing entry that
+normalizes arbitrary-range data, solves, and returns levels in original units.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+
+class _Prefix(NamedTuple):
+    xs: np.ndarray       # sorted values
+    c1: np.ndarray       # prefix sum of x    (c1[i] = sum xs[:i])
+    c2: np.ndarray       # prefix sum of x^2
+
+
+def _prefix(xs: np.ndarray) -> _Prefix:
+    xs = np.sort(np.asarray(xs, np.float64))
+    return _Prefix(xs, np.concatenate([[0.0], np.cumsum(xs)]),
+                   np.concatenate([[0.0], np.cumsum(xs * xs)]))
+
+
+def _interval_err(p: _Prefix, i: int, j: int, a: float, b: float) -> float:
+    """Σ_{x in xs[i:j]} (b-x)(x-a) using prefix sums — O(1)."""
+    cnt = j - i
+    if cnt <= 0:
+        return 0.0
+    s1 = p.c1[j] - p.c1[i]
+    s2 = p.c2[j] - p.c2[i]
+    return (a + b) * s1 - a * b * cnt - s2
+
+
+def mean_variance(xs: np.ndarray, levels: np.ndarray) -> float:
+    """MV(I): mean stochastic-quantization variance of xs under ``levels``."""
+    p = _prefix(xs)
+    levels = np.sort(np.asarray(levels, np.float64))
+    total = 0.0
+    idx = np.searchsorted(p.xs, levels)
+    for k in range(len(levels) - 1):
+        total += _interval_err(p, idx[k], idx[k + 1], levels[k], levels[k + 1])
+    return total / max(len(p.xs), 1)
+
+
+def optimal_levels_exact(xs: np.ndarray, s: int) -> np.ndarray:
+    """Exact O(kN²) DP (App. H). Returns s+1 levels in [0,1] ⊇ endpoints ⊂ Ω∪{0,1}.
+
+    T(k, m) = min_j T(k-1, j) + V(j, m) over candidate endpoints d_0=0, d_i=x_i,
+    d_{N+1}=1.
+    """
+    p = _prefix(np.clip(xs, 0.0, 1.0))
+    cand = np.concatenate([[0.0], p.xs, [1.0]])
+    # dedupe while keeping order (equal points make zero-width intervals = fine,
+    # but dedupe keeps the DP small)
+    cand = np.unique(cand)
+    C = len(cand)
+    cidx = np.searchsorted(p.xs, cand)  # data index at/after each candidate
+
+    def V(j: int, m: int) -> float:
+        return _interval_err(p, cidx[j], cidx[m], cand[j], cand[m])
+
+    INF = float("inf")
+    T = np.full((s + 1, C), INF)
+    parent = np.zeros((s + 1, C), np.int64)
+    T[0, 0] = 0.0
+    for k in range(1, s + 1):
+        for m in range(1, C):
+            best, bestj = INF, 0
+            for j in range(0, m):
+                if T[k - 1, j] == INF:
+                    continue
+                val = T[k - 1, j] + V(j, m)
+                if val < best:
+                    best, bestj = val, j
+            T[k, m] = best
+            parent[k, m] = bestj
+    # backtrack from T(s, C-1)
+    levels = [cand[C - 1]]
+    m = C - 1
+    for k in range(s, 0, -1):
+        m = parent[k, m]
+        levels.append(cand[m])
+    levels = np.array(levels[::-1])
+    levels[0], levels[-1] = 0.0, 1.0  # cover the full range
+    return levels
+
+
+def optimal_levels_discretized(xs: np.ndarray, s: int, M: int = 256) -> np.ndarray:
+    """§3.2 heuristic: one pass to histogram into M buckets, DP over M candidates.
+
+    Complexity O((s+1)M² + N); approximation error O(1/Ms) by Thm 2.
+    """
+    xs = np.clip(np.asarray(xs, np.float64), 0.0, 1.0)
+    if len(xs) == 0:
+        return np.linspace(0.0, 1.0, s + 1)
+    # single pass: bucket counts + bucket sums (for interval error via moments)
+    edges = np.linspace(0.0, 1.0, M + 1)
+    which = np.clip((xs * M).astype(np.int64), 0, M - 1)
+    cnt = np.bincount(which, minlength=M).astype(np.float64)
+    s1 = np.bincount(which, weights=xs, minlength=M)
+    s2 = np.bincount(which, weights=xs * xs, minlength=M)
+    C1 = np.concatenate([[0.0], np.cumsum(s1)])
+    C2 = np.concatenate([[0.0], np.cumsum(s2)])
+    CN = np.concatenate([[0.0], np.cumsum(cnt)])
+
+    def V(j: int, m: int) -> float:  # err over buckets [j, m) vs interval [edges[j], edges[m]]
+        a, b = edges[j], edges[m]
+        n = CN[m] - CN[j]
+        return (a + b) * (C1[m] - C1[j]) - a * b * n - (C2[m] - C2[j])
+
+    INF = float("inf")
+    T = np.full((s + 1, M + 1), INF)
+    parent = np.zeros((s + 1, M + 1), np.int64)
+    T[0, 0] = 0.0
+    for k in range(1, s + 1):
+        for m in range(1, M + 1):
+            best, bestj = INF, 0
+            lo = k - 1
+            for j in range(lo, m):
+                tv = T[k - 1, j]
+                if tv == INF:
+                    continue
+                val = tv + V(j, m)
+                if val < best:
+                    best, bestj = val, j
+            T[k, m] = best
+            parent[k, m] = bestj
+    levels = [1.0]
+    m = M
+    for k in range(s, 0, -1):
+        m = parent[k, m]
+        levels.append(edges[m])
+    return np.array(levels[::-1])
+
+
+def adaquant(xs: np.ndarray, k: int, gamma: float = 1.0, delta: int = 2) -> np.ndarray:
+    """App. I greedy merging — ADAQUANT(Ω, k, γ, δ).
+
+    Repeatedly pair up consecutive intervals; unmerge the (1+γ)k most expensive.
+    Stops at ≤ 2(1+γ)k + δ intervals with err ≤ (1+1/γ)·OPT_k (Thm 9). Returns
+    the endpoint array; feed as candidates into the DP for a strict-k solution.
+    """
+    p = _prefix(np.clip(xs, 0.0, 1.0))
+    pts = np.unique(np.concatenate([[0.0], p.xs, [1.0]]))
+    target = int(2 * (1 + gamma) * k + delta)
+    while len(pts) - 1 > target:
+        # pair up consecutive intervals -> candidate merged intervals
+        ends = pts
+        merged_err = []
+        merged = []  # (start_idx_in_pts, end_idx_in_pts)
+        i = 0
+        while i + 2 < len(ends):
+            a, b = ends[i], ends[i + 2]
+            ia, ib = np.searchsorted(p.xs, a), np.searchsorted(p.xs, b)
+            merged_err.append(_interval_err(p, ia, ib, a, b))
+            merged.append((i, i + 2))
+            i += 2
+        if not merged:
+            break
+        merged_err = np.asarray(merged_err)
+        keep_split = set()
+        n_split = min(int((1 + gamma) * k), len(merged))
+        for idx in np.argsort(merged_err)[::-1][:n_split]:
+            keep_split.add(idx)
+        new_pts = [ends[0]]
+        for mi, (i0, i1) in enumerate(merged):
+            if mi in keep_split:
+                new_pts.append(ends[i0 + 1])
+            new_pts.append(ends[i1])
+        if len(ends) % 2 == 0:  # odd interval count leaves a trailing interval
+            new_pts.append(ends[-1])
+        pts = np.unique(np.asarray(new_pts))
+    return pts
+
+
+def optimal_levels_2approx(xs: np.ndarray, s: int, gamma: float = 1.0) -> np.ndarray:
+    """ADAQUANT candidates + DP restricted to them: 2-approx in O(N log N + s·c²)."""
+    cand = adaquant(xs, s, gamma=gamma)
+    p = _prefix(np.clip(xs, 0.0, 1.0))
+    cidx = np.searchsorted(p.xs, cand)
+    C = len(cand)
+
+    def V(j: int, m: int) -> float:
+        return _interval_err(p, cidx[j], cidx[m], cand[j], cand[m])
+
+    INF = float("inf")
+    T = np.full((s + 1, C), INF)
+    parent = np.zeros((s + 1, C), np.int64)
+    T[0, 0] = 0.0
+    for k in range(1, s + 1):
+        for m in range(1, C):
+            best, bestj = INF, 0
+            for j in range(0, m):
+                if T[k - 1, j] == INF:
+                    continue
+                val = T[k - 1, j] + V(j, m)
+                if val < best:
+                    best, bestj = val, j
+            T[k, m] = best
+            parent[k, m] = bestj
+    levels = [cand[-1]]
+    m = C - 1
+    for k in range(s, 0, -1):
+        m = parent[k, m]
+        levels.append(cand[m])
+    levels = np.array(levels[::-1])
+    levels[0], levels[-1] = 0.0, 1.0
+    return levels
+
+
+def fit_levels(
+    data, s: int, method: str = "discretized", M: int = 256, symmetric: bool = False
+) -> np.ndarray:
+    """User entry: fit s-interval optimal levels to arbitrary-range data.
+
+    Returns levels in *original* units (affine unmap of the [0,1] solution).
+    ``symmetric=True`` mirrors the solution around 0 (for weight distributions;
+    this is what the Optimal5 deep-learning quantizer uses, §3.3).
+    """
+    x = np.asarray(data, np.float64).ravel()
+    x = x[np.isfinite(x)]
+    if x.size == 0:
+        return np.linspace(-1.0 if symmetric else 0.0, 1.0, s + 1)
+    if symmetric:
+        hi = np.max(np.abs(x)) or 1.0
+        z = np.abs(x) / hi  # fold; fit half the levels on |x|
+        half = max(s // 2, 1)
+        solver = {"exact": optimal_levels_exact,
+                  "discretized": lambda d, k: optimal_levels_discretized(d, k, M),
+                  "2approx": optimal_levels_2approx}[method]
+        lv = solver(z, half)
+        pos = lv * hi
+        return np.unique(np.concatenate([-pos[::-1], pos]))
+    lo, hi = float(np.min(x)), float(np.max(x))
+    span = (hi - lo) or 1.0
+    z = (x - lo) / span
+    solver = {"exact": optimal_levels_exact,
+              "discretized": lambda d, k: optimal_levels_discretized(d, k, M),
+              "2approx": optimal_levels_2approx}[method]
+    lv = solver(z, s)
+    return lv * span + lo
+
+
+def uniform_levels(s: int, lo: float = 0.0, hi: float = 1.0) -> np.ndarray:
+    """The baseline the paper beats: s+1 uniformly spaced levels."""
+    return np.linspace(lo, hi, s + 1)

@@ -1,0 +1,241 @@
+"""C1 — Unbiased stochastic quantization (ZipML §2.1, App. A.3).
+
+Implements the paper's Q(v, s) with both scaling families:
+
+* **row scaling**  — M_i(v) = ||v||_2 (or max|v|), one scalar per vector; used for
+  gradients and models whose dynamic range moves during training.
+* **column scaling** — M_i(v) = max over the dataset of |v_i| per coordinate;
+  shared across all samples, computed once (paper App. A.3 "Column Scaling").
+
+The quantizer maps v/M into [-1, 1], snaps each coordinate stochastically to one
+of the two nearest of ``s+1`` uniformly spaced levels (l = 0..s), such that
+E[Q(v, s)] = v exactly (Lemma 6, unbiasedness).
+
+Also provides:
+* ``quantize_to_levels`` — stochastic quantization onto an *arbitrary* sorted
+  level set (used with the variance-optimal levels of core/optimal.py, C4).
+* ``dequantize`` / packed integer codes — the storage format used by the data
+  pipeline, the QAT path, and the Pallas kernels.
+* deterministic nearest-rounding (the paper's §5.4 "straw man").
+
+Everything is pure jnp and jit/vmap/pjit friendly; randomness always enters via
+an explicit PRNG key (never global state) so kernels and hosts stay reproducible.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Quantized(NamedTuple):
+    """Storage format: integer codes + the scale(s) + the level count.
+
+    ``codes`` are int8 (s <= 255) or int32 level indices in [0, s].
+    ``scale`` broadcasts against the decoded array: scalar for row scaling,
+    per-column vector for column scaling.
+    ``signed`` quantizers map codes to [-1, 1]; unsigned to [0, 1].
+    """
+
+    codes: jax.Array
+    scale: jax.Array
+    s: int
+    signed: bool = True
+
+    @property
+    def nbits(self) -> int:
+        return int(jnp.ceil(jnp.log2(self.s + 1))) if self.s > 0 else 1
+
+    def dequantize(self) -> jax.Array:
+        return dequantize(self)
+
+
+def _code_dtype(s: int):
+    return jnp.int8 if s <= 127 else jnp.int32
+
+
+def row_scale(v: jax.Array, norm: str = "linf") -> jax.Array:
+    """M(v) per the paper: a scalar bound with |v|/M <= 1.
+
+    ``linf`` (max|v|) gives tighter levels than the paper's WLOG ||v||_2 and is
+    what the FPGA implementation uses in practice; both are supported.
+    """
+    if norm == "l2":
+        m = jnp.linalg.norm(v)
+    elif norm == "linf":
+        m = jnp.max(jnp.abs(v))
+    else:
+        raise ValueError(f"unknown norm {norm!r}")
+    return jnp.where(m == 0, 1.0, m).astype(jnp.float32)
+
+
+def column_scale(data: jax.Array) -> jax.Array:
+    """Per-feature M_i = max(|min_i|, |max_i|) over a (K, n) dataset (App. A.3)."""
+    m = jnp.max(jnp.abs(data), axis=0)
+    return jnp.where(m == 0, 1.0, m).astype(jnp.float32)
+
+
+def quantize(
+    v: jax.Array,
+    s: int,
+    key: jax.Array,
+    scale: jax.Array | None = None,
+    signed: bool = True,
+) -> Quantized:
+    """Stochastic uniform quantization Q(v, s) — unbiased (Lemma 6).
+
+    Faithful to App. A.3 Eq. (10): Q_i = M_i · sgn(v_i) · μ_i where μ_i rounds
+    |v_i|/M_i ∈ [0,1] stochastically onto the grid {0, 1/s, …, 1}. Signed codes
+    are sign·level ∈ [-s, s] (s=1 gives the ternary {-M, 0, M} of QSGD).
+    """
+    v = jnp.asarray(v)
+    if scale is None:
+        scale = row_scale(v)
+    x = (v / scale).astype(jnp.float32)
+    mag = jnp.clip(jnp.abs(x) if signed else x, 0.0, 1.0)
+    t = mag * s  # in [0, s]
+    lo = jnp.clip(jnp.floor(t), 0, s - 1)  # lower level index
+    p_up = t - lo  # P(round up), exactly unbiased
+    u = jax.random.uniform(key, v.shape, dtype=jnp.float32)
+    codes = lo + (u < p_up).astype(jnp.float32)
+    if signed:
+        codes = codes * jnp.sign(x)
+    return Quantized(codes.astype(_code_dtype(s)), jnp.asarray(scale), s, signed)
+
+
+def quantize_nearest(
+    v: jax.Array, s: int, scale: jax.Array | None = None, signed: bool = True
+) -> Quantized:
+    """Deterministic nearest rounding — the §5.4 straw man (biased)."""
+    v = jnp.asarray(v)
+    if scale is None:
+        scale = row_scale(v)
+    x = (v / scale).astype(jnp.float32)
+    mag = jnp.clip(jnp.abs(x) if signed else x, 0.0, 1.0)
+    codes = jnp.round(mag * s)
+    if signed:
+        codes = codes * jnp.sign(x)
+    return Quantized(codes.astype(_code_dtype(s)), jnp.asarray(scale), s, signed)
+
+
+def dequantize(q: Quantized) -> jax.Array:
+    return q.codes.astype(jnp.float32) / q.s * q.scale
+
+
+def stochastic_quantize(
+    v: jax.Array,
+    s: int,
+    key: jax.Array,
+    scale: jax.Array | None = None,
+    signed: bool = True,
+) -> jax.Array:
+    """quantize → dequantize in one step: returns the low-precision *values*.
+
+    This is the form used in the double-sampling gradient math, where we care
+    about the quantized real values, not the storage codes.
+    """
+    return dequantize(quantize(v, s, key, scale=scale, signed=signed))
+
+
+# ---------------------------------------------------------------------------
+# Arbitrary (variance-optimal) level sets — C4 consumer.
+# ---------------------------------------------------------------------------
+
+def quantize_to_levels(
+    v: jax.Array, levels: jax.Array, key: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Stochastically quantize v onto a sorted 1-D level set (unbiased).
+
+    For v in [levels[j], levels[j+1]], rounds up with p = (v-lo)/(hi-lo), so
+    E[Q(v)] = v for v inside the level range (values outside are clamped —
+    callers scale into range first). Returns (codes, values).
+
+    With ``key=None`` does deterministic nearest-level rounding.
+    """
+    levels = jnp.asarray(levels, jnp.float32)
+    v32 = jnp.asarray(v, jnp.float32)
+    k = levels.shape[0]
+    vc = jnp.clip(v32, levels[0], levels[-1])
+    # searchsorted: index of the interval's upper endpoint
+    hi_idx = jnp.clip(jnp.searchsorted(levels, vc, side="right"), 1, k - 1)
+    lo_idx = hi_idx - 1
+    lo = levels[lo_idx]
+    hi = levels[hi_idx]
+    width = jnp.maximum(hi - lo, 1e-30)
+    p_up = (vc - lo) / width
+    if key is None:
+        up = p_up >= 0.5
+    else:
+        up = jax.random.uniform(key, v32.shape, dtype=jnp.float32) < p_up
+    codes = jnp.where(up, hi_idx, lo_idx)
+    values = jnp.where(up, hi, lo)
+    return codes.astype(_code_dtype(k - 1)), values
+
+
+# ---------------------------------------------------------------------------
+# Convenience: per-channel int8 affine storage used by qmm / kv-cache paths.
+# ---------------------------------------------------------------------------
+
+class IntTensor(NamedTuple):
+    """Symmetric per-channel int storage: value ≈ codes * scale.
+
+    ``codes``: int8 in [-2^(b-1)+1, 2^(b-1)-1]; ``scale``: fp32, broadcastable
+    along ``axis``. This is the on-HBM format consumed by kernels/qmm.py.
+    """
+
+    codes: jax.Array
+    scale: jax.Array
+    bits: int
+
+    def dequantize(self) -> jax.Array:
+        return self.codes.astype(jnp.float32) * self.scale
+
+
+def int_quantize(
+    v: jax.Array, bits: int, axis: int | tuple | None, key: jax.Array | None = None
+) -> IntTensor:
+    """Symmetric per-channel quantization to ``bits`` (stochastic if key given).
+
+    ``axis``: reduction axes for the absmax scale (None = per-tensor). The scale
+    keeps those axes with size 1 so dequantize broadcasts.
+    """
+    v32 = jnp.asarray(v, jnp.float32)
+    qmax = float(2 ** (bits - 1) - 1)
+    absmax = jnp.max(jnp.abs(v32), axis=axis, keepdims=axis is not None)
+    scale = jnp.where(absmax == 0, 1.0, absmax / qmax).astype(jnp.float32)
+    t = v32 / scale
+    if key is None:
+        codes = jnp.round(t)
+    else:
+        lo = jnp.floor(t)
+        p_up = t - lo
+        u = jax.random.uniform(key, v32.shape, dtype=jnp.float32)
+        codes = lo + (u < p_up).astype(jnp.float32)
+    codes = jnp.clip(codes, -qmax, qmax).astype(jnp.int8)
+    return IntTensor(codes, scale, bits)
+
+
+def tv_variance(v: jax.Array, s: int, scale: jax.Array | None = None) -> jax.Array:
+    """TV(v) = E||Q(v) - v||² in closed form (no sampling needed).
+
+    For level width w = scale·(hi-lo): Var = (hi-v)(v-lo) per coordinate — the
+    same err(x, I) the optimal-levels DP minimizes. Used by tests to check the
+    Lemma 2 bound TV_s(v) <= min(n/s², √n/s)·||v||².
+    """
+    v32 = jnp.asarray(v, jnp.float32)
+    if scale is None:
+        scale = row_scale(v32)
+    x = jnp.clip(jnp.abs(v32 / scale), 0.0, 1.0)
+    t = x * s
+    lo = jnp.clip(jnp.floor(t), 0, s - 1)
+    frac = t - lo
+    # variance in code units, scaled back: one interval of |v|/M has width scale/s
+    w = scale / s
+    return jnp.sum(frac * (1.0 - frac) * (w**2))
+
+
+@functools.partial(jax.jit, static_argnames=("s", "signed"))
+def _jit_roundtrip(v, key, s, signed):  # pragma: no cover - used in benches
+    return stochastic_quantize(v, s, key, signed=signed)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the ZipML hot spots + the SSD intra-chunk block.
+
+stoch_quant — C1 stochastic rounding quantizer (int8 codes + row scales)
+qmm         — fused dequantize(int8 W)·matmul with fp32 MXU accumulation
+ssd         — Mamba2 SSD intra-chunk dual form
+ops         — jit'd padded wrappers; ref — pure-jnp oracles
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,78 @@
+"""jit'd public wrappers around the Pallas kernels (padding, reshaping,
+interpret-mode selection). ``INTERPRET`` flips to False on real TPU backends.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import qmm as qmm_mod
+from . import ssd as ssd_mod
+from . import stoch_quant as sq_mod
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def quantize_rows(x: jax.Array, s: int, key: jax.Array):
+    """Row-scaled stochastic quantization via the Pallas pipeline.
+
+    x: (R, C) → (codes int8 in [-s, s], scale (R, 1) f32). Unbiased:
+    E[codes/s·scale] = x.
+    """
+    assert x.ndim == 2
+    scale = sq_mod.row_absmax(x, interpret=INTERPRET)
+    rand = jax.random.bits(key, x.shape, jnp.uint32)
+    codes = sq_mod.stoch_quant(x, rand, scale, s=s, interpret=INTERPRET)
+    return codes, scale
+
+
+def dequantize_rows(codes: jax.Array, scale: jax.Array, s: int) -> jax.Array:
+    return codes.astype(jnp.float32) / s * scale
+
+
+def quantized_matmul(x: jax.Array, codes: jax.Array, scale: jax.Array) -> jax.Array:
+    """General y = x · dequant(codes, scale); pads all dims to 128 multiples
+    for MXU alignment, slices the result back."""
+    m0, k0 = x.shape
+    _, n0 = codes.shape
+    x, _ = _pad_to(x, 128, 0)
+    x, _ = _pad_to(x, 128, 1)
+    codes, _ = _pad_to(codes, 128, 0)
+    codes, _ = _pad_to(codes, 128, 1)
+    scale, _ = _pad_to(scale, 128, 1)
+    y = qmm_mod.qmm(x, codes, scale, interpret=INTERPRET)
+    return y[:m0, :n0]
+
+
+def ssd_chunked_kernel(xh, dt, a_log, b_mat, c_mat, chunk: int = 256):
+    """Drop-in for models/ssm.ssd_chunked using the Pallas intra-chunk kernel.
+
+    xh: (B, S, H, P); dt: (B, S, H); b/c: (B, S, G·N) with G=1.
+    Returns (y (B, S, H, P), state (B, H, P, N)).
+    """
+    b, s, h, p = xh.shape
+    L = min(chunk, s)
+    if s % L:
+        L = s
+    nc = s // L
+    a = -jnp.exp(a_log)
+    logdec = (dt * a[None, None, :]).astype(jnp.float32)
+
+    def chunked(t):
+        return t.reshape(b, nc, L, *t.shape[2:])
+
+    y, state = ssd_mod.ssd_chunk_scan(
+        chunked(xh), chunked(dt), chunked(logdec),
+        chunked(b_mat), chunked(c_mat), interpret=INTERPRET)
+    return y.reshape(b, s, h, p), state

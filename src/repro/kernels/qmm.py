@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: fused dequantize-matmul (int8 weights × bf16 acts).
+
+The ZipML weight channel stores W as int8 codes + per-output-channel scales
+(precision/qat.py). This kernel streams the int8 blocks HBM→VMEM (half the
+bytes of bf16 — the memory-roofline win), dequantizes in VMEM, and feeds the
+MXU with fp32 accumulation:
+
+    y[M, N] = x[M, K] · (codes[K, N] ⊙ scale[1, N])
+
+Blocking: (bm, bk)×(bk, bn) with bm=bn=256, bk=512 → VMEM working set
+bm·bk·2 + bk·bn·1 + bm·bn·4 ≈ 0.6 MiB; K is the sequential grid axis so the
+fp32 accumulator tile lives across the K loop. All dims padded to multiples
+of 128 by the caller (ops.py) — MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qmm_kernel(x_ref, w_ref, scale_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    w = (w_ref[...].astype(jnp.float32)
+         * scale_ref[...].astype(jnp.float32)).astype(x.dtype)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "bn", "interpret"))
+def qmm(x: jax.Array, codes: jax.Array, scale: jax.Array, *,
+        bm: int = 256, bk: int = 512, bn: int = 256,
+        interpret: bool = True) -> jax.Array:
+    """x: (M, K) bf16/f32 · int8 codes (K, N) with scale (1, N) → (M, N) f32.
+
+    Dims must be multiples of the block sizes' gcd with 128 — use
+    ops.quantized_matmul for the padded general entry point.
+    """
+    m, k = x.shape
+    k2, n = codes.shape
+    assert k == k2, (x.shape, codes.shape)
+    bm = min(bm, m)
+    bk = min(bk, k)
+    bn = min(bn, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+    return pl.pallas_call(
+        _qmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, codes, scale)

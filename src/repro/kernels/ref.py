@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stoch_quant_ref(x, rand, scale, *, s: int):
+    """Bit-exact reference for kernels/stoch_quant.py (same uint32→[0,1) map)."""
+    x32 = x.astype(jnp.float32)
+    uf = (rand >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+    mag = jnp.abs(x32) / jnp.maximum(scale.astype(jnp.float32), 1e-30)
+    t = jnp.clip(mag, 0.0, 1.0) * s
+    lo = jnp.clip(jnp.floor(t), 0, s - 1)
+    codes = lo + (uf < (t - lo)).astype(jnp.float32)
+    return (codes * jnp.sign(x32)).astype(jnp.int8)
+
+
+def row_absmax_ref(x):
+    return jnp.max(jnp.abs(x.astype(jnp.float32)), axis=1, keepdims=True)
+
+
+def qmm_ref(x, codes, scale):
+    w = codes.astype(jnp.float32) * scale.astype(jnp.float32)
+    return jnp.dot(x.astype(jnp.float32), w)
+
+
+def ssd_chunk_scan_ref(xh, dt, logdec, bmat, cmat):
+    """Reference chunked SSD (mirrors models/ssm.ssd_chunked math).
+
+    xh: (B, NC, L, H, P); dt/logdec: (B, NC, L, H); b/c: (B, NC, L, N).
+    """
+    b, nc, L, h, p = xh.shape
+    n = bmat.shape[-1]
+
+    def per_batch(x_b, dt_b, ld_b, bm_b, cm_b):
+        def chunk(state, inp):
+            xc, dtc, ldc, bc, cc = inp
+            cum = jnp.cumsum(ldc, axis=0)
+            xw = xc.astype(jnp.float32) * dtc[:, :, None]
+            diff = cum[:, None, :] - cum[None, :, :]
+            mask = jnp.tril(jnp.ones((L, L), bool))
+            dec = jnp.exp(jnp.where(mask[:, :, None], diff, -jnp.inf))
+            scores = cm_f = jnp.dot(cc, bc.T)
+            att = scores[:, :, None] * dec
+            y_intra = jnp.einsum("lmh,mhp->lhp", att, xw)
+            y_inter = jnp.einsum("ln,hpn->lhp", cc, state) * jnp.exp(cum)[:, :, None]
+            tail = jnp.exp(cum[-1:, :] - cum)
+            bx = jnp.einsum("lhp,ln->hpn", xw * tail[:, :, None], bc)
+            state = state * jnp.exp(cum[-1])[:, None, None] + bx
+            return state, (y_intra + y_inter).astype(xh.dtype)
+
+        init = jnp.zeros((h, p, n), jnp.float32)
+        state, ys = jax.lax.scan(
+            chunk, init,
+            (x_b, dt_b.astype(jnp.float32), ld_b.astype(jnp.float32),
+             bm_b.astype(jnp.float32), cm_b.astype(jnp.float32)))
+        return ys, state
+
+    ys, states = jax.vmap(per_batch)(xh, dt, logdec, bmat, cmat)
+    return ys, states

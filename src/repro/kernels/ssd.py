@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk block (the hot spot of the
+state-space dual form, models/ssm.py::ssd_chunked).
+
+One grid step processes one (batch, chunk) pair entirely in VMEM:
+
+    cum      = cumsum(logdec)                  (L, H)
+    dec(l,m) = exp(cum_l − cum_m)  masked causal
+    scores   = C · Bᵀ                          (L, L)      ← MXU
+    y_intra  = (scores ⊙ dec) · (dt ⊙ x)       (L, H, P)   ← MXU
+    y_inter  = (C · state) ⊙ exp(cum)
+    state'   = state ⊙ exp(cum_L) + (dt⊙x⊙tail)ᵀ · B
+
+The chunk dim L (=256) and head dims are MXU-aligned; VMEM working set for
+L=256, H=48, P=64, N=128 ≈ 6 MiB. The inter-chunk state is carried by the
+sequential chunk grid axis (grid dim 1), matching the lax.scan reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, ld_ref, b_ref, c_ref, y_ref, state_ref):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)     # (L, H, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)   # (L, H)
+    ld = ld_ref[0, 0].astype(jnp.float32)   # (L, H)
+    bmat = b_ref[0, 0].astype(jnp.float32)  # (L, N)
+    cmat = c_ref[0, 0].astype(jnp.float32)  # (L, N)
+    state = state_ref[0]                    # (H, P, N) f32
+
+    L = x.shape[0]
+    cum = jnp.cumsum(ld, axis=0)            # (L, H)
+    xw = x * dt[:, :, None]                 # (L, H, P)
+    diff = cum[:, None, :] - cum[None, :, :]            # (L, L, H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    dec = jnp.exp(jnp.where(mask[:, :, None], diff, -jnp.inf))
+    scores = jnp.dot(cmat, bmat.T, preferred_element_type=jnp.float32)  # (L, L)
+    att = scores[:, :, None] * dec                       # (L, L, H)
+    y_intra = jnp.einsum("lmh,mhp->lhp", att, xw)
+    y_inter = jnp.einsum("ln,hpn->lhp", cmat, state) * jnp.exp(cum)[:, :, None]
+    tail = jnp.exp(cum[-1:, :] - cum)                    # (L, H)
+    bx = jnp.einsum("lhp,ln->hpn", xw * tail[:, :, None], bmat)
+    state_ref[0] = state * jnp.exp(cum[-1])[:, None, None] + bx
+    y_ref[0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_scan(xh, dt, logdec, bmat, cmat, *, interpret: bool = True):
+    """Chunked SSD over pre-chunked inputs.
+
+    xh: (B, NC, L, H, P); dt/logdec: (B, NC, L, H); b/c: (B, NC, L, N).
+    Returns y (B, NC, L, H, P) and final state (B, H, P, N). Grid = (B, NC)
+    with NC sequential (carries the state block).
+    """
+    b, nc, L, h, p = xh.shape
+    n = bmat.shape[-1]
+    grid = (b, nc)
+    y, state = pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, L, h, p), lambda i, c: (i, c, 0, 0, 0)),
+            pl.BlockSpec((1, 1, L, h), lambda i, c: (i, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, h), lambda i, c: (i, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, n), lambda i, c: (i, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, n), lambda i, c: (i, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, h, p), lambda i, c: (i, c, 0, 0, 0)),
+            pl.BlockSpec((1, h, p, n), lambda i, c: (i, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, L, h, p), xh.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xh, dt, logdec, bmat, cmat)
+    return y, state

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: stochastic quantization (C1) — the ZipML hot spot.
+
+The FPGA pipeline quantizes samples in-line with the data stream; the TPU
+analogue streams bf16/f32 blocks HBM→VMEM, rounds stochastically against
+uniform random bits, and writes int8 codes (+ per-row scales computed in a
+first reduction kernel). Rounding consumes explicit uint32 random bits passed
+as an operand — `pltpu.prng_random_bits` exists on real TPUs, but an explicit
+operand keeps the kernel bit-exact under `interpret=True` on CPU (how we
+validate against ref.py).
+
+Tiling: rows × 128-lane blocks; both MXU/VPU-aligned and big enough to keep
+the VPU busy while the next block streams in. For a (R, C) input with block
+(br, 128·k): VMEM footprint = br·128k·(4+4+1) bytes ≤ ~2 MiB per default.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK = (256, 512)
+
+
+def _sq_kernel(x_ref, rand_ref, scale_ref, codes_ref, *, s: int):
+    """One (br, bc) block: codes = sign ⊙ stochastic_round(|x|/scale · s)."""
+    x = x_ref[...].astype(jnp.float32)
+    scale = scale_ref[...].astype(jnp.float32)          # (br, 1) row scales
+    u = rand_ref[...]                                   # uint32
+    # uniform in [0,1): top 24 bits / 2^24 (exact in f32)
+    uf = (u >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+    mag = jnp.abs(x) / jnp.maximum(scale, 1e-30)
+    t = jnp.clip(mag, 0.0, 1.0) * s
+    lo = jnp.clip(jnp.floor(t), 0, s - 1)
+    codes = lo + (uf < (t - lo)).astype(jnp.float32)
+    codes = codes * jnp.sign(x)
+    codes_ref[...] = codes.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "block", "interpret"))
+def stoch_quant(x: jax.Array, rand: jax.Array, scale: jax.Array, *, s: int,
+                block=DEFAULT_BLOCK, interpret: bool = True):
+    """x: (R, C) f32/bf16; rand: (R, C) uint32; scale: (R, 1) f32 row scales.
+    Returns int8 codes in [-s, s]. (interpret=True on CPU; False on real TPU.)
+    """
+    r, c = x.shape
+    br = min(block[0], r)
+    bc = min(block[1], c)
+    grid = (pl.cdiv(r, br), pl.cdiv(c, bc))
+    return pl.pallas_call(
+        functools.partial(_sq_kernel, s=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.int8),
+        interpret=interpret,
+    )(x, rand, scale)
+
+
+def _absmax_kernel(x_ref, out_ref):
+    """Per-(row-block, col-block) absmax; the host wrapper reduces col blocks.
+    (Cross-step accumulation on a revisited out block is legal on TPU but not
+    honored by the CPU interpreter — per-block outputs keep both paths exact.)"""
+    out_ref[...] = jnp.max(jnp.abs(x_ref[...].astype(jnp.float32)),
+                           axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def row_absmax(x: jax.Array, *, block=DEFAULT_BLOCK, interpret: bool = True):
+    """(R, C) → (R, 1) f32 row scales M(v) = max|v| (the paper's linf row
+    scaling; grid dim 1 iterates sequentially so the max accumulates)."""
+    r, c = x.shape
+    br = min(block[0], r)
+    bc = min(block[1], c)
+    # pad columns: out-of-bounds reads are undefined (on TPU and in interpret
+    # mode) and would fold garbage into the max
+    if c % bc:
+        x = jnp.pad(x, ((0, 0), (0, bc - c % bc)))
+        c = x.shape[1]
+    ncb = pl.cdiv(c, bc)
+    per_block = pl.pallas_call(
+        _absmax_kernel,
+        grid=(pl.cdiv(r, br), ncb),
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, ncb), jnp.float32),
+        interpret=interpret,
+    )(x)
+    return jnp.max(per_block, axis=1, keepdims=True)

@@ -1,0 +1,3 @@
+"""Launchers: mesh construction, sharding rules, step builders, dry-run,
+train/serve drivers. NOTE: dryrun sets XLA_FLAGS device_count=512 at import —
+never import repro.launch.dryrun from tests or benches."""

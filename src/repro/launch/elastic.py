@@ -1,0 +1,126 @@
+"""Elastic fleet controller: slice assignment, failure domains, restart policy.
+
+The single-host pieces (checkpoint/restore-with-resharding, deterministic
+data cursors, straggler monitor) live in ckpt/ and train.py; this module is
+the 1000-node control-plane logic that composes them. It is deliberately
+jax-free and unit-testable: given a fleet state (host heartbeats, failure
+events), it decides the mesh to run, which checkpoint to restore, and each
+surviving host's data-shard assignment.
+
+Policy (DESIGN.md §3.2):
+* The mesh is chosen as the largest (pods, 16, 16) grid coverable by healthy
+  hosts, shrinking pod-by-pod (a v5e pod is the failure domain — losing any
+  host in a pod takes its ICI torus out).
+* On shrink/grow, training resumes from the last committed checkpoint; the
+  data pipeline cursor is rewound to the checkpoint step, and host shard ids
+  are recomputed from rank order — no data is skipped or repeated beyond the
+  rollback window.
+* Flapping protection: a pod must stay healthy `rejoin_patience` heartbeats
+  before it is re-admitted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable
+
+
+HOSTS_PER_POD = 64          # v5e: 64 hosts × 4 chips = 256 chips/pod
+
+
+@dataclasses.dataclass
+class HostState:
+    host_id: int
+    pod_id: int
+    last_heartbeat: float
+    healthy: bool = True
+
+
+@dataclasses.dataclass
+class FleetDecision:
+    n_pods: int
+    mesh_shape: tuple
+    restore_step: int | None
+    shard_assignment: dict          # host_id -> data shard index
+    evicted_pods: list
+    reason: str
+
+
+class ElasticController:
+    def __init__(self, n_pods: int, *, heartbeat_timeout: float = 30.0,
+                 rejoin_patience: int = 3):
+        self.n_pods = n_pods
+        self.heartbeat_timeout = heartbeat_timeout
+        self.rejoin_patience = rejoin_patience
+        self.hosts: dict[int, HostState] = {}
+        self._pod_health_streak: dict[int, int] = {p: rejoin_patience
+                                                   for p in range(n_pods)}
+        self._admitted: set[int] = set(range(n_pods))
+
+    # ---------------------------------------------------------------- events
+    def heartbeat(self, host_id: int, pod_id: int, now: float | None = None):
+        now = time.time() if now is None else now
+        self.hosts[host_id] = HostState(host_id, pod_id, now, True)
+
+    def report_failure(self, host_id: int):
+        if host_id in self.hosts:
+            self.hosts[host_id].healthy = False
+
+    # -------------------------------------------------------------- decision
+    def _pod_healthy(self, pod_id: int, now: float) -> bool:
+        members = [h for h in self.hosts.values() if h.pod_id == pod_id]
+        if len(members) < HOSTS_PER_POD:
+            return False
+        return all(h.healthy and (now - h.last_heartbeat) < self.heartbeat_timeout
+                   for h in members)
+
+    def decide(self, latest_checkpoint_step: int | None,
+               now: float | None = None) -> FleetDecision:
+        """Compute the mesh + assignments for the next training epoch-segment."""
+        now = time.time() if now is None else now
+        evicted = []
+        for pod in range(self.n_pods):
+            if self._pod_healthy(pod, now):
+                self._pod_health_streak[pod] += 1
+            else:
+                self._pod_health_streak[pod] = 0
+                if pod in self._admitted:
+                    evicted.append(pod)
+            # admit only after a sustained healthy streak (flap protection)
+            if self._pod_health_streak[pod] >= self.rejoin_patience:
+                self._admitted.add(pod)
+            else:
+                self._admitted.discard(pod)
+        n_live = max(len(self._admitted), 0)
+        if n_live == 0:
+            return FleetDecision(0, (), latest_checkpoint_step, {}, evicted,
+                                 "no healthy pods — halt and page")
+        mesh_shape = (n_live, 16, 16) if n_live > 1 else (16, 16)
+        # rank-ordered shard assignment over surviving hosts
+        live_hosts = sorted(
+            h.host_id for h in self.hosts.values()
+            if h.pod_id in self._admitted and h.healthy)
+        assignment = {hid: i for i, hid in enumerate(live_hosts)}
+        reason = ("steady state" if not evicted else
+                  f"pods {evicted} evicted → restore step "
+                  f"{latest_checkpoint_step} and reshard")
+        return FleetDecision(
+            n_pods=n_live, mesh_shape=mesh_shape,
+            restore_step=latest_checkpoint_step if evicted else None,
+            shard_assignment=assignment, evicted_pods=evicted, reason=reason)
+
+
+def plan_rollback(checkpoint_steps: Iterable[int], failed_at_step: int,
+                  max_rollback: int = 1000) -> int:
+    """Pick the restore step: newest committed checkpoint ≤ failure point,
+    refusing rollbacks larger than ``max_rollback`` (page instead — data
+    budget guard)."""
+    candidates = [s for s in checkpoint_steps if s <= failed_at_step]
+    if not candidates:
+        raise RuntimeError("no checkpoint precedes the failure — cold restart")
+    step = max(candidates)
+    if failed_at_step - step > max_rollback:
+        raise RuntimeError(
+            f"rollback {failed_at_step - step} steps exceeds budget "
+            f"{max_rollback} — operator intervention required")
+    return step

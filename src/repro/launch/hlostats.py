@@ -1,0 +1,110 @@
+"""Shared HLO cost/collective extraction + TPU v5e hardware model.
+
+Used by launch/dryrun.py (full-program compiles) and benchmarks/bench_roofline
+(compositional per-piece accounting). Importing this module does NOT touch jax
+device state.
+"""
+from __future__ import annotations
+
+import re
+
+# --- TPU v5e hardware model (roofline constants) ---------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~per direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 0.5, "u4": 0.5,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COLL_RE = re.compile(
+    r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[^\]]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+
+def shape_bytes(shape_str: str) -> float:
+    """'bf16[16,512,4096]{...}' → bytes."""
+    m = re.match(r"([a-z0-9]+)\[([\d,]*)\]", shape_str)
+    if not m:
+        return 0.0
+    dt, dims = m.groups()
+    nb = _DTYPE_BYTES.get(dt)
+    if nb is None:
+        return 0.0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nb
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-device bytes moved by each collective family.
+
+    Accounting (ring algorithms, wire bytes per participating device):
+      all-reduce: 2× payload (reduce-scatter + all-gather phases)
+      all-gather: output bytes; reduce-scatter: input bytes
+      all-to-all / collective-permute: 1× payload
+    '-start' counted, '-done' skipped (same transfer).
+    """
+    out = {k: 0.0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line.strip())
+        if not m:
+            continue
+        shape_part, op, variant = m.groups()
+        if variant == "-done":
+            continue
+        if shape_part.startswith("("):
+            nbytes = sum(shape_bytes(s)
+                         for s in re.findall(r"[a-z0-9]+\[[\d,]*\]", shape_part))
+        else:
+            nbytes = shape_bytes(shape_part)
+        if op == "all-reduce":
+            nbytes *= 2.0
+        out[op] += nbytes
+    return out
+
+
+def compiled_stats(compiled) -> dict:
+    """flops / hbm bytes (cost_analysis) + collective bytes (HLO parse),
+    all per device, for one compiled executable."""
+    ca = compiled.cost_analysis() or {}
+    coll = parse_collective_bytes(compiled.as_text())
+    ma = compiled.memory_analysis()
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "hbm_bytes": float(ca.get("bytes accessed", 0.0)),
+        "collective_bytes": float(sum(coll.values())),
+        "collective_breakdown": coll,
+        "temp_bytes": float(getattr(ma, "temp_size_in_bytes", 0)) if ma else 0.0,
+    }
+
+
+def add_stats(*stats: dict, weights=None) -> dict:
+    """Weighted sum of compiled_stats dicts (piece composition)."""
+    weights = weights or [1.0] * len(stats)
+    out = {"flops": 0.0, "hbm_bytes": 0.0, "collective_bytes": 0.0,
+           "collective_breakdown": {k: 0.0 for k in COLLECTIVES}, "temp_bytes": 0.0}
+    for w, s in zip(weights, stats):
+        out["flops"] += w * s["flops"]
+        out["hbm_bytes"] += w * s["hbm_bytes"]
+        out["collective_bytes"] += w * s["collective_bytes"]
+        out["temp_bytes"] = max(out["temp_bytes"], s.get("temp_bytes", 0.0))
+        for k in COLLECTIVES:
+            out["collective_breakdown"][k] += w * s["collective_breakdown"].get(k, 0.0)
+    return out
+
+
+def roofline_terms(stats: dict) -> dict:
+    return {
+        "compute_term_s": stats["flops"] / PEAK_FLOPS,
+        "memory_term_s": stats["hbm_bytes"] / HBM_BW,
+        "collective_term_s": stats["collective_bytes"] / ICI_BW,
+    }

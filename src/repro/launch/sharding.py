@@ -1,0 +1,153 @@
+"""Sharding rules: pytree-path → PartitionSpec for params, optimizer state,
+batches and decode caches.
+
+Layout (DESIGN.md §3.1):
+* TP over 'model': matmul out-dims for in-projections (qkv, mlp up/gate, mamba
+  in_proj, expert up/gate), matmul in-dims for out-projections (attn o, mlp
+  down, mamba out_proj, expert down), vocab dim of the embedding table.
+* FSDP over 'data': the *other* matmul dim of every large weight — GSPMD
+  inserts the per-layer all-gathers (ZeRO-3). Multi-pod keeps params
+  replicated over 'pod' (the cross-pod gradient all-reduce is the paper's
+  gradient channel — the thing ZipML compresses).
+* Optimizer state mirrors param specs (MomentQ scales replicate).
+* Small tensors (norms, biases, scalars, per-head vectors) replicate.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# parents whose 'w' contracts over the TP dim (out-projections)
+_OUT_PROJ = ("o", "down", "out_proj")
+# parents whose 'w' is small enough to replicate
+_REPLICATE = ("router",)
+
+MIN_SHARD_ELEMS = 1 << 16   # replicate anything smaller (norms, biases, dt, …)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "name"):      # GetAttrKey (NamedTuple fields)
+            parts.append(str(e.name))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+def param_spec(path, leaf) -> P:
+    ps = _path_str(path)
+    name = ps.split("/")[-1]
+    parent = ps.split("/")[-2] if "/" in ps else ""
+    ndim = leaf.ndim
+
+    def with_lead(base):
+        return P(*([None] * (ndim - len(base)) + list(base)))
+
+    if name == "table":                       # (V, d): vocab-parallel
+        return P("model", None)
+    if name in ("w", "w_q"):
+        if ndim < 2 or np.prod(leaf.shape) < MIN_SHARD_ELEMS or parent in _REPLICATE:
+            return P(*([None] * ndim))
+        if parent in _OUT_PROJ:
+            return with_lead(["model", "data"])
+        return with_lead(["data", "model"])
+    if name == "conv_w":                      # (lead…, K, conv_dim)
+        return P(*([None] * (ndim - 1) + ["model"]))
+    # biases, norms, scales, a_log/dt_bias/d_skip, levels → replicate
+    return P(*([None] * ndim))
+
+
+def make_param_shardings(mesh, params_tree):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf)), params_tree)
+
+
+def make_opt_shardings(mesh, opt_tree):
+    """Optimizer state: m/v/master mirror the params; step & scales replicate."""
+
+    def spec(path, leaf):
+        ps = _path_str(path)
+        field = ps.split("/")[0]
+        if field == "step" or ps.endswith("/scale") or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        sub = list(path)[1:]  # drop the OptState field (m/v/master)
+        if sub and _path_str(sub[-1:]) == "codes":
+            sub = sub[:-1]  # MomentQ codes share the param's layout
+        return NamedSharding(mesh, param_spec(sub, leaf))
+
+    return jax.tree_util.tree_map_with_path(spec, opt_tree)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings per input shape
+# ---------------------------------------------------------------------------
+
+def dp_axes_for(mesh) -> tuple:
+    names = tuple(mesh.axis_names)
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+def _dp_size(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(np.prod([sizes[a] for a in dp_axes_for(mesh)]))
+
+
+def batch_spec(mesh, global_batch: int):
+    """P over the DP axes when divisible, else replicate (e.g. batch=1)."""
+    dp = dp_axes_for(mesh)
+    if global_batch % _dp_size(mesh) == 0:
+        return dp if len(dp) > 1 else dp[0]
+    return None
+
+
+def train_batch_shardings(mesh, batch_tree):
+    """tokens/targets (B, S); vision (B, nv, d)."""
+    def spec(path, leaf):
+        b = batch_spec(mesh, leaf.shape[0])
+        return NamedSharding(mesh, P(*([b] + [None] * (leaf.ndim - 1))))
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def cache_shardings(mesh, state_tree, global_batch: int):
+    """DecodeState: KV caches (L, B, S, kv, D) → batch over DP, seq over
+    'model' (sequence-parallel decode attention). batch=1 shards seq over
+    ('data','model') so all 256 chips hold cache slices. SSM states shard
+    heads over 'model'; conv caches shard channels over 'model'."""
+    dp = batch_spec(mesh, global_batch)
+
+    def spec(path, leaf):
+        ps = _path_str(path)
+        name = ps.split("/")[-1]
+        nd = leaf.ndim
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        if name in ("k", "v", "k_scale", "v_scale") and nd >= 4:
+            seq_axis = "model" if dp is not None else ("data", "model")
+            # (lead…, B, S, kv, D/1)
+            lead = [None] * (nd - 4)
+            return NamedSharding(mesh, P(*lead, dp, seq_axis, None, None))
+        if name == "ssm" and nd >= 4:       # (L, B, H, P, N)
+            lead = [None] * (nd - 4)
+            return NamedSharding(mesh, P(*lead, dp, "model", None, None))
+        if name == "conv" and nd >= 3:      # (L, B, K-1, conv_dim)
+            lead = [None] * (nd - 3)
+            return NamedSharding(mesh, P(*lead, dp, None, "model"))
+        if name == "length" and nd >= 1:    # (lead…, B)
+            lead = [None] * (nd - 1)
+            return NamedSharding(mesh, P(*lead, dp))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(spec, state_tree)
+
+
+def logits_sharding(mesh, global_batch: int):
+    return NamedSharding(mesh, P(batch_spec(mesh, global_batch), None, "model"))

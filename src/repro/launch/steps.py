@@ -1,0 +1,146 @@
+"""Step builders: train_step / prefill_step / serve_step as pure jit-able
+functions, plus ShapeDtypeStruct input_specs for the dry-run.
+
+The ZipML channels hook in here:
+* QAT fake-quant (C5) — weights quantized inside the loss when
+  precision.weight_bits > 0 and storage == 'fake'.
+* int weight storage (C1/C5) — serve/prefill steps accept params whose matmul
+  weights are int8 codes (layers.dense dequantizes on the fly).
+* gradient compression (C3) — compressed cross-pod/DP all-reduce of gradients
+  via precision/gradcomp.py when precision.grad_bits > 0.
+* KV-cache quantization — decode caches store int8 when precision.kv_bits > 0.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch import sharding as shd
+from repro.models import transformer as T
+from repro.models.layers import shard_hint
+from repro.optim import adamw
+from repro.precision import qat
+
+
+def make_train_step(cfg: T.ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    grad_transform=None, accum_steps: int = 1):
+    """Returns train_step(params, opt_state, batch, key) → (params, opt, metrics).
+
+    ``batch``: {"tokens": (B,S), "targets": (B,S)[, "vision": (B,nv,d)]}.
+    ``grad_transform``: optional fn(grads, key) — the quantized-collective hook.
+    ``accum_steps``: microbatch gradient accumulation — divides activation
+    (and MoE dispatch-buffer) memory by A at the cost of re-gathering FSDP
+    params per microbatch.
+    """
+    plan = cfg.precision
+
+    def grads_of(params, tokens, targets, vision, kq):
+        def loss(p):
+            if plan.weight_bits and plan.weight_storage == "fake":
+                p = qat.fake_quant_tree(p, plan.weight_bits, kq)
+            elif plan.weight_bits and plan.weight_storage == "ship" \
+                    and not cfg.scan_layers:
+                # per-layer int8 gather; on scanned stacked params the
+                # replication pin would gather every layer at once
+                p = qat.ship_quant_tree(p, plan.weight_bits)
+            return T.loss_fn(p, tokens, targets, cfg, vision_tokens=vision)
+        return jax.value_and_grad(loss)(params)
+
+    def train_step(params, opt_state, batch, key):
+        kq, kg, km = jax.random.split(key, 3)
+        if accum_steps == 1:
+            loss_val, grads = grads_of(params, batch["tokens"], batch["targets"],
+                                       batch.get("vision"), kq)
+        else:
+            def resh(t):
+                return t.reshape(accum_steps, t.shape[0] // accum_steps,
+                                 *t.shape[1:])
+            mb = jax.tree.map(resh, dict(batch))
+
+            def constrain(tree):
+                # grad accumulators must live on the param sharding — without
+                # the constraint GSPMD replicates the f32 accumulator tree
+                return jax.tree_util.tree_map_with_path(
+                    lambda path, g: shard_hint(g, shd.param_spec(path, g)), tree)
+
+            def micro(carry, mb_i):
+                g_acc, l_acc = carry
+                lv, g = grads_of(params, mb_i["tokens"], mb_i["targets"],
+                                 mb_i.get("vision"), kq)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (constrain(g_acc), l_acc + lv), None
+
+            zeros = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (g_sum, l_sum), _ = jax.lax.scan(micro, (zeros, jnp.float32(0.0)), mb)
+            grads = jax.tree.map(lambda g: g / accum_steps, g_sum)
+            loss_val = l_sum / accum_steps
+        if grad_transform is not None:
+            grads = grad_transform(grads, kg)
+        mkey = km if opt_cfg.moment_bits else None
+        params, opt_state, metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg, key=mkey)
+        metrics["loss"] = loss_val
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: T.ModelConfig):
+    def prefill_step(params, batch):
+        return T.prefill(params, batch["tokens"], cfg,
+                         vision_tokens=batch.get("vision"))
+    return prefill_step
+
+
+def make_serve_step(cfg: T.ModelConfig):
+    def serve_step(params, state, tokens):
+        logits, new_state = T.decode_step(params, state, tokens, cfg)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return logits, next_tok, new_state
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStructs — no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: T.ModelConfig, shape: "configs.ShapeSpec") -> dict[str, Any]:
+    """Stand-ins for every model input of the (arch × shape) cell.
+
+    train  → params, opt_state, batch{tokens,targets[,vision]}, key
+    prefill→ params, batch{tokens[,vision]}
+    decode → params, decode_state (cache of seq_len), tokens (B, 1)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    out: dict[str, Any] = {}
+    params = T.param_specs(cfg)
+    out["params"] = params
+    if shape.kind == "train":
+        batch = {"tokens": _sds((b, s), jnp.int32),
+                 "targets": _sds((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["vision"] = _sds((b, cfg.n_vis_tokens, cfg.d_model), jnp.float32)
+        out["batch"] = batch
+        out["opt_state"] = jax.eval_shape(
+            lambda p: adamw.init(p, adamw.AdamWConfig()), params)
+        out["key"] = _sds((2,), jnp.uint32)
+    elif shape.kind == "prefill":
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["vision"] = _sds((b, cfg.n_vis_tokens, cfg.d_model), jnp.float32)
+        out["batch"] = batch
+    else:  # decode
+        out["decode_state"] = jax.eval_shape(
+            lambda: T.init_decode_state(cfg, b, smax=s))
+        out["tokens"] = _sds((b, 1), jnp.int32)
+    return out

@@ -1,0 +1,3 @@
+"""Model stack: layers, attention, MoE, SSM, transformer assembly."""
+from . import attention, layers, moe, ssm, transformer  # noqa: F401
+from .transformer import ModelConfig, PrecisionPlan  # noqa: F401

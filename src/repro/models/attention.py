@@ -1,0 +1,367 @@
+"""Attention: GQA/MQA, sliding-window (SWA), chunked-query training attention,
+and single-token decode against a (possibly quantized) KV cache.
+
+Design notes (TPU adaptation):
+* Training/prefill attention is *query-chunked*: a `lax.scan` over query blocks
+  computes full softmax per block against the (optionally windowed) KV range.
+  Peak score memory is (B, H, Cq, Skv_range) per block instead of O(S²); with
+  SWA the KV range is a static-size dynamic slice → sub-quadratic compute.
+* Decode attention relies on GSPMD: the KV cache is sharded over sequence on
+  the `model` axis; softmax over the sharded axis becomes tiny stat reductions.
+* KV cache storage supports the ZipML int8/int4 path (precision/kvcache.py);
+  here we accept either raw bf16 caches or `QuantKV` wrappers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import Params, apply_rope, dense, init_dense, shard_hint
+
+NEG_INF = -2.0 ** 30  # large-but-finite: keeps fully-masked rows NaN-free
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+                   *, qkv_bias: bool = False, dtype=jnp.bfloat16) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "q": init_dense(kq, d_model, n_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "k": init_dense(kk, d_model, n_kv_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "v": init_dense(kv, d_model, n_kv_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "o": init_dense(ko, n_heads * head_dim, d_model, dtype=dtype,
+                        scale=(n_heads * head_dim) ** -0.5),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    window: int = 0            # 0 = full causal
+    rope_theta: float = 10_000.0
+    q_chunk: int = 1024        # query block length for chunked attention
+    shard: str = "heads"       # 'heads' | 'seq' | 'none' — activation sharding
+    softmax_scale: float | None = None
+    unroll: bool = False       # python-loop the q-block scan (dry-run cost accounting)
+    dp: tuple = ("data",)      # data-parallel mesh axes (('pod','data') multi-pod)
+
+    @property
+    def scale(self) -> float:
+        return self.softmax_scale or self.head_dim ** -0.5
+
+
+def _repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, Hkv, D) → (B, S, Hkv*n_rep, D) for GQA score einsums."""
+    if n_rep == 1:
+        return x
+    b, s, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d)
+
+
+def _q_spec(spec: AttnSpec):
+    dp = spec.dp if len(spec.dp) > 1 else spec.dp[0]
+    if spec.shard == "heads":
+        return P(dp, None, "model", None)
+    if spec.shard == "seq":
+        return P(dp, "model", None, None)
+    return P(dp, None, None, None)
+
+
+def _attend_block(q, k, v, scale, mask):
+    """Grouped-query attention block without materializing repeated KV.
+
+    q: (B,Cq,H,D)  k/v: (B,Skv,G,D) with G=Hkv, H=G·R  mask: (Cq,Skv) bool.
+    The (B,S,G,R,D) repeat broadcast would cost n_rep× KV memory and bait
+    GSPMD into awkward G-way shardings — the grouped einsum avoids both.
+    """
+    b, cq, h, d = q.shape
+    g = k.shape[2]
+    r = h // g
+    qg = q.reshape(b, cq, g, r, d)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, cq, h, d).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, spec: AttnSpec, *, positions=None,
+                      causal: bool = True) -> jax.Array:
+    """Causal (optionally sliding-window) attention over query blocks.
+
+    q: (B, S, H, D); k/v: (B, S, Hkv, D) — pre-RoPE'd. Returns (B, S, H, D).
+
+    Query blocks are pre-stacked and scanned over the *leading* axis — a
+    dynamic_slice with a loop-carried start on the (sharded) sequence dim
+    would force GSPMD to fully replicate q. With ``spec.window > 0`` the
+    overlapping KV windows are pre-gathered per block (static shapes) ⇒
+    O(S·W) compute and memory.
+    """
+    b, s, h, d = q.shape
+    kf, vf = k, v
+    cq = min(spec.q_chunk, s)
+    if s % cq:
+        cq = s  # fall back to single block for odd lengths (smoke tests)
+    n_blocks = s // cq
+    windowed = causal and spec.window > 0 and spec.window < s
+    kv_span = min(spec.window + cq, s) if windowed else s
+
+    def attend(q_blk, k_blk, v_blk, q_pos, k_pos):
+        if causal:
+            mask = q_pos[:, None] >= k_pos[None, :]
+            if spec.window > 0:
+                mask &= q_pos[:, None] - k_pos[None, :] < spec.window
+        else:
+            mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+        return _attend_block(q_blk, k_blk, v_blk, spec.scale, mask)
+
+    if n_blocks == 1:
+        return attend(q, kf, vf, jnp.arange(s), jnp.arange(kf.shape[1]))
+
+    qb = q.reshape(b, n_blocks, cq, h, d).transpose(1, 0, 2, 3, 4)
+    q_pos_b = (jnp.arange(n_blocks)[:, None] * cq + jnp.arange(cq)[None])
+
+    if windowed:
+        starts = jnp.clip(jnp.arange(n_blocks) * cq + cq - kv_span, 0, s - kv_span)
+        idx = starts[:, None] + jnp.arange(kv_span)[None]        # (nb, span)
+        kb = jnp.moveaxis(kf[:, idx], 1, 0)                      # (nb, B, span, H, D)
+        vb = jnp.moveaxis(vf[:, idx], 1, 0)
+        xs = (qb, kb, vb, q_pos_b, idx)
+        body = lambda _, t: (None, attend(t[0], t[1], t[2], t[3], t[4]))
+    else:
+        xs = (qb, q_pos_b)
+        k_pos = jnp.arange(kf.shape[1])
+        body = lambda _, t: (None, attend(t[0], kf, vf, t[1], k_pos))
+
+    # remat each q-block: otherwise the block scan stacks every block's
+    # (Cq, Skv) probs as bwd residuals — O(S²) memory, exactly what the
+    # chunking exists to avoid
+    body = jax.checkpoint(body)
+    if spec.unroll:
+        outs = jnp.stack([body(None, jax.tree.map(lambda t: t[i], xs))[1]
+                          for i in range(n_blocks)])
+    else:
+        _, outs = jax.lax.scan(body, None, xs)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+
+
+def decode_attention(q, k_cache, v_cache, spec: AttnSpec, *, kv_len) -> jax.Array:
+    """One-token attention: q (B, 1, H, D) vs cache (B, Smax, Hkv, D).
+
+    ``kv_len``: number of valid cache entries (scalar or (B,)). The cache seq
+    axis is expected sharded over 'model' (launcher sets it); the masked
+    softmax over that axis lowers to per-shard work + small stat reductions.
+    """
+    b, _, h, d = q.shape
+    smax = k_cache.shape[1]
+    g = k_cache.shape[2]
+    r = h // g
+    qg = q.reshape(b, 1, g, r, d)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k_cache,
+                        preferred_element_type=jnp.float32) * spec.scale
+    pos = jnp.arange(smax)
+    valid = pos[None, :] < jnp.reshape(jnp.asarray(kv_len), (-1, 1))  # (B, Smax)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+class KVCache(NamedTuple):
+    """Ring-buffer KV cache. ``k``/``v``: (B, Smax, Hkv, D) in bf16; int8 codes
+    when quantized (scale set); **uint8 = packed int4** — two offset-binary
+    4-bit codes per byte, (B, Smax, Hkv, D/2). ``length``: filled entries (B,)
+    int32 — also the write cursor modulo Smax for SWA rings."""
+
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array
+    k_scale: jax.Array | None = None   # (B, Smax, Hkv, 1) fp32 when quantized
+    v_scale: jax.Array | None = None
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+    @property
+    def packed(self) -> bool:
+        return self.quantized and self.k.dtype == jnp.uint8
+
+    def materialize(self):
+        if not self.quantized:
+            return self.k, self.v
+        if self.packed:
+            kc = _unpack_int4(self.k)
+            vc = _unpack_int4(self.v)
+        else:
+            kc, vc = self.k.astype(jnp.float32), self.v.astype(jnp.float32)
+        k = (kc * self.k_scale).astype(jnp.bfloat16)
+        v = (vc * self.v_scale).astype(jnp.bfloat16)
+        return k, v
+
+
+def _pack_int4(codes: jax.Array) -> jax.Array:
+    """int codes in [-7, 7], last dim even → uint8 (…, D/2): offset-binary
+    nibbles (c+8 ∈ [1,15]; 0 reserved ⇒ unpack is branch-free)."""
+    c = (codes.astype(jnp.int32) + 8).astype(jnp.uint8)
+    lo = c[..., 0::2]
+    hi = c[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def _unpack_int4(packed: jax.Array) -> jax.Array:
+    lo = (packed & 0xF).astype(jnp.float32) - 8.0
+    hi = ((packed >> 4) & 0xF).astype(jnp.float32) - 8.0
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+def init_kv_cache(batch: int, smax: int, n_kv: int, head_dim: int,
+                  *, kv_bits: int = 0, dtype=jnp.bfloat16) -> KVCache:
+    if kv_bits == 4:
+        return KVCache(
+            k=jnp.zeros((batch, smax, n_kv, head_dim // 2), jnp.uint8),
+            v=jnp.zeros((batch, smax, n_kv, head_dim // 2), jnp.uint8),
+            length=jnp.zeros((batch,), jnp.int32),
+            k_scale=jnp.ones((batch, smax, n_kv, 1), jnp.float32),
+            v_scale=jnp.ones((batch, smax, n_kv, 1), jnp.float32),
+        )
+    if kv_bits:
+        return KVCache(
+            k=jnp.zeros((batch, smax, n_kv, head_dim), jnp.int8),
+            v=jnp.zeros((batch, smax, n_kv, head_dim), jnp.int8),
+            length=jnp.zeros((batch,), jnp.int32),
+            k_scale=jnp.ones((batch, smax, n_kv, 1), jnp.float32),
+            v_scale=jnp.ones((batch, smax, n_kv, 1), jnp.float32),
+        )
+    return KVCache(
+        k=jnp.zeros((batch, smax, n_kv, head_dim), dtype),
+        v=jnp.zeros((batch, smax, n_kv, head_dim), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def _quant_rows(x: jax.Array, bits: int):
+    """Per-(token, head) symmetric int8 quantization of new KV rows.
+
+    x: (B, 1, Hkv, D) → codes int8 + scale (B, 1, Hkv, 1). Deterministic
+    nearest rounding: KV entries are read many times — stochastic rounding
+    would add variance per read without an unbiasedness payoff (the attention
+    nonlinearity already breaks strict unbiasedness; see DESIGN.md §5).
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.where(absmax == 0, 1.0, absmax / qmax)
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
+    return codes.astype(jnp.int8), scale
+
+
+def update_kv_cache(cache: KVCache, k_new, v_new, *, window: int = 0,
+                    kv_bits: int = 0) -> KVCache:
+    """Append one token's K/V at the cursor (ring-buffer when ``window``>0)."""
+    smax = cache.k.shape[1]
+    cursor = cache.length % smax if window else jnp.minimum(cache.length, smax - 1)
+    b = cache.k.shape[0]
+
+    def write(buf, new):
+        # per-batch dynamic index write at (i, cursor_i)
+        return jax.vmap(
+            lambda row, n, c: jax.lax.dynamic_update_slice_in_dim(row, n, c, axis=0)
+        )(buf, new, cursor)
+
+    if cache.quantized:
+        kc, ks = _quant_rows(k_new, kv_bits or 8)
+        vc, vs = _quant_rows(v_new, kv_bits or 8)
+        if cache.packed:
+            kc, vc = _pack_int4(kc), _pack_int4(vc)
+        return cache._replace(
+            k=write(cache.k, kc), v=write(cache.v, vc),
+            k_scale=write(cache.k_scale, ks), v_scale=write(cache.v_scale, vs),
+            length=cache.length + 1)
+    return cache._replace(k=write(cache.k, k_new), v=write(cache.v, v_new),
+                          length=cache.length + 1)
+
+
+def attention_block(p: Params, x: jax.Array, spec: AttnSpec, *,
+                    positions: jax.Array | None = None,
+                    kv_tokens: jax.Array | None = None,
+                    return_kv: bool = False):
+    """Full training/prefill self-attention (or cross-attention when
+    ``kv_tokens`` is given — no causal mask, no RoPE on keys).
+
+    ``return_kv=True`` additionally returns the (post-RoPE) K/V — exactly what
+    the decode cache stores, so prefill can fill caches for free.
+    """
+    b, s, _ = x.shape
+    q = dense(p["q"], x).reshape(b, s, spec.n_heads, spec.head_dim)
+    kv_src = x if kv_tokens is None else kv_tokens
+    sk = kv_src.shape[1]
+    k = dense(p["k"], kv_src).reshape(b, sk, spec.n_kv_heads, spec.head_dim)
+    v = dense(p["v"], kv_src).reshape(b, sk, spec.n_kv_heads, spec.head_dim)
+    if kv_tokens is None:
+        pos = positions if positions is not None else jnp.arange(s)
+        q = apply_rope(q, pos, spec.rope_theta)
+        k = apply_rope(k, pos, spec.rope_theta)
+        out = chunked_attention(q, k, v, spec)
+    else:
+        # cross-attention: every query sees every kv token (vision/audio stub);
+        # q-chunked — a single block would materialize (B,H,S,Skv) scores
+        out = chunked_attention(q, k, v, spec, causal=False)
+    y = dense(p["o"], out.reshape(b, s, spec.n_heads * spec.head_dim))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def prefill_cache_from_kv(k: jax.Array, v: jax.Array, *, window: int = 0,
+                          kv_bits: int = 0, pad_to: int = 0) -> KVCache:
+    """Package full-sequence K/V into the decode cache layout.
+
+    With a sliding window, keep the last ``window`` rows; when window divides
+    the absolute positions (true for the assigned shapes) the ring layout is
+    the identity ordering. ``pad_to`` reserves extra cache rows so decode can
+    append past the prompt.
+    """
+    b, s, hkv, d = k.shape
+    length = jnp.full((b,), s, jnp.int32)
+    if window and window < s:
+        k, v = k[:, -window:], v[:, -window:]
+    if pad_to and pad_to > k.shape[1] and not (window and window < s):
+        padn = pad_to - k.shape[1]
+        k = jnp.pad(k, ((0, 0), (0, padn), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, padn), (0, 0), (0, 0)))
+    if kv_bits:
+        kc, ks = _quant_rows(k, kv_bits)
+        vc, vs = _quant_rows(v, kv_bits)
+        if kv_bits == 4:
+            kc, vc = _pack_int4(kc), _pack_int4(vc)
+        return KVCache(kc, vc, length, ks, vs)
+    return KVCache(k, v, length)
+
+
+def attention_decode_step(p: Params, x: jax.Array, cache: KVCache, spec: AttnSpec,
+                          *, kv_bits: int = 0) -> tuple[jax.Array, KVCache]:
+    """x: (B, 1, d). Appends to cache and attends. Returns (out, new_cache)."""
+    b = x.shape[0]
+    q = dense(p["q"], x).reshape(b, 1, spec.n_heads, spec.head_dim)
+    k = dense(p["k"], x).reshape(b, 1, spec.n_kv_heads, spec.head_dim)
+    v = dense(p["v"], x).reshape(b, 1, spec.n_kv_heads, spec.head_dim)
+    pos = cache.length[:, None]  # (B, 1) absolute position
+    q = apply_rope(q, pos, spec.rope_theta)
+    k = apply_rope(k, pos, spec.rope_theta)
+    cache = update_kv_cache(cache, k, v, window=spec.window, kv_bits=kv_bits)
+    kc, vc = cache.materialize()
+    smax = kc.shape[1]
+    kv_len = jnp.minimum(cache.length, smax)
+    out = decode_attention(q, kc, vc, spec, kv_len=kv_len)
+    return dense(p["o"], out.reshape(b, 1, spec.n_heads * spec.head_dim)), cache

@@ -1,0 +1,222 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060), TPU-adapted.
+
+The SSD recurrence  h_t = dA_t·h_{t-1} + dt_t·B_t⊗x_t,  y_t = C_t·h_t + D·x_t
+is evaluated in the *chunked dual form*: within a chunk of length L the output
+is an attention-like quadratic form (MXU-friendly einsums); across chunks a
+`lax.scan` carries the (B, H, P, N) state. This is the standard TPU adaptation
+of the CUDA kernel: the intra-chunk block becomes a dense matmul pipeline (and
+the Pallas kernel in kernels/ssd.py), the inter-chunk part is a cheap scan.
+
+Decode is the O(1) recurrence on a persistent (conv_state, ssm_state) cache —
+this is what makes long_500k runnable for the ssm/hybrid architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense, init_dense, rmsnorm, init_rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSpec:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_kernel: int = 4
+    chunk: int = 256
+    n_groups: int = 1
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+    unroll: bool = False   # python-loop the chunk scan (dry-run cost accounting)
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def init_mamba2(key, spec: SSMSpec, dtype=jnp.bfloat16) -> Params:
+    ki, kc, ko, kd = jax.random.split(key, 4)
+    d_in_proj = 2 * spec.d_inner + 2 * spec.n_groups * spec.d_state + spec.n_heads
+    dt = jnp.exp(jax.random.uniform(kd, (spec.n_heads,), jnp.float32)
+                 * (jnp.log(spec.dt_max) - jnp.log(spec.dt_min)) + jnp.log(spec.dt_min))
+    return {
+        "in_proj": init_dense(ki, spec.d_model, d_in_proj, dtype=dtype),
+        "conv_w": (jax.random.normal(kc, (spec.conv_kernel, spec.conv_dim), jnp.float32)
+                   * spec.conv_kernel**-0.5).astype(dtype),
+        "conv_b": jnp.zeros((spec.conv_dim,), dtype),
+        "a_log": jnp.log(jnp.arange(1, spec.n_heads + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((spec.n_heads,), jnp.float32),
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),  # inverse softplus init
+        "norm": init_rmsnorm(spec.d_inner, dtype),
+        "out_proj": init_dense(ko, spec.d_inner, spec.d_model, dtype=dtype,
+                               scale=spec.d_inner**-0.5),
+    }
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # (B, K-1, conv_dim) last inputs for the causal conv
+    ssm: jax.Array    # (B, H, P, N) fp32 state
+
+
+def init_mamba_cache(batch: int, spec: SSMSpec, dtype=jnp.bfloat16) -> MambaCache:
+    return MambaCache(
+        conv=jnp.zeros((batch, spec.conv_kernel - 1, spec.conv_dim), dtype),
+        ssm=jnp.zeros((batch, spec.n_heads, spec.head_dim, spec.d_state), jnp.float32),
+    )
+
+
+def _split_proj(p: Params, spec: SSMSpec, zxbcdt: jax.Array):
+    di, gn = spec.d_inner, spec.n_groups * spec.d_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: di + spec.conv_dim]
+    dt = zxbcdt[..., di + spec.conv_dim:]
+    return z, xbc, dt
+
+
+def _post_conv_split(spec: SSMSpec, xbc: jax.Array):
+    di, gn = spec.d_inner, spec.n_groups * spec.d_state
+    return xbc[..., :di], xbc[..., di: di + gn], xbc[..., di + gn:]
+
+
+def _causal_conv(p: Params, xbc: jax.Array, spec: SSMSpec) -> jax.Array:
+    """Depthwise causal conv over seq (kernel K), then SiLU."""
+    k = spec.conv_kernel
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1], :] * p["conv_w"][i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu((out + p["conv_b"][None, None, :]).astype(jnp.float32)
+                       ).astype(xbc.dtype)
+
+
+def ssd_chunked(xh, dt, a_log, b_mat, c_mat, spec: SSMSpec,
+                init_state: jax.Array | None = None):
+    """Chunked SSD scan.
+
+    xh:   (B, S, H, P)   — per-head inputs
+    dt:   (B, S, H)      — softplus'd step sizes
+    b_mat/c_mat: (B, S, G, N)
+    Returns y (B, S, H, P) and final state (B, H, P, N).
+    """
+    bsz, s, h, pdim = xh.shape
+    n = spec.d_state
+    L = min(spec.chunk, s)
+    if s % L:
+        L = s
+    nc = s // L
+    a = -jnp.exp(a_log)                                 # (H,) negative
+    # per-step log decay: dA = exp(dt·a) → log = dt·a  (B, S, H)
+    logdec = (dt * a[None, None, :]).astype(jnp.float32)
+
+    def reshape_c(t):  # (B, S, ...) -> (nc, B, L, ...)
+        return t.reshape(bsz, nc, L, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    xs, dts, lds = map(reshape_c, (xh, dt, logdec))
+    bs, cs = map(reshape_c, (b_mat, c_mat))
+
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, pdim, n), jnp.float32)
+
+    def chunk_step(state, inp):
+        xc, dtc, ldc, bc, cc = inp                      # (B, L, ...)
+        cum = jnp.cumsum(ldc, axis=1)                   # (B, L, H)
+        # weighted inputs: dt·x
+        xw = (xc.astype(jnp.float32) * dtc[..., None])  # (B, L, H, P)
+        # --- intra-chunk (dual / attention-like) ---
+        # decay(l, m) = exp(cum_l − cum_m) for m ≤ l. Mask BEFORE exp: the
+        # upper triangle has diff > 0 → exp overflows → inf·0 = NaN in the vjp.
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B, L, L, H)
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        dec = jnp.exp(jnp.where(mask[None, :, :, None], diff, -jnp.inf))
+        scores = jnp.einsum("blgn,bmgn->blm", cc.astype(jnp.float32),
+                            bc.astype(jnp.float32))     # (B, L, L)  (G=1)
+        att = scores[:, :, :, None] * dec               # (B, L, L, H)
+        y_intra = jnp.einsum("blmh,bmhp->blhp", att, xw)
+        # --- inter-chunk: contribution of the carried state ---
+        state_dec = jnp.exp(cum)                        # (B, L, H)
+        y_inter = jnp.einsum("blgn,bhpn->blhp", cc.astype(jnp.float32), state)
+        y_inter = y_inter * state_dec[..., None]
+        # --- state update ---
+        tail = jnp.exp(cum[:, -1:, :] - cum)            # (B, L, H) decay to end
+        bx = jnp.einsum("blhp,blgn->bhpn", xw * tail[..., None],
+                        bc.astype(jnp.float32))
+        state = state * jnp.exp(cum[:, -1])[:, :, None, None] + bx
+        return state, (y_intra + y_inter)
+
+    if spec.unroll:
+        ys_list, state = [], init_state
+        for c in range(nc):
+            state, yc = chunk_step(state, jax.tree.map(lambda t: t[c],
+                                                       (xs, dts, lds, bs, cs)))
+            ys_list.append(yc)
+        ys = jnp.stack(ys_list)
+    else:
+        state, ys = jax.lax.scan(chunk_step, init_state, (xs, dts, lds, bs, cs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, pdim)
+    return y.astype(xh.dtype), state
+
+
+def mamba2_forward(p: Params, x: jax.Array, spec: SSMSpec,
+                   init_state=None, return_state: bool = False):
+    """Full-sequence forward. x: (B, S, d_model) → (B, S, d_model).
+
+    ``return_state=True`` returns (out, MambaCache) — the prefill path: the
+    conv cache is the last K−1 pre-conv rows, the SSM state the final chunk
+    state, so decode continues exactly where prefill stopped.
+    """
+    bsz, s, _ = x.shape
+    z, xbc, dt_raw = _split_proj(p, spec, dense(p["in_proj"], x))
+    conv_tail = xbc[:, -(spec.conv_kernel - 1):, :]
+    xbc = _causal_conv(p, xbc, spec)
+    xi, b_mat, c_mat = _post_conv_split(spec, xbc)
+    h, pd, n, g = spec.n_heads, spec.head_dim, spec.d_state, spec.n_groups
+    xh = xi.reshape(bsz, s, h, pd)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    y, state = ssd_chunked(xh, dt, p["a_log"], b_mat.reshape(bsz, s, g, n),
+                           c_mat.reshape(bsz, s, g, n), spec, init_state)
+    y = y + (p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(bsz, s, spec.d_inner)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = dense(p["out_proj"], y)
+    if return_state:
+        return out, MambaCache(conv=conv_tail, ssm=state)
+    return out
+
+
+def mamba2_decode_step(p: Params, x: jax.Array, cache: MambaCache, spec: SSMSpec):
+    """Single-token recurrent step. x: (B, 1, d_model)."""
+    bsz = x.shape[0]
+    z, xbc, dt_raw = _split_proj(p, spec, dense(p["in_proj"], x))
+    # conv over the cached window + new input
+    win = jnp.concatenate([cache.conv, xbc], axis=1)          # (B, K, conv_dim)
+    conv = (jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                       p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32))
+    xbc_t = jax.nn.silu(conv)[:, None, :].astype(x.dtype)      # (B, 1, conv_dim)
+    xi, b_mat, c_mat = _post_conv_split(spec, xbc_t)
+    h, pd, n, g = spec.n_heads, spec.head_dim, spec.d_state, spec.n_groups
+    xh = xi.reshape(bsz, h, pd).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"][None, :])
+    a = -jnp.exp(p["a_log"])                                   # (H,)
+    da = jnp.exp(dt * a[None, :])                              # (B, H)
+    bv = b_mat.reshape(bsz, g * n).astype(jnp.float32)         # G=1 → (B, N)
+    cv = c_mat.reshape(bsz, g * n).astype(jnp.float32)
+    new_state = (cache.ssm * da[:, :, None, None]
+                 + jnp.einsum("bhp,bn->bhpn", xh * dt[..., None], bv))
+    y = jnp.einsum("bhpn,bn->bhp", new_state, cv)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, 1, spec.d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = dense(p["out_proj"], y)
+    return out, MambaCache(conv=win[:, 1:, :], ssm=new_state)

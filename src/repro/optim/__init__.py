@@ -1,0 +1,2 @@
+from . import adamw  # noqa: F401
+from .adamw import AdamWConfig, OptState  # noqa: F401

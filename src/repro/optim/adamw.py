@@ -1,0 +1,152 @@
+"""AdamW with fp32 master weights and optional ZipML-quantized moments.
+
+The optimizer state is the dominant HBM resident at scale (3 fp32 tensors per
+bf16 param). ZipML's model-channel compression (C1+C4) applies directly:
+``moment_bits=8`` stores m/v as int8 codes + per-tensor scales with stochastic
+rounding on update — E[m̂]=m keeps the update unbiased, the same argument as
+the paper's gradient quantization (App. D).
+
+Pure-pytree implementation: state mirrors the param tree, so the launcher's
+param sharding rules apply verbatim to the state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    moment_bits: int = 0        # 0 = fp32 moments; 8 = int8+scale storage
+
+
+class MomentQ(NamedTuple):
+    codes: Any
+    scale: Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any            # fp32 tree, or MomentQ tree when moment_bits > 0
+    v: Any
+    master: Any       # fp32 master copy of params
+
+
+def _q_moment(x: jax.Array, bits: int, key, positive: bool = False) -> MomentQ:
+    """Per-row (last-axis-block) stochastic quantization of a moment tensor.
+
+    ``positive`` (second moment): quantize √v on the unsigned grid — a
+    symmetric per-tensor scheme zeroes small v entries and 1/√v explodes.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    t0 = jnp.sqrt(x) if positive else x
+    red_axis = tuple(range(x.ndim - 1)) if x.ndim > 1 else None
+    absmax = jnp.max(jnp.abs(t0), axis=red_axis, keepdims=x.ndim > 1)
+    scale = jnp.where(absmax == 0, 1.0, absmax / qmax)
+    t = t0 / scale
+    lo = jnp.floor(t)
+    codes = lo + (jax.random.uniform(key, x.shape) < (t - lo)).astype(jnp.float32)
+    lo_clip = 0.0 if positive else -qmax
+    return MomentQ(jnp.clip(codes, lo_clip, qmax).astype(jnp.int8),
+                   scale.astype(jnp.float32))
+
+
+def _deq_moment(q: MomentQ, positive: bool = False) -> jax.Array:
+    v = q.codes.astype(jnp.float32) * q.scale
+    return v * v if positive else v
+
+
+def init(params, cfg: AdamWConfig) -> OptState:
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    if cfg.moment_bits:
+        zq = jax.tree.map(
+            lambda p: MomentQ(jnp.zeros(p.shape, jnp.int8),
+                              jnp.ones((), jnp.float32)), params)
+        return OptState(jnp.zeros((), jnp.int32), zq, zq, master)
+    return OptState(jnp.zeros((), jnp.int32), zeros, zeros, master)
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step_f = step.astype(jnp.float32)
+    warm = jnp.minimum(step_f / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step_f - cfg.warmup_steps)
+                    / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(params, grads, state: OptState, cfg: AdamWConfig,
+                  key: jax.Array | None = None):
+    """One AdamW step. Returns (new_params, new_state, metrics).
+
+    NaN/inf gradients skip the update entirely (fault tolerance: a poisoned
+    microbatch or a flaky host cannot corrupt the master weights).
+    """
+    gnorm = global_norm(grads)
+    finite = jnp.isfinite(gnorm)
+    clip = jnp.where(gnorm > cfg.grad_clip, cfg.grad_clip / (gnorm + 1e-9), 1.0)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    keys = {}
+    if cfg.moment_bits and key is not None:
+        flat, treedef = jax.tree.flatten(state.master)
+        ks = jax.random.split(key, 2 * len(flat))
+        keys = {"m": jax.tree.unflatten(treedef, list(ks[: len(flat)])),
+                "v": jax.tree.unflatten(treedef, list(ks[len(flat):]))}
+
+    def upd(p_master, g, m_old, v_old, km=None, kv=None):
+        g32 = g.astype(jnp.float32) * clip
+        m_prev = _deq_moment(m_old) if cfg.moment_bits else m_old
+        v_prev = _deq_moment(v_old, positive=True) if cfg.moment_bits else v_old
+        m = cfg.b1 * m_prev + (1 - cfg.b1) * g32
+        v = cfg.b2 * v_prev + (1 - cfg.b2) * g32 * g32
+        update = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        decay = cfg.weight_decay * p_master if p_master.ndim >= 2 else 0.0
+        new_master = p_master - lr * (update + decay)
+        new_master = jnp.where(finite, new_master, p_master)
+        if cfg.moment_bits:
+            m_store = _q_moment(jnp.where(finite, m, m_prev), cfg.moment_bits, km)
+            v_store = _q_moment(jnp.where(finite, v, v_prev), cfg.moment_bits, kv,
+                                positive=True)
+        else:
+            m_store = jnp.where(finite, m, m_prev)
+            v_store = jnp.where(finite, v, v_prev)
+        return new_master, m_store, v_store
+
+    if cfg.moment_bits and key is not None:
+        out = jax.tree.map(upd, state.master, grads, state.m, state.v,
+                           keys["m"], keys["v"],
+                           is_leaf=lambda x: isinstance(x, MomentQ))
+    else:
+        out = jax.tree.map(upd, state.master, grads, state.m, state.v,
+                           is_leaf=lambda x: isinstance(x, MomentQ))
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3 and not isinstance(x, MomentQ)
+    new_master = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+    new_params = jax.tree.map(lambda mst, p: mst.astype(p.dtype), new_master, params)
+    metrics = {"grad_norm": gnorm, "lr": lr, "skipped": 1.0 - finite.astype(jnp.float32)}
+    return new_params, OptState(step, new_m, new_v, new_master), metrics

@@ -1,0 +1,4 @@
+"""ZipML precision channels at LM scale: QAT/int weight storage, double-sampled
+activations, quantized KV cache (models/attention.py), gradient compression."""
+from . import qat  # noqa: F401
+from . import act_quant, gradcomp  # noqa: F401

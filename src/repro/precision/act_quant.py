@@ -1,0 +1,82 @@
+"""§3.4 — double-sampled activation quantization for deep nets (beyond-paper).
+
+For a linear layer y = x·W the saved activation x is consumed TWICE — forward
+matmul and backward outer-product ∂W = xᵀ·δ. That is precisely the quadratic
+reuse double sampling (C2) fixes for linear models: store two *independent*
+stochastic quantizations Q₁(x), Q₂(x); use Q₁ in the forward, Q₂ in the
+backward. Then E[∂W] = E[Q₂(x)]ᵀ·δ = xᵀ·δ — the weight gradient is unbiased
+in the activation quantization (Lemma 7's argument), while the saved-
+activation memory drops 2×/4× (int8/int4 codes instead of bf16).
+
+Storage cost: per the paper §2.2, Q₁ and Q₂ share the same base level and
+differ by one stochastic bit, so the second sample costs 1 extra bit — the
+bandwidth model in benchmarks/bench_bandwidth_model.py accounts it that way.
+
+``ds_dense(x, w, key)`` is a drop-in einsum with this behavior (custom_vjp);
+``ds_mlp`` wires it through a gated MLP block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant(x, bits, key):
+    """Per-tensor symmetric stochastic quantization → (codes int8, scale)."""
+    x32 = x.astype(jnp.float32)
+    qmax = float(2 ** (bits - 1) - 1)
+    absmax = jax.lax.stop_gradient(jnp.max(jnp.abs(x32)))
+    scale = jnp.where(absmax == 0, 1.0, absmax / qmax)
+    t = x32 / scale
+    lo = jnp.floor(t)
+    codes = lo + (jax.random.uniform(key, x.shape) < (t - lo)).astype(jnp.float32)
+    return jnp.clip(codes, -qmax, qmax).astype(jnp.int8), scale
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def ds_dense(x, w, key, bits: int = 8):
+    """y = Q₁(x)·W with ∂W computed from the independent Q₂(x)."""
+    k1, _ = jax.random.split(key)
+    c1, s1 = _quant(x, bits, k1)
+    xq = c1.astype(x.dtype) * s1.astype(x.dtype)
+    return jnp.einsum("...i,io->...o", xq, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _ds_fwd(x, w, key, bits):
+    k1, k2 = jax.random.split(key)
+    c1, s1 = _quant(x, bits, k1)
+    c2, s2 = _quant(x, bits, k2)
+    xq1 = c1.astype(x.dtype) * s1.astype(x.dtype)
+    y = jnp.einsum("...i,io->...o", xq1, w,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    # residuals: int8 codes + scales (the memory win) + the weight reference
+    return y, (c2, s2, w)
+
+
+def _ds_bwd(bits, res, g):
+    c2, s2, w = res
+    xdt = w.dtype
+    xq2 = c2.astype(xdt) * s2.astype(xdt)
+    gx = jnp.einsum("...o,io->...i", g, w,
+                    preferred_element_type=jnp.float32).astype(xdt)
+    flat_g = g.reshape(-1, g.shape[-1])
+    flat_x = xq2.reshape(-1, xq2.shape[-1])
+    gw = jnp.einsum("ni,no->io", flat_x, flat_g,
+                    preferred_element_type=jnp.float32).astype(w.dtype)
+    return gx, gw, None
+
+
+ds_dense.defvjp(_ds_fwd, _ds_bwd)
+
+
+def ds_mlp(p, x, key, act: str = "silu", bits: int = 8):
+    """Gated MLP with double-sampled activation quantization on all three
+    matmuls (drop-in for models/layers.mlp when the plan enables act_ds)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    hg = ds_dense(x, p["gate"]["w"], k1, bits)
+    hu = ds_dense(x, p["up"]["w"], k2, bits)
+    a = jax.nn.silu(hg) if act == "silu" else jax.nn.gelu(hg, approximate=True)
+    return ds_dense(a * hu, p["down"]["w"], k3, bits)

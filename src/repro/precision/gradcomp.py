@@ -1,0 +1,108 @@
+"""C3 — quantized gradient collectives with error feedback (the paper's
+gradient channel on the TPU ICI/DCI mesh).
+
+Two layers:
+
+* ``compress_tree`` / ``decompress_tree`` — ZipML row-scaled stochastic
+  quantization (C1, unbiased) of a gradient pytree into int8 codes + scales.
+  With ``error_feedback`` state, the quantization residual is carried to the
+  next step (telescoping bias cancellation — needed because an all-reduce sums
+  many quantized terms per step; the single-worker analysis of App. D does
+  not cover the accumulated worst case, EF restores it).
+
+* ``make_compressed_psum(axis)`` — a shard_map-manual all-reduce over one mesh
+  axis (the cross-pod 'pod' axis in production: the slowest link is exactly
+  the paper's Fig. 2 gradient channel): quantize → all_gather(codes+scales) →
+  dequantize → mean. Wire bytes drop 4× at 8 bits / 8× at 4 bits vs bf16.
+
+The train driver composes: grads are already data-axis-reduced by GSPMD inside
+the pod (cheap ICI); the compressed psum handles only the 'pod' axis (DCI).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressedLeaf(NamedTuple):
+    codes: jax.Array      # int8 in [-qmax, qmax]
+    scale: jax.Array      # () fp32 per tensor
+
+
+def _quantize_leaf(g: jax.Array, bits: int, key) -> CompressedLeaf:
+    g32 = g.astype(jnp.float32)
+    qmax = float(2 ** (bits - 1) - 1)
+    absmax = jnp.max(jnp.abs(g32))
+    scale = jnp.where(absmax == 0, 1.0, absmax / qmax)
+    t = g32 / scale
+    lo = jnp.floor(t)
+    codes = lo + (jax.random.uniform(key, g.shape) < (t - lo)).astype(jnp.float32)
+    return CompressedLeaf(jnp.clip(codes, -qmax, qmax).astype(jnp.int8),
+                          scale.astype(jnp.float32))
+
+
+def _dequantize_leaf(c: CompressedLeaf) -> jax.Array:
+    return c.codes.astype(jnp.float32) * c.scale
+
+
+def compress_tree(grads, bits: int, key, error: Any | None = None):
+    """Quantize a gradient pytree. Returns (compressed, new_error).
+
+    ``error``: error-feedback pytree (same structure, fp32) added before
+    quantization; new_error = (g + e) − Q(g + e).
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    err_leaves = jax.tree.leaves(error) if error is not None else [None] * len(leaves)
+    comp, new_err = [], []
+    for g, e, k in zip(leaves, err_leaves, keys):
+        g32 = g.astype(jnp.float32)
+        if e is not None:
+            g32 = g32 + e
+        c = _quantize_leaf(g32, bits, k)
+        comp.append(c)
+        new_err.append(g32 - _dequantize_leaf(c))
+    return (jax.tree.unflatten(treedef, comp),
+            jax.tree.unflatten(treedef, new_err))
+
+
+def decompress_tree(comp):
+    return jax.tree.map(_dequantize_leaf, comp,
+                        is_leaf=lambda x: isinstance(x, CompressedLeaf))
+
+
+def init_error_feedback(grads_like):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def compression_ratio(bits: int) -> float:
+    """Wire-byte ratio vs bf16 gradients (scales amortize to ~0)."""
+    return 16.0 / bits
+
+
+def make_compressed_psum(axis: str, bits: int):
+    """fn(grads, key) → mean over ``axis`` with int-``bits`` wire format.
+
+    Must run inside shard_map-manual context for ``axis`` (see
+    launch/train.py); implemented as all_gather of codes + scales, dequantize,
+    mean — exact mean of the quantized per-member terms (unbiased for the true
+    mean by C1 linearity).
+    """
+
+    def psum_compressed(grads, key):
+        comp, _ = compress_tree(grads, bits, key)
+
+        def reduce_leaf(c: CompressedLeaf):
+            codes_all = jax.lax.all_gather(c.codes, axis)      # (P, …)
+            scales_all = jax.lax.all_gather(c.scale, axis)     # (P,)
+            vals = codes_all.astype(jnp.float32) * scales_all.reshape(
+                (-1,) + (1,) * c.codes.ndim)
+            return vals.mean(axis=0)
+
+        return jax.tree.map(reduce_leaf, comp,
+                            is_leaf=lambda x: isinstance(x, CompressedLeaf))
+
+    return psum_compressed

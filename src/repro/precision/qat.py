@@ -1,0 +1,204 @@
+"""C5 — model quantization for deep nets (ZipML §3.3), LM-scale.
+
+Two storages for the ZipML weight channel:
+
+* ``quantize_param_tree(params, bits)`` — *int storage*: every matmul weight
+  becomes {w_q: int8 codes, w_scale: fp32 per-out-channel}. layers.dense
+  dequantizes on the fly. This is the serving / dry-run format — HBM weight
+  bytes drop 2×/4× (the paper's SampleStore compression mapped to TPU HBM).
+  With ``optimal=True`` the codes live on variance-optimal levels (C4 DP,
+  fitted per tensor on a sample of entries) instead of the uniform grid —
+  the §3.3 "Optimal5 beats XNOR5" configuration.
+
+* ``fake_quant_tree(params, bits, key)`` — *QAT fake-quant* with the straight-
+  through estimator: forward sees quantized values, backward passes through.
+  Used inside the train step (weights stay bf16 at rest; the quantization
+  noise is part of training, matching XNOR-Net-style min_W l(Q(W)) ).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import optimal as opt_mod
+from repro.core.quantize import quantize_to_levels
+
+
+def _is_weight(path: tuple) -> bool:
+    # quantize matmul weights only: 2-D+ tensors named 'w' or 'table'
+    last = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+    return last == "w"  # embedding tables stay bf16 (per-row scale gathers
+    # would dominate; tables are a small share of weight bytes here)
+
+
+def _int_quantize_weight(w: jax.Array, bits: int) -> dict:
+    """Per-out-channel symmetric int quantization. w: (..., d_in, d_out)."""
+    w32 = w.astype(jnp.float32)
+    qmax = float(2 ** (bits - 1) - 1)
+    absmax = jnp.max(jnp.abs(w32), axis=-2, keepdims=True)     # per out-channel
+    scale = jnp.where(absmax == 0, 1.0, absmax / qmax)
+    codes = jnp.clip(jnp.round(w32 / scale), -qmax, qmax).astype(jnp.int8)
+    return {"w_q": codes, "w_scale": scale.astype(jnp.float32)}
+
+
+def _optimal_quantize_weight(w: jax.Array, bits: int, sample: int = 65536) -> dict:
+    """C4+C5: codes snapped to the per-tensor variance-optimal symmetric level
+    set (fitted on |w| with the discretized DP), stored as int8 level indices
+    with a dense level table. Wins over the uniform grid exactly when the
+    weight distribution is far from uniform — always, for trained nets."""
+    w_np = np.asarray(w.astype(jnp.float32)).ravel()
+    if w_np.size > sample:
+        rng = np.random.default_rng(0)
+        w_np = rng.choice(w_np, sample, replace=False)
+    s = 2 ** (bits - 1) - 1
+    hi = float(np.abs(w_np).max()) or 1.0
+    lv = opt_mod.optimal_levels_discretized(np.abs(w_np) / hi, s, M=256) * hi
+    levels = jnp.asarray(np.concatenate([-lv[::-1], lv[1:]]), jnp.float32)
+    codes, _ = quantize_to_levels(w.astype(jnp.float32), levels, key=None)
+    return {"w_lvl_codes": codes.astype(jnp.int16), "w_levels": levels}
+
+
+def quantize_param_tree(params, bits: int = 8, optimal: bool = False):
+    """Convert every matmul weight to int storage (see layers.dense)."""
+
+    def convert(path, leaf):
+        if not _is_weight(path) or leaf.ndim < 2:
+            return leaf
+        if optimal:
+            return _optimal_quantize_weight(leaf, bits)
+        return _int_quantize_weight(leaf, bits)
+
+    converted = jax.tree_util.tree_map_with_path(convert, params)
+
+    # splice dict-replacements into parent dicts: {'w': {...}} → {...}
+    def splice(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                v = splice(v)
+                if isinstance(v, dict) and ("w_q" in v or "w_lvl_codes" in v) \
+                        and k == "w":
+                    out.update(v)
+                else:
+                    out[k] = v
+            return out
+        return node
+
+    return splice(converted)
+
+
+# ---------------------------------------------------------------------------
+# QAT straight-through fake quantization
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _ste(x, xq):
+    return xq
+
+
+def _ste_fwd(x, xq):
+    return xq, None
+
+
+def _ste_bwd(_, g):
+    return g, None
+
+
+_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def fake_quant(w: jax.Array, bits: int, key=None) -> jax.Array:
+    """Per-out-channel fake quantization with STE backward.
+
+    Stochastic rounding when ``key`` given (unbiased E[Q(w)]=w, C1), nearest
+    otherwise (XNOR-style deterministic).
+    """
+    w32 = w.astype(jnp.float32)
+    qmax = float(2 ** (bits - 1) - 1)
+    absmax = jax.lax.stop_gradient(jnp.max(jnp.abs(w32), axis=-2, keepdims=True))
+    scale = jnp.where(absmax == 0, 1.0, absmax / qmax)
+    t = w32 / scale
+    if key is None:
+        codes = jnp.round(t)
+    else:
+        lo = jnp.floor(t)
+        codes = lo + (jax.random.uniform(key, t.shape) < (t - lo)).astype(jnp.float32)
+    wq = (jnp.clip(codes, -qmax, qmax) * scale).astype(w.dtype)
+    return _ste(w, wq)
+
+
+def fake_quant_tree(params, bits: int, key=None):
+    """Apply fake_quant to every matmul weight (QAT train-step transform)."""
+    i = [0]
+
+    def go(path, leaf):
+        if not _is_weight(path) or leaf.ndim < 2:
+            return leaf
+        k = None
+        if key is not None:
+            i[0] += 1
+            k = jax.random.fold_in(key, i[0])
+        return fake_quant(leaf, bits, k)
+
+    return jax.tree_util.tree_map_with_path(go, params)
+
+
+# ---------------------------------------------------------------------------
+# C3 Q_m — "ship quantized": int8 codes through the FSDP all-gather
+# ---------------------------------------------------------------------------
+
+def _ship_quant_impl(w, bits: int, spec):
+    """Quantize per-shard, force the codes replicated (→ the all-gather moves
+    int8), dequantize locally. The wire format of the model channel drops
+    4×/8× vs f32/bf16 — the paper's Q_m applied to the FSDP weight gather.
+
+    Both sides of the reshard are pinned: codes constrained to the weight's
+    own sharding first (compute stays local), then to replicated (the gather
+    happens on the int8 tensor, not on the f32-legalized weight).
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.models.layers import shard_hint
+    qmax = float(2 ** (bits - 1) - 1)
+    w32 = w.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(w32), axis=-2, keepdims=True)  # per out-channel
+    scale = jnp.where(absmax == 0, 1.0, absmax / qmax)
+    codes = jnp.clip(jnp.round(w32 / scale), -qmax, qmax).astype(jnp.int8)
+    if spec is not None:
+        codes = shard_hint(codes, spec)               # pin: local quantize
+    codes = jax.lax.optimization_barrier(codes)
+    rep = P(*([None] * w.ndim))
+    codes = shard_hint(codes, rep)                    # pin: int8 all-gather
+    scale = shard_hint(scale, rep)
+    return (codes.astype(jnp.bfloat16) * scale.astype(jnp.bfloat16)).astype(w.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def ship_quant(w, bits: int, spec=None):
+    return _ship_quant_impl(w, bits, spec)
+
+
+def _sq_fwd(w, bits, spec):
+    return _ship_quant_impl(w, bits, spec), None
+
+
+def _sq_bwd(bits, spec, _, g):
+    return (g,)   # STE: the master weight sees the full gradient
+
+
+ship_quant.defvjp(_sq_fwd, _sq_bwd)
+
+
+def ship_quant_tree(params, bits: int):
+    """Apply ship_quant to every large matmul weight (specs from the
+    launcher's sharding rules, so the local-quantize pin matches reality)."""
+    from repro.launch.sharding import param_spec
+
+    def go(path, leaf):
+        if not _is_weight(path) or leaf.ndim < 2 or leaf.size < (1 << 16):
+            return leaf
+        return ship_quant(leaf, bits, param_spec(path, leaf))
+
+    return jax.tree_util.tree_map_with_path(go, params)

@@ -1,0 +1,196 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train step
+on CPU, asserting output shapes and NaN-freeness. Plus decode-path checks."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _batch(cfg, batch=B, seq=S):
+    ktok = jax.random.fold_in(KEY, 1)
+    tokens = jax.random.randint(ktok, (batch, seq), 0, cfg.vocab_size)
+    targets = jnp.roll(tokens, -1, axis=1)
+    vis = None
+    if cfg.family == "vlm":
+        vis = jax.random.normal(jax.random.fold_in(KEY, 2),
+                                (batch, cfg.n_vis_tokens, cfg.d_model), jnp.float32)
+    return tokens, targets, vis
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = configs.get_reduced(arch)
+    params = T.init_params(KEY, cfg)
+    tokens, targets, vis = _batch(cfg)
+
+    h = T.forward(params, tokens, cfg, vision_tokens=vis)
+    assert h.shape == (B, S, cfg.d_model)
+    assert not bool(jnp.isnan(h.astype(jnp.float32)).any())
+
+    def loss(p):
+        return T.loss_fn(p, tokens, targets, cfg, vision_tokens=vis)
+
+    loss0, grads = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(loss0))
+    # a correct next-token model at init should be near log(vocab)
+    assert float(loss0) < np.log(cfg.vocab_size) * 1.5
+    flat, _ = jax.tree.flatten(grads)
+    assert all(bool(jnp.isfinite(g.astype(jnp.float32)).all()) for g in flat)
+    # small gd step reduces loss on the same batch (sanity of gradient direction)
+    lr = 0.02
+    params2 = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    loss1 = float(loss(params2))
+    assert loss1 < float(loss0) + 1e-3, (loss1, float(loss0))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_decode_step(arch):
+    cfg = configs.get_reduced(arch)
+    params = T.init_params(KEY, cfg)
+    tokens, _, vis = _batch(cfg)
+    state = T.init_decode_state(cfg, B, smax=S, params=params, vision_tokens=vis)
+    tok = tokens[:, :1]
+    logits, state = T.decode_step(params, state, tok, cfg)
+    assert logits.shape == (B, 1, cfg.vocab_padded)  # pad tail is masked
+    assert bool(jnp.isfinite(logits).all())
+    # second step advances the counter and stays finite
+    logits2, state = T.decode_step(params, state, tok, cfg)
+    assert bool(jnp.isfinite(logits2).all())
+    assert int(state.step) == 2
+
+
+@pytest.mark.parametrize("arch", ["gemma-2b", "mixtral-8x7b", "mamba2-780m",
+                                  "zamba2-2.7b"])
+def test_decode_matches_forward(arch):
+    """Greedy decode logits ≈ teacher-forced forward logits position-by-position.
+
+    This pins the KV-cache/ring-buffer/SSM-state bookkeeping to the chunked
+    training attention path.
+    """
+    # fp32: this pins *bookkeeping* (cursor/ring/state update), not numerics —
+    # bf16 accumulation-order noise would otherwise dominate the comparison.
+    cfg = configs.get_reduced(arch, dtype=jnp.float32)
+    if cfg.window:
+        cfg = configs.get_reduced(arch, window=S, dtype=jnp.float32)
+    params = T.init_params(KEY, cfg)
+    tokens, _, vis = _batch(cfg, batch=1, seq=8)
+
+    h = T.forward(params, tokens, cfg, vision_tokens=vis)
+    full_logits = T._readout(params, cfg, h)  # (1, 8, V)
+
+    state = T.init_decode_state(cfg, 1, smax=8, params=params, vision_tokens=vis)
+    outs = []
+    for t in range(8):
+        lg, state = T.decode_step(params, state, tokens[:, t:t + 1], cfg)
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_kv_cache_quantized_decode():
+    cfg = configs.get_reduced("granite-3-8b",
+                              precision=T.PrecisionPlan(kv_bits=8))
+    params = T.init_params(KEY, cfg)
+    tokens, _, _ = _batch(cfg)
+    state = T.init_decode_state(cfg, B, smax=S)
+    assert state.layers.k.dtype == jnp.int8
+    logits, state = T.decode_step(params, state, tokens[:, :1], cfg)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_int8_weight_storage_forward():
+    """ZipML weight channel: int8 codes + scales give ≈ bf16 forward."""
+    from repro.precision.qat import quantize_param_tree
+    cfg = configs.get_reduced("granite-3-8b")
+    params = T.init_params(KEY, cfg)
+    tokens, _, _ = _batch(cfg)
+    h_ref = T.forward(params, tokens, cfg)
+    qparams = quantize_param_tree(params, bits=8)
+    h_q = T.forward(qparams, tokens, cfg)
+    err = float(jnp.mean(jnp.abs(h_q.astype(jnp.float32) - h_ref.astype(jnp.float32))))
+    ref = float(jnp.mean(jnp.abs(h_ref.astype(jnp.float32)))) + 1e-9
+    assert err / ref < 0.15, err / ref
+
+
+def test_param_counts_match_analytic():
+    for arch in ("gemma-2b", "mamba2-780m", "mixtral-8x7b"):
+        cfg = configs.get_reduced(arch)
+        params = T.init_params(KEY, cfg)
+        actual = sum(int(np.prod(a.shape)) for a in jax.tree.leaves(params))
+        # analytic count covers matmuls + embedding; small extras (norms, conv,
+        # biases, dt/a/d vectors) should keep it within 10%
+        analytic = cfg.n_params()
+        assert abs(actual - analytic) / actual < 0.15, (arch, actual, analytic)
+
+
+@pytest.mark.parametrize("arch", ["gemma-7b", "mixtral-8x7b", "mamba2-780m",
+                                  "zamba2-2.7b", "llama-3.2-vision-11b"])
+def test_prefill_then_decode_matches_forward(arch):
+    """prefill(prompt) + decode_step(next) == teacher-forced forward (fp32)."""
+    cfg = configs.get_reduced(arch, dtype=jnp.float32)
+    params = T.init_params(KEY, cfg)
+    tokens, _, vis = _batch(cfg, batch=1, seq=8)
+
+    h = T.forward(params, tokens, cfg, vision_tokens=vis)
+    full_logits = T._readout(params, cfg, h)
+
+    pre_logits, state = T.prefill(params, tokens[:, :7], cfg,
+                                  vision_tokens=vis, pad_to=8)
+    np.testing.assert_allclose(np.asarray(pre_logits, np.float32),
+                               np.asarray(full_logits[:, 6], np.float32),
+                               rtol=2e-3, atol=2e-3)
+    lg, state = T.decode_step(params, state, tokens[:, 7:8], cfg)
+    np.testing.assert_allclose(np.asarray(lg[:, 0], np.float32),
+                               np.asarray(full_logits[:, 7], np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_kv_cache_int4_packed_decode():
+    """H2 follow-on: packed int4 KV (two codes/byte, uint8 storage) decodes
+    finitely and the cache is half the int8 size."""
+    cfg4 = configs.get_reduced("granite-3-8b", precision=T.PrecisionPlan(kv_bits=4))
+    cfg8 = configs.get_reduced("granite-3-8b", precision=T.PrecisionPlan(kv_bits=8))
+    s4 = T.init_decode_state(cfg4, B, smax=S)
+    s8 = T.init_decode_state(cfg8, B, smax=S)
+    assert s4.layers.k.dtype == jnp.uint8
+    assert s4.layers.k.size * 2 == s8.layers.k.size * 1 or \
+        s4.layers.k.shape[-1] * 2 == s8.layers.k.shape[-1]
+    params = T.init_params(KEY, cfg4)
+    tokens, _, _ = _batch(cfg4)
+    lg, _ = T.decode_step(params, s4, tokens[:, :1], cfg4)
+    assert bool(jnp.isfinite(lg).all())
+
+
+def test_kv_int4_quality_close_to_int8():
+    """int4 KV decode logits stay close to bf16-cache logits (fp32 model)."""
+    import numpy as _np
+    base = configs.get_reduced("gemma-7b", dtype=jnp.float32)
+    params = T.init_params(KEY, base)
+    tokens, _, _ = _batch(base, batch=1, seq=8)
+    outs = {}
+    for bits in (0, 8, 4):
+        cfg = configs.get_reduced("gemma-7b", dtype=jnp.float32,
+                                  precision=T.PrecisionPlan(kv_bits=bits))
+        state = T.init_decode_state(cfg, 1, smax=8)
+        o = []
+        for t in range(8):
+            lg, state = T.decode_step(params, state, tokens[:, t:t+1], cfg)
+            o.append(_np.asarray(lg[:, 0], _np.float32))
+        outs[bits] = _np.stack(o, 1)
+    err8 = _np.abs(outs[8] - outs[0]).mean()
+    err4 = _np.abs(outs[4] - outs[0]).mean()
+    scale = _np.abs(outs[0]).mean() + 1e-9
+    assert err8 / scale < 0.05, err8 / scale
+    # int4 with per-(token,head) scales: ~25% relative on this tiny head_dim;
+    # per-64-channel group scales would tighten it (recorded follow-on)
+    assert err4 / scale < 0.35, err4 / scale

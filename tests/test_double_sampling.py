@@ -1,0 +1,112 @@
+"""Tests for C2/C3 (double sampling, e2e) and C6 (Chebyshev gradients)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import chebyshev as ch
+from repro.core import double_sampling as ds
+import repro.core.quantize as qz
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mc_gradient(grad_fn, n_mc=4096):
+    keys = jax.random.split(KEY, n_mc)
+    gs = jax.vmap(grad_fn)(keys)
+    return gs.mean(0), gs.std(0) / np.sqrt(n_mc)
+
+
+class TestDoubleSampling:
+    def setup_method(self):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(42), 3)
+        self.a = jax.random.normal(k1, (8, 16))
+        self.x = jax.random.normal(k2, (16,)) * 2.0
+        self.b = jax.random.normal(k3, (8,))
+        self.g_full = ds.lsq_gradient_fullprec(self.x, self.a, self.b)
+
+    def test_double_sampling_unbiased(self):
+        """E[g_ds] = g_full — the paper's central claim (§2.2)."""
+        mean, se = _mc_gradient(
+            lambda k: ds.lsq_gradient_double_sampling(self.x, self.a, self.b, 3, k)
+        )
+        np.testing.assert_array_less(np.abs(mean - self.g_full), 5 * se + 1e-3)
+
+    def test_naive_quantization_biased(self):
+        """App. B.1: naive single-quantization estimator has bias D_a·x ≠ 0."""
+        mean, se = _mc_gradient(
+            lambda k: ds.lsq_gradient_naive_quant(self.x, self.a, self.b, 3, k)
+        )
+        bias = np.abs(np.asarray(mean - self.g_full))
+        # bias must be statistically significant on at least some coordinates
+        assert (bias > 6 * np.asarray(se)).sum() >= 4
+
+    def test_e2e_unbiased(self):
+        """App. E: model+gradient quantization keeps the estimator unbiased."""
+        cfg = ds.DSConfig(s_sample=7, s_model=15, s_grad=15)
+        mean, se = _mc_gradient(
+            lambda k: ds.lsq_gradient_e2e(self.x, self.a, self.b, cfg, k), n_mc=8192
+        )
+        np.testing.assert_array_less(np.abs(mean - self.g_full), 5 * se + 5e-3)
+
+    def test_variance_shrinks_with_bits(self):
+        """Lemma 2 / Cor. 1: variance ~ 1/s² in the quantization term."""
+        var = {}
+        for s in (1, 3, 15):
+            keys = jax.random.split(KEY, 2048)
+            gs = jax.vmap(
+                lambda k: ds.lsq_gradient_double_sampling(self.x, self.a, self.b, s, k)
+            )(keys)
+            var[s] = float(jnp.mean(jnp.sum((gs - self.g_full) ** 2, -1)))
+        assert var[15] < var[3] < var[1]
+
+    def test_polynomial_estimator_unbiased(self):
+        """§4.1: Q(P) is unbiased for P(aᵀx) for any polynomial."""
+        coeffs = jnp.asarray([0.5, -1.0, 0.25, 0.1])  # degree 3
+        a = self.a[:4]
+        truth = jnp.polyval(coeffs[::-1], a @ self.x)
+        keys = jax.random.split(KEY, 16384)
+        est = jax.vmap(lambda k: ds.polynomial_estimator(coeffs, a, self.x, 7, k))(keys)
+        se = est.std(0) / np.sqrt(len(keys)) + 1e-6
+        np.testing.assert_array_less(np.abs(est.mean(0) - truth), 6 * se + 1e-2)
+
+    def test_storage_overhead_log2k(self):
+        """§2.2: k samples of the same base cost log2(k) extra bits; check that
+        the two double-sampling draws differ by at most one level step."""
+        a = self.a
+        scale = qz.row_scale(a)
+        q1, q2 = ds.double_sample_pair(a, 7, KEY, scale=scale)
+        diff_levels = jnp.abs(q1 - q2) / (scale / 7)
+        assert float(diff_levels.max()) <= 1.0 + 1e-4
+
+
+class TestChebyshev:
+    def test_sigmoid_approx_error(self):
+        for degree, tol in ((7, 0.05), (15, 0.01)):
+            coeffs = ch.sigmoid_prime_coeffs(degree, R=4.0)
+            z = np.linspace(-4, 4, 201)
+            approx = ch.poly_eval(coeffs, z)
+            exact = -1.0 / (1.0 + np.exp(z))
+            assert np.max(np.abs(approx - exact)) < tol, degree
+
+    def test_step_approx_outside_gap(self):
+        coeffs = ch.step_coeffs(31, R=4.0, delta=0.25)
+        z = np.linspace(-4, 4, 801)
+        mask = np.abs(z) > 0.5
+        approx = ch.poly_eval(coeffs, z)
+        exact = (z >= 0).astype(float)
+        assert np.max(np.abs(approx[mask] - exact[mask])) < 0.2
+
+    def test_quantized_poly_gradient_matches_poly(self):
+        """Protocol of §4.2: E[g] ≈ mean_b b·P(b aᵀx)·a (bias only from quant
+        of the outer sample = 0, poly estimator unbiased)."""
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(7), 3)
+        a = jax.random.normal(k1, (4, 6)) * 0.5
+        x = jax.random.normal(k2, (6,))
+        b = jnp.sign(jax.random.normal(k3, (4,)))
+        coeffs = jnp.asarray(ch.sigmoid_prime_coeffs(5, R=4.0), jnp.float32)
+        truth = (a * (b * jnp.polyval(coeffs[::-1], b * (a @ x)))[:, None]).mean(0)
+        keys = jax.random.split(KEY, 30000)
+        est = jax.vmap(lambda k: ch.quantized_poly_gradient(coeffs, x, a, b, 15, k))(keys)
+        se = est.std(0) / np.sqrt(len(keys)) + 1e-6
+        np.testing.assert_array_less(np.abs(est.mean(0) - truth), 6 * se + 2e-2)

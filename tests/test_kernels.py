@@ -1,0 +1,114 @@
+"""Per-kernel allclose tests vs the ref.py oracles, swept over shapes/dtypes
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels import qmm as qmm_mod
+from repro.kernels import ssd as ssd_mod
+from repro.kernels import stoch_quant as sq_mod
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestStochQuant:
+    @pytest.mark.parametrize("shape", [(8, 128), (256, 512), (300, 700), (1, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("s", [1, 7, 127])
+    def test_matches_ref_bit_exact(self, shape, dtype, s):
+        x = (jax.random.normal(KEY, shape) * 3).astype(dtype)
+        rand = jax.random.bits(jax.random.fold_in(KEY, 1), shape, jnp.uint32)
+        scale = ref.row_absmax_ref(x)
+        got = sq_mod.stoch_quant(x, rand, scale, s=s, interpret=True)
+        want = ref.stoch_quant_ref(x, rand, scale, s=s)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("shape", [(64, 256), (129, 640)])
+    def test_row_absmax(self, shape):
+        x = jax.random.normal(KEY, shape)
+        got = sq_mod.row_absmax(x, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref.row_absmax_ref(x)),
+                                   rtol=1e-6)
+
+    def test_unbiased_end_to_end(self):
+        x = jax.random.normal(KEY, (4, 128))
+        s = 7
+        keys = jax.random.split(KEY, 2048)
+        deqs = jax.vmap(
+            lambda k: ops.dequantize_rows(*ops.quantize_rows(x, s, k), s))(keys)
+        se = deqs.std(0) / np.sqrt(len(keys)) + 1e-6
+        np.testing.assert_array_less(np.abs(deqs.mean(0) - x), 6 * se + 1e-3)
+
+
+class TestQMM:
+    @pytest.mark.parametrize("mkn", [(128, 256, 128), (256, 512, 256),
+                                     (384, 1024, 512), (100, 300, 200)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, mkn, dtype):
+        m, k, n = mkn
+        x = (jax.random.normal(KEY, (m, k)) * 0.5).astype(dtype)
+        w = jax.random.normal(jax.random.fold_in(KEY, 2), (k, n))
+        qmax = 127.0
+        scale = jnp.max(jnp.abs(w), axis=0, keepdims=True) / qmax
+        codes = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(jnp.int8)
+        got = np.asarray(ops.quantized_matmul(x, codes, scale))
+        want = np.asarray(ref.qmm_ref(x.astype(jnp.float32), codes, scale))
+        # normalized RMS: pointwise relative error is meaningless where y≈0
+        nrms = np.sqrt(((got - want) ** 2).mean()) / (np.sqrt((want ** 2).mean()) + 1e-9)
+        assert nrms < (1e-2 if dtype == jnp.bfloat16 else 1e-5), nrms
+
+    def test_blocked_equals_unblocked(self):
+        m, k, n = 256, 1024, 256
+        x = jax.random.normal(KEY, (m, k), jnp.float32)
+        codes = jax.random.randint(jax.random.fold_in(KEY, 3), (k, n), -127, 128
+                                   ).astype(jnp.int8)
+        scale = jnp.abs(jax.random.normal(KEY, (1, n))) * 0.01 + 1e-3
+        small = qmm_mod.qmm(x, codes, scale, bm=128, bk=128, bn=128, interpret=True)
+        big = qmm_mod.qmm(x, codes, scale, bm=256, bk=1024, bn=256, interpret=True)
+        # fp32 K-accumulation order differs between blockings
+        np.testing.assert_allclose(np.asarray(small), np.asarray(big),
+                                   rtol=1e-4, atol=1e-3)
+
+
+class TestSSD:
+    @pytest.mark.parametrize("dims", [(2, 4, 32, 4, 8, 16), (1, 2, 64, 8, 16, 32)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, dims, dtype):
+        b, nc, L, h, p, n = dims
+        k = jax.random.fold_in(KEY, 7)
+        xh = (jax.random.normal(k, (b, nc, L, h, p)) * 0.5).astype(dtype)
+        dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 1),
+                                               (b, nc, L, h)) - 1.0)
+        a_log = jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32))
+        logdec = dt * (-jnp.exp(a_log))[None, None, None, :]
+        bm = jax.random.normal(jax.random.fold_in(k, 2), (b, nc, L, n)) * 0.3
+        cm = jax.random.normal(jax.random.fold_in(k, 3), (b, nc, L, n)) * 0.3
+        y, state = ssd_mod.ssd_chunk_scan(xh, dt, logdec, bm, cm, interpret=True)
+        y_ref, state_ref = ref.ssd_chunk_scan_ref(xh, dt, logdec, bm, cm)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(y_ref, np.float32),
+                                   rtol=tol, atol=tol)
+        np.testing.assert_allclose(np.asarray(state), np.asarray(state_ref),
+                                   rtol=tol, atol=tol)
+
+    def test_kernel_matches_model_ssd(self):
+        """ops.ssd_chunked_kernel == models.ssm.ssd_chunked on the same inputs."""
+        from repro.models.ssm import SSMSpec, ssd_chunked
+        b, s, h, p, n = 2, 128, 4, 16, 32
+        spec = SSMSpec(d_model=h * p // 2, d_state=n, head_dim=p, chunk=32)
+        k = jax.random.fold_in(KEY, 9)
+        xh = jax.random.normal(k, (b, s, h, p), jnp.float32) * 0.5
+        dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 1), (b, s, h)))
+        a_log = jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32))
+        bm = jax.random.normal(jax.random.fold_in(k, 2), (b, s, 1, n)) * 0.3
+        cm = jax.random.normal(jax.random.fold_in(k, 3), (b, s, 1, n)) * 0.3
+        y_model, st_model = ssd_chunked(xh, dt, a_log, bm, cm, spec)
+        y_kern, st_kern = ops.ssd_chunked_kernel(
+            xh, dt, a_log, bm.reshape(b, s, n), cm.reshape(b, s, n), chunk=32)
+        np.testing.assert_allclose(np.asarray(y_kern), np.asarray(y_model),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(st_kern), np.asarray(st_model),
+                                   rtol=1e-4, atol=1e-4)

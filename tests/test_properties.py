@@ -1,0 +1,162 @@
+"""Hypothesis property-based tests for the system's core invariants.
+
+Each property is the load-bearing guarantee of a subsystem:
+  * quantizer unbiasedness & boundedness over arbitrary inputs/levels (C1)
+  * DP-optimal levels never lose to uniform, monotone in s (C4)
+  * double-sampling estimator unbiasedness for arbitrary (a, x, b) (C2)
+  * gradient compression roundtrip bound & error-feedback telescoping (C3)
+  * sharding rules always produce divisible, mesh-valid specs
+  * data pipeline determinism under arbitrary cursors
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+import repro.core.quantize as qz
+from repro.core import optimal
+from repro.core.double_sampling import (lsq_gradient_double_sampling,
+                                        lsq_gradient_fullprec)
+from repro.data.pipeline import Cursor, TokenStream, TokenStreamConfig
+from repro.precision import gradcomp
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def _vectors(draw, max_n=48):
+    n = draw(st.integers(1, max_n))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = draw(st.floats(1e-3, 1e3))
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, n), jnp.float32)
+
+
+class TestQuantizerProperties:
+    @settings(**SETTINGS)
+    @given(v=_vectors(), s=st.sampled_from([1, 2, 3, 7, 15, 127]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_roundtrip_within_one_interval(self, v, s, seed):
+        q = qz.stochastic_quantize(v, s, jax.random.PRNGKey(seed))
+        width = qz.row_scale(v) / s
+        assert float(jnp.max(jnp.abs(q - v))) <= float(width) + 1e-4
+
+    @settings(**SETTINGS)
+    @given(v=_vectors(max_n=16), s=st.sampled_from([1, 3, 7]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_unbiased(self, v, s, seed):
+        keys = jax.random.split(jax.random.PRNGKey(seed), 1500)
+        qs = jax.vmap(lambda k: qz.stochastic_quantize(v, s, k))(keys)
+        se = qs.std(0) / np.sqrt(1500) + 1e-6
+        assert (np.abs(np.asarray(qs.mean(0) - v)) < 6 * se
+                + 1e-3 * float(qz.row_scale(v))).all()
+
+    @settings(**SETTINGS)
+    @given(v=_vectors(), s=st.sampled_from([1, 3, 31]))
+    def test_variance_bound(self, v, s):
+        n = v.shape[0]
+        tv = float(qz.tv_variance(v, s, scale=qz.row_scale(v, "l2")))
+        bound = min(n / s**2, np.sqrt(n) / s) * float(jnp.sum(v * v))
+        assert tv <= bound + 1e-4 * bound + 1e-6
+
+
+class TestOptimalLevelProperties:
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1), s=st.sampled_from([2, 3, 7]),
+           n=st.integers(10, 300))
+    def test_never_worse_than_uniform(self, seed, s, n):
+        xs = np.clip(np.random.default_rng(seed).beta(0.7, 2.0, n), 0, 1)
+        lv = optimal.optimal_levels_discretized(xs, s, M=64)
+        assert (optimal.mean_variance(xs, lv)
+                <= optimal.mean_variance(xs, optimal.uniform_levels(s)) + 1e-12)
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_monotone_in_levels(self, seed):
+        xs = np.random.default_rng(seed).uniform(0, 1, 200)
+        mvs = [optimal.mean_variance(
+            xs, optimal.optimal_levels_discretized(xs, s, M=64))
+            for s in (2, 4, 8)]
+        assert mvs[0] >= mvs[1] >= mvs[2] - 1e-12
+
+
+class TestDoubleSamplingProperties:
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 24),
+           batch=st.integers(1, 8))
+    def test_unbiased_for_any_instance(self, seed, n, batch):
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.normal(0, 1, (batch, n)), jnp.float32)
+        x = jnp.asarray(rng.normal(0, 2, n), jnp.float32)
+        b = jnp.asarray(rng.normal(0, 1, batch), jnp.float32)
+        truth = lsq_gradient_fullprec(x, a, b)
+        keys = jax.random.split(jax.random.PRNGKey(seed), 2000)
+        gs = jax.vmap(lambda k: lsq_gradient_double_sampling(x, a, b, 3, k))(keys)
+        se = np.asarray(gs.std(0)) / np.sqrt(2000) + 1e-6
+        assert (np.abs(np.asarray(gs.mean(0) - truth)) < 6 * se + 1e-2).all()
+
+
+class TestGradCompressionProperties:
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([2, 4, 8]),
+           n=st.integers(1, 64))
+    def test_roundtrip_bound(self, seed, bits, n):
+        g = {"x": jnp.asarray(np.random.default_rng(seed).normal(0, 1, n),
+                              jnp.float32)}
+        comp, _ = gradcomp.compress_tree(g, bits, jax.random.PRNGKey(seed))
+        deq = gradcomp.decompress_tree(comp)
+        step = float(jnp.max(jnp.abs(g["x"]))) / (2 ** (bits - 1) - 1)
+        assert float(jnp.max(jnp.abs(deq["x"] - g["x"]))) <= step + 1e-5
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_error_feedback_residual_bounded(self, seed):
+        rng = np.random.default_rng(seed)
+        g = {"x": jnp.asarray(rng.normal(0, 0.01, 8), jnp.float32)}
+        err = gradcomp.init_error_feedback(g)
+        for i in range(30):
+            _, err = gradcomp.compress_tree(g, 2, jax.random.PRNGKey(i), error=err)
+        # EF residual stays bounded by one quantization step of the running sum
+        assert float(jnp.max(jnp.abs(err["x"]))) < 1.0
+
+
+class TestShardingRuleProperties:
+    @settings(**SETTINGS)
+    @given(arch=st.sampled_from(["gemma-2b", "mixtral-8x7b", "mamba2-780m",
+                                 "zamba2-2.7b"]))
+    def test_specs_divide_mesh(self, arch):
+        """Every param spec must divide the production mesh axis sizes."""
+        from repro import configs
+        from repro.launch.sharding import param_spec, _path_str
+        from repro.models import transformer as T
+        sizes = {"data": 16, "model": 16}
+        cfg = configs.get_config(arch)
+        params = T.param_specs(cfg)
+
+        def check(path, leaf):
+            spec = param_spec(path, leaf)
+            for dim, part in zip(leaf.shape, spec):
+                if part is None:
+                    continue
+                parts = part if isinstance(part, tuple) else (part,)
+                total = int(np.prod([sizes[p] for p in parts]))
+                assert dim % total == 0, (_path_str(path), leaf.shape, spec)
+
+        jax.tree_util.tree_map_with_path(check, params)
+
+
+class TestPipelineProperties:
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 1000), step=st.integers(0, 50),
+           vocab=st.integers(10, 1000))
+    def test_cursor_determinism(self, seed, step, vocab):
+        cfg = TokenStreamConfig(vocab_size=vocab, seq_len=8, global_batch=2,
+                                seed=seed)
+        s1 = TokenStream(cfg)
+        s1.skip_to(Cursor(step=step))
+        b1 = s1.next_batch()
+        s2 = TokenStream(cfg)
+        s2.skip_to(Cursor(step=step))
+        b2 = s2.next_batch()
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        assert b1["tokens"].max() < vocab

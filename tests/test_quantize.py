@@ -1,0 +1,169 @@
+"""Unit + property tests for core/quantize.py (C1) and core/optimal.py (C4)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import optimal
+import repro.core.quantize as qz
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestStochasticQuantize:
+    @pytest.mark.parametrize("s", [1, 3, 7, 15, 127])
+    @pytest.mark.parametrize("n", [1, 17, 256])
+    def test_unbiased(self, s, n):
+        """E[Q(v,s)] = v (Lemma 6) — Monte-Carlo over many keys."""
+        v = jax.random.normal(jax.random.PRNGKey(1), (n,)) * 3.0
+        keys = jax.random.split(KEY, 2048)
+        qs = jax.vmap(lambda k: qz.stochastic_quantize(v, s, k))(keys)
+        mean = qs.mean(axis=0)
+        se = qs.std(axis=0) / np.sqrt(len(keys)) + 1e-6
+        np.testing.assert_array_less(np.abs(mean - v), 5 * se + 1e-4)
+
+    @pytest.mark.parametrize("s", [1, 3, 15])
+    def test_levels_are_grid(self, s):
+        v = jax.random.normal(KEY, (64,))
+        q = qz.quantize(v, s, KEY)
+        assert q.codes.min() >= -s and q.codes.max() <= s
+        deq = q.dequantize()
+        grid = jnp.arange(-s, s + 1) / s * q.scale
+        dists = jnp.min(jnp.abs(deq[:, None] - grid[None, :]), axis=1)
+        assert float(dists.max()) < 1e-5
+
+    def test_roundtrip_within_one_level(self):
+        v = jax.random.normal(KEY, (128,))
+        s = 15
+        deq = qz.stochastic_quantize(v, s, KEY)
+        width = qz.row_scale(v) / s
+        assert float(jnp.max(jnp.abs(deq - v))) <= float(width) + 1e-5
+
+    def test_variance_bound_lemma2(self):
+        """TV_s(v) <= min(n/s², √n/s)·||v||² (Lemma 2)."""
+        for s in (1, 3, 7, 31):
+            for n in (8, 64, 512):
+                v = jax.random.normal(jax.random.fold_in(KEY, s * n), (n,))
+                tv = float(qz.tv_variance(v, s, scale=qz.row_scale(v, "l2")))
+                bound = min(n / s**2, np.sqrt(n) / s) * float(jnp.sum(v * v))
+                assert tv <= bound + 1e-5, (s, n, tv, bound)
+
+    def test_zero_vector(self):
+        q = qz.stochastic_quantize(jnp.zeros(8), 7, KEY)
+        np.testing.assert_allclose(np.asarray(q), 0.0, atol=1e-6)
+
+    def test_column_scaling_shared(self):
+        data = jax.random.normal(KEY, (100, 5)) * jnp.array([1, 10, 0.1, 5, 2.0])
+        cs = qz.column_scale(data)
+        assert cs.shape == (5,)
+        q = qz.stochastic_quantize(data, 15, KEY, scale=cs)
+        assert float(jnp.max(jnp.abs(q - data))) <= float(cs.max() / 15) + 1e-5
+
+    def test_nearest_rounding_is_deterministic(self):
+        v = jax.random.normal(KEY, (32,))
+        a = qz.quantize_nearest(v, 7).dequantize()
+        b = qz.quantize_nearest(v, 7).dequantize()
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestLevelQuantize:
+    def test_unbiased_on_levels(self):
+        levels = jnp.asarray([0.0, 0.1, 0.4, 0.75, 1.0])
+        v = jax.random.uniform(KEY, (50,))
+        keys = jax.random.split(KEY, 4096)
+        vals = jax.vmap(lambda k: qz.quantize_to_levels(v, levels, k)[1])(keys)
+        mean = vals.mean(0)
+        se = vals.std(0) / np.sqrt(len(keys)) + 1e-6
+        np.testing.assert_array_less(np.abs(mean - v), 5 * se + 1e-4)
+
+    def test_output_in_level_set(self):
+        levels = jnp.asarray([0.0, 0.3, 0.9, 1.0])
+        v = jax.random.uniform(KEY, (100,))
+        codes, vals = qz.quantize_to_levels(v, levels, KEY)
+        assert set(np.unique(np.asarray(vals))) <= set(np.asarray(levels).tolist())
+        assert codes.max() <= 3
+
+
+class TestIntQuantize:
+    @pytest.mark.parametrize("bits", [4, 8])
+    def test_roundtrip_error(self, bits):
+        v = jax.random.normal(KEY, (64, 32))
+        it = qz.int_quantize(v, bits, axis=0)
+        err = jnp.abs(it.dequantize() - v)
+        step = it.scale  # one code step
+        assert float((err <= step + 1e-6).mean()) == 1.0
+
+    def test_stochastic_unbiased(self):
+        v = jax.random.normal(KEY, (16,))
+        keys = jax.random.split(KEY, 4096)
+        deqs = jax.vmap(lambda k: qz.int_quantize(v, 4, None, k).dequantize())(keys)
+        se = deqs.std(0) / np.sqrt(len(keys)) + 1e-6
+        np.testing.assert_array_less(np.abs(deqs.mean(0) - v), 5 * se + 1e-4)
+
+
+class TestOptimalLevels:
+    def test_exact_beats_uniform(self):
+        rng = np.random.default_rng(0)
+        xs = np.clip(rng.beta(0.5, 3.0, 400), 0, 1)  # skewed: uniform is bad
+        for s in (2, 3, 7):
+            opt = optimal.optimal_levels_exact(xs, s)
+            mv_opt = optimal.mean_variance(xs, opt)
+            mv_uni = optimal.mean_variance(xs, optimal.uniform_levels(s))
+            assert mv_opt <= mv_uni + 1e-12, (s, mv_opt, mv_uni)
+
+    def test_discretized_close_to_exact(self):
+        rng = np.random.default_rng(1)
+        xs = np.clip(rng.normal(0.5, 0.15, 500), 0, 1)
+        for s in (3, 7):
+            ex = optimal.mean_variance(xs, optimal.optimal_levels_exact(xs, s))
+            ap = optimal.mean_variance(xs, optimal.optimal_levels_discretized(xs, s, M=128))
+            assert ap <= ex * 1.25 + 1e-9  # Thm 2: O(1/Mk) gap
+
+    def test_2approx_guarantee(self):
+        rng = np.random.default_rng(2)
+        xs = np.clip(np.concatenate([rng.normal(0.2, 0.03, 200),
+                                     rng.normal(0.8, 0.05, 200)]), 0, 1)
+        for s in (3, 7):
+            ex = optimal.mean_variance(xs, optimal.optimal_levels_exact(xs, s))
+            ap = optimal.mean_variance(xs, optimal.optimal_levels_2approx(xs, s, gamma=1.0))
+            assert ap <= 2.0 * ex + 1e-9, (s, ap, ex)  # Thm 9 with γ=1
+
+    def test_levels_sorted_and_cover(self):
+        xs = np.random.default_rng(3).uniform(0, 1, 200)
+        lv = optimal.optimal_levels_discretized(xs, 7)
+        assert lv[0] == 0.0 and lv[-1] == 1.0
+        assert np.all(np.diff(lv) >= 0)
+
+    def test_bimodal_places_levels_at_modes(self):
+        rng = np.random.default_rng(4)
+        xs = np.clip(np.concatenate([rng.normal(0.15, 0.01, 300),
+                                     rng.normal(0.85, 0.01, 300)]), 0, 1)
+        lv = optimal.optimal_levels_exact(xs, 3)
+        # interior levels should hug the modes, not sit at uniform 1/3, 2/3
+        interior = lv[1:-1]
+        assert np.any(np.abs(interior - 0.15) < 0.05) or np.any(np.abs(interior - 0.85) < 0.05)
+
+    def test_fit_levels_symmetric(self):
+        x = np.random.default_rng(5).normal(0, 1, 1000)
+        lv = optimal.fit_levels(x, 8, symmetric=True)
+        np.testing.assert_allclose(lv, -lv[::-1], atol=1e-9)
+
+    def test_mean_variance_zero_when_levels_at_points(self):
+        xs = np.array([0.1, 0.5, 0.9])
+        lv = np.array([0.0, 0.1, 0.5, 0.9, 1.0])
+        assert optimal.mean_variance(xs, lv) < 1e-12
+
+
+def test_property_sweep_unbiasedness():
+    """Property: for random shapes/scales/levels, |MC mean − v| → 0."""
+    rng = np.random.default_rng(7)
+    for trial in range(5):
+        n = int(rng.integers(2, 40))
+        s = int(rng.choice([1, 3, 7, 15]))
+        v = jnp.asarray(rng.normal(0, rng.uniform(0.1, 5.0), n), jnp.float32)
+        keys = jax.random.split(jax.random.PRNGKey(trial), 3000)
+        qs = jax.vmap(lambda k: qz.stochastic_quantize(v, s, k))(keys)
+        err = np.abs(np.asarray(qs.mean(0) - v))
+        se = np.asarray(qs.std(0)) / np.sqrt(3000) + 1e-6
+        assert (err < 6 * se + 1e-3).all()
