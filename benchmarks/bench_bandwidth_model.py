@@ -12,11 +12,10 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.linear import Precision, make_dataset, train_linear
+from repro.core.linear import make_dataset
 from repro.data.pipeline import QuantizedSampleStore
 
 

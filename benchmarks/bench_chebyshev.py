@@ -4,7 +4,6 @@ matches the Chebyshev machinery.
 """
 from __future__ import annotations
 
-from repro.core.chebyshev import ChebGradConfig
 from repro.core.linear import Precision, eval_accuracy, make_dataset, train_linear
 
 

@@ -9,8 +9,6 @@ Paper claims validated:
 """
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core.linear import Precision, eval_accuracy, make_dataset, train_linear
 
 

@@ -11,7 +11,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import optimal
-from repro.core.linear import Precision, fit_feature_levels, make_dataset, train_linear
+from repro.core.linear import Precision, make_dataset, train_linear
 
 
 def variance_gain(ds, bits: int) -> float:

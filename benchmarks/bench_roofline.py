@@ -25,14 +25,12 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 import argparse
-import dataclasses
 import json
 import sys
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
@@ -254,7 +252,6 @@ def measure_cell(arch: str, shape_name: str, precision=None,
         bspec = sh.batch_spec(mesh, b)
         x1_sh = _named(mesh, P(bspec, None, None))
         state = jax.eval_shape(lambda: T.init_decode_state(cfg, b, smax=s))
-        c_sh = sh.cache_shardings(mesh, state, b)
         kvb = cfg.precision.kv_bits
 
         def one_layer_cache(tree):

@@ -5,16 +5,30 @@ validating the paper's claims. Roofline extraction (which needs the
 512-device placeholder env) lives in benchmarks/bench_roofline.py as its own
 entry point.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick | --smoke]
+
+``--smoke`` is the CI lane: tiny shapes, only the fast hardware-claim benches
+(bandwidth model + fused double sampling), and a ``BENCH_<name>.json`` file
+per bench (uploaded as a workflow artifact so the perf trajectory accumulates
+across PRs). ``--json-dir`` writes the same JSON files for any run.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
+import os
 import sys
 import time
 
 import numpy as np
+
+# allow `python benchmarks/run.py` (script mode) as well as `-m benchmarks.run`:
+# the bench modules are imported as `benchmarks.*`, so the repo root must be
+# importable regardless of how this file was invoked
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _REPO_ROOT not in sys.path:
+    sys.path.insert(0, _REPO_ROOT)
 
 BENCHES = [
     ("fig4_linear_convergence", "benchmarks.bench_linear_convergence"),
@@ -24,23 +38,36 @@ BENCHES = [
     ("fig7b_dl_quant", "benchmarks.bench_dl_quant"),
     ("fig9_chebyshev_negative", "benchmarks.bench_chebyshev"),
     ("fig12_refetch", "benchmarks.bench_refetch"),
+    ("ds_fused", "benchmarks.bench_ds_fused"),
 ]
+
+# fast, shape-independent claims only — what CI runs on every PR
+SMOKE_BENCHES = {"fig5_bandwidth_model", "ds_fused"}
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="reduced datasets/epochs (CI mode)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, fast benches only, write BENCH_*.json")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json-dir", default=None,
+                    help="write BENCH_<name>.json per bench here "
+                         "(default: cwd when --smoke)")
     args = ap.parse_args(argv)
+    quick = args.quick or args.smoke
+    json_dir = args.json_dir or ("." if args.smoke else None)
 
     all_checks = []
     for name, module in BENCHES:
         if args.only and args.only not in name:
             continue
+        if args.smoke and not args.only and name not in SMOKE_BENCHES:
+            continue
         t0 = time.time()
         mod = importlib.import_module(module)
-        rows = mod.run(quick=args.quick)
+        rows = mod.run(quick=quick)
         dt = time.time() - t0
         for row in rows:
             line = ",".join(f"{k}={v}" for k, v in row.items())
@@ -49,6 +76,14 @@ def main(argv=None) -> int:
                 if isinstance(v, (bool, np.bool_)):
                     all_checks.append((f"{name}/{k}", bool(v)))
         print(f"{name},_timing,seconds={dt:.1f}")
+        if json_dir:
+            payload = {"bench": name, "seconds": round(dt, 2), "quick": quick,
+                       "rows": [{k: (bool(v) if isinstance(v, np.bool_) else v)
+                                 for k, v in row.items()} for row in rows]}
+            path = os.path.join(json_dir, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump(payload, f, indent=2, default=str)
+            print(f"{name},_json,path={path}")
     print()
     n_pass = sum(1 for _, v in all_checks if v)
     for label, v in all_checks:

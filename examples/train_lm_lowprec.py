@@ -7,10 +7,8 @@ Run: PYTHONPATH=src python examples/train_lm_lowprec.py  (~10-20 min CPU)
 Pass --tiny for a 2-minute version.
 """
 import argparse
-import dataclasses
 import tempfile
 
-from repro import configs
 from repro.launch.train import train
 
 ap = argparse.ArgumentParser()
@@ -28,5 +26,5 @@ with tempfile.TemporaryDirectory() as ckpt:
         ckpt_dir=ckpt, ckpt_every=max(steps // 4, 10),
         grad_bits=8, weight_bits=8, moment_bits=8, lr=3e-3, log_every=20)
 print(f"loss: {losses[0]:.3f} → {losses[-1]:.3f} "
-      f"(all three ZipML channels quantized)")
+      "(all three ZipML channels quantized)")
 assert losses[-1] < losses[0], "training did not improve"

@@ -1,0 +1,1 @@
+"""ZipML end-to-end low-precision training, reproduced on JAX/Pallas."""

@@ -18,7 +18,6 @@ from typing import Callable, NamedTuple
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from .double_sampling import polynomial_estimator
 from .quantize import stochastic_quantize

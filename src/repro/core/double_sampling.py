@@ -20,6 +20,13 @@ Model quantization commutes with the (linear) gradient → still unbiased (App. 
 gradient quantization is unbiased by Lemma 6 (App. D).
 
 Everything here is vectorized over a minibatch: ``a`` has shape (B, n).
+
+The sample-quantization hot path (the pair draw and the LSQ gradients built
+from it) dispatches through ``kernels.registry``: the ``ref`` backend keeps
+the original pure-jnp numerics bit-exactly, the ``pallas`` backend runs the
+fused single-read ds_quant kernel and computes gradients from int8 codes.
+Pass ``backend=`` explicitly, or control it globally via ``registry.select``
+/ the ``ZIPML_KERNEL_BACKEND`` env var.
 """
 from __future__ import annotations
 
@@ -27,6 +34,8 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import registry
 
 from .quantize import row_scale, stochastic_quantize
 
@@ -45,19 +54,17 @@ class DSConfig(NamedTuple):
 
 
 def double_sample_pair(a: jax.Array, s: int, key: jax.Array,
-                       scale: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+                       scale: jax.Array | None = None,
+                       backend: str | None = None) -> tuple[jax.Array, jax.Array]:
     """Two independent unbiased quantizations of the same sample batch.
 
     Note on storage (paper §2.2 'Overhead of Storing Samples'): Q₁ and Q₂ share
     the same base level ⌊a·s⌋ and differ only in the up/down bit, so shipping
-    both costs log₂(2)=1 extra bit, not 2×. We model that in the bandwidth
-    accounting (benchmarks/bench_bandwidth_model.py); numerically we just draw
-    two independent dequantized tensors.
+    both costs log₂(2)=1 extra bit, not 2×. The ``pallas`` backend realizes
+    exactly that layout (one fused read → shared base + two up-bits, int8 code
+    planes); the ``ref`` backend draws two independent dequantized tensors.
     """
-    k1, k2 = jax.random.split(key)
-    q1 = stochastic_quantize(a, s, k1, scale=scale)
-    q2 = stochastic_quantize(a, s, k2, scale=scale)
-    return q1, q2
+    return registry.resolve(backend).ds_quant_values(a, s, key, scale=scale)
 
 
 def lsq_gradient_fullprec(x: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
@@ -79,19 +86,20 @@ def lsq_gradient_naive_quant(
 
 def lsq_gradient_double_sampling(
     x: jax.Array, a: jax.Array, b: jax.Array, s: int, key: jax.Array,
-    scale: jax.Array | None = None,
+    scale: jax.Array | None = None, backend: str | None = None,
 ) -> jax.Array:
-    """Unbiased double-sampling gradient (symmetrized form, §2.2 + footnote 2)."""
-    q1, q2 = double_sample_pair(a, s, key, scale=scale)
-    B = a.shape[0]
-    r2 = q2 @ x - b
-    r1 = q1 @ x - b
-    return (q1.T @ r2 + q2.T @ r1) / (2.0 * B)
+    """Unbiased double-sampling gradient (symmetrized form, §2.2 + footnote 2).
+
+    Dispatches through the kernel registry: ``ref`` computes q₁ᵀ(q₂x−b) on
+    dequantized f32 tensors (the seed numerics); ``pallas`` never leaves the
+    int8 code domain until the final (n,) gradient.
+    """
+    return registry.resolve(backend).lsq_ds_gradient(x, a, b, s, key, scale=scale)
 
 
 def lsq_gradient_e2e(
     x: jax.Array, a: jax.Array, b: jax.Array, cfg: DSConfig, key: jax.Array,
-    sample_scale: jax.Array | None = None,
+    sample_scale: jax.Array | None = None, backend: str | None = None,
 ) -> jax.Array:
     """End-to-end quantized gradient (App. E, Eq. 13): samples + model + gradient.
 
@@ -101,7 +109,8 @@ def lsq_gradient_e2e(
     xq = x
     if cfg.s_model > 0:
         xq = stochastic_quantize(x, cfg.s_model, k_m, scale=row_scale(x))
-    g = lsq_gradient_double_sampling(xq, a, b, cfg.s_sample, k_s, scale=sample_scale)
+    g = lsq_gradient_double_sampling(xq, a, b, cfg.s_sample, k_s,
+                                     scale=sample_scale, backend=backend)
     if cfg.s_grad > 0:
         g = stochastic_quantize(g, cfg.s_grad, k_g, scale=row_scale(g))
     return g

@@ -21,8 +21,6 @@ match dimensionality; see DESIGN.md §7).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable
 
 import numpy as np
 import jax
@@ -37,7 +35,7 @@ from .double_sampling import (
     lsq_gradient_fullprec,
     lsq_gradient_naive_quant,
 )
-from .quantize import column_scale, quantize_nearest, quantize_to_levels, row_scale, stochastic_quantize
+from .quantize import quantize_nearest, quantize_to_levels, stochastic_quantize
 
 
 # ---------------------------------------------------------------------------
@@ -144,6 +142,7 @@ class Precision:
     bits_grad: int = 0
     use_optimal_levels: bool = False
     optimal_method: str = "discretized"
+    backend: str | None = None  # kernel backend ('ref'/'pallas'; None = registry default)
 
     @property
     def s_sample(self) -> int:
@@ -212,9 +211,13 @@ def make_lsq_grad(prec: Precision, sample_scale, levels=None):
                 q2 = _quantize_with_levels(a, levels, sample_scale, k2)
                 B = a.shape[0]
                 return (q1.T @ (q2 @ x - b) + q2.T @ (q1 @ x - b)) / (2.0 * B)
-            return lsq_gradient_double_sampling(x, a, b, prec.s_sample, key, scale=sample_scale)
+            return lsq_gradient_double_sampling(x, a, b, prec.s_sample, key,
+                                                scale=sample_scale,
+                                                backend=prec.backend)
         if prec.mode == "e2e":
-            return lsq_gradient_e2e(x, a, b, prec.ds_config(), key, sample_scale=sample_scale)
+            return lsq_gradient_e2e(x, a, b, prec.ds_config(), key,
+                                    sample_scale=sample_scale,
+                                    backend=prec.backend)
         raise ValueError(prec.mode)
 
     return grad

@@ -17,9 +17,6 @@ import dataclasses
 from typing import Iterator
 
 import numpy as np
-import jax
-
-from repro.core.quantize import column_scale
 import jax.numpy as jnp
 
 

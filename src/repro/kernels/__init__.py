@@ -1,8 +1,12 @@
 """Pallas TPU kernels for the ZipML hot spots + the SSD intra-chunk block.
 
-stoch_quant — C1 stochastic rounding quantizer (int8 codes + row scales)
-qmm         — fused dequantize(int8 W)·matmul with fp32 MXU accumulation
+stoch_quant — C1 stochastic rounding quantizer (int8 codes + row scales) and
+              the fused §2.2 double-sampling quantizer ds_quant (one HBM read
+              → both Q₁/Q₂ code planes: shared base level + two up/down bits)
+qmm         — fused dequantize(int8 W)·matmul with fp32 MXU accumulation, and
+              qmv: the int8 code·vector product the DS gradient is built from
 ssd         — Mamba2 SSD intra-chunk dual form
 ops         — jit'd padded wrappers; ref — pure-jnp oracles
+registry    — the 'ref'/'pallas' kernel-backend switch (ZIPML_KERNEL_BACKEND)
 """
-from . import ops, ref  # noqa: F401
+from . import ops, ref, registry  # noqa: F401

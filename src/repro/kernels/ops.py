@@ -3,8 +3,6 @@ interpret-mode selection). ``INTERPRET`` flips to False on real TPU backends.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -41,6 +39,72 @@ def dequantize_rows(codes: jax.Array, scale: jax.Array, s: int) -> jax.Array:
     return codes.astype(jnp.float32) / s * scale
 
 
+def ds_quantize(x: jax.Array, s: int, key: jax.Array,
+                scale: jax.Array | None = None):
+    """Fused double-sampling quantization: both Q₁/Q₂ int8 code planes from a
+    single streaming pass over x (paper §2.2 — shared base + 1 extra bit).
+
+    ``scale=None`` → per-row absmax scales (R, 1); a (C,)/(1, C) array selects
+    column scaling (the data-pipeline convention); a scalar broadcasts.
+    Returns (codes1, codes2, scale) with E[codesᵢ/s·scale] = x.
+    """
+    assert x.ndim == 2
+    r, c = x.shape
+    if scale is None:
+        scale = sq_mod.row_absmax(x, interpret=INTERPRET)
+        scale_axis = "row"
+    elif jnp.shape(scale) == (r, 1):
+        scale = jnp.asarray(scale, jnp.float32)
+        scale_axis = "row"
+    else:
+        scale = jnp.broadcast_to(jnp.asarray(scale, jnp.float32).reshape(1, -1),
+                                 (1, c))
+        scale_axis = "col"
+    rand = jax.random.bits(key, x.shape, jnp.uint32)
+    c1, c2 = sq_mod.ds_quant(x, rand, scale, s=s, scale_axis=scale_axis,
+                             interpret=INTERPRET)
+    return c1, c2, scale
+
+
+def _block_fit(dim: int, want: int) -> int:
+    """Largest of (want, 128) that divides a 128-multiple ``dim`` exactly —
+    partial blocks on a *contraction* axis read out of bounds and fold garbage
+    into valid outputs, so every grid axis must tile its dim exactly."""
+    return want if dim % want == 0 else 128
+
+
+def int8_matvec(codes: jax.Array, v: jax.Array) -> jax.Array:
+    """General r = codes · v for int8 (R, C) codes and f32 (C,) v; pads both
+    dims to block multiples (zero padding is exact for the dot) and slices."""
+    r0, c0 = codes.shape
+    codes, _ = _pad_to(codes, 128, 0)
+    codes, _ = _pad_to(codes, 128, 1)
+    v2, _ = _pad_to(v.reshape(-1, 1).astype(jnp.float32), 128, 0)
+    r, c = codes.shape
+    out = qmm_mod.qmv(codes, v2, br=_block_fit(r, 256), bc=_block_fit(c, 512),
+                      interpret=INTERPRET)
+    return out[:r0, 0]
+
+
+def ds_gradient_from_codes(codes1: jax.Array, codes2: jax.Array,
+                           x: jax.Array, b: jax.Array, scale: jax.Array,
+                           s: int) -> jax.Array:
+    """Symmetrized double-sampling LSQ gradient ½[q₁ᵀr₂ + q₂ᵀr₁]/B straight
+    from int8 code planes + scales — no dequantized f32 sample tensor exists.
+
+    With column scale m (broadcast over rows), qᵢ = cᵢ ⊙ m / s, so
+    qᵢᵀ(qⱼx − b) = m ⊙ (cᵢᵀ rⱼ)/s with rⱼ = cⱼ(m ⊙ x)/s − b: four int8
+    matvecs total, all streaming codes at 1 byte/elem.
+    """
+    B = codes1.shape[0]
+    m = jnp.asarray(scale, jnp.float32).reshape(-1)
+    xs = x.astype(jnp.float32) * m
+    r1 = int8_matvec(codes1, xs) / s - b
+    r2 = int8_matvec(codes2, xs) / s - b
+    g = int8_matvec(codes1.T, r2) + int8_matvec(codes2.T, r1)
+    return g * m / (2.0 * B * s)
+
+
 def quantized_matmul(x: jax.Array, codes: jax.Array, scale: jax.Array) -> jax.Array:
     """General y = x · dequant(codes, scale); pads all dims to 128 multiples
     for MXU alignment, slices the result back."""
@@ -51,7 +115,11 @@ def quantized_matmul(x: jax.Array, codes: jax.Array, scale: jax.Array) -> jax.Ar
     codes, _ = _pad_to(codes, 128, 0)
     codes, _ = _pad_to(codes, 128, 1)
     scale, _ = _pad_to(scale, 128, 1)
-    y = qmm_mod.qmm(x, codes, scale, interpret=INTERPRET)
+    m, k = x.shape
+    _, n = codes.shape
+    y = qmm_mod.qmm(x, codes, scale, bm=_block_fit(m, 256),
+                    bk=_block_fit(k, 512), bn=_block_fit(n, 256),
+                    interpret=INTERPRET)
     return y[:m0, :n0]
 
 

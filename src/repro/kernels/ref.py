@@ -16,6 +16,26 @@ def stoch_quant_ref(x, rand, scale, *, s: int):
     return (codes * jnp.sign(x32)).astype(jnp.int8)
 
 
+def ds_quant_ref(x, rand, scale, *, s: int):
+    """Bit-exact reference for the fused kernels/stoch_quant.ds_quant: shared
+    base level, two up/down bits from the high/low 16 bits of one uint32."""
+    x32 = x.astype(jnp.float32)
+    u1 = (rand >> 16).astype(jnp.float32) * (1.0 / (1 << 16))
+    u2 = (rand & 0xFFFF).astype(jnp.float32) * (1.0 / (1 << 16))
+    mag = jnp.abs(x32) / jnp.maximum(scale.astype(jnp.float32), 1e-30)
+    t = jnp.clip(mag, 0.0, 1.0) * s
+    base = jnp.clip(jnp.floor(t), 0, s - 1)
+    frac = t - base
+    sign = jnp.sign(x32)
+    c1 = ((base + (u1 < frac).astype(jnp.float32)) * sign).astype(jnp.int8)
+    c2 = ((base + (u2 < frac).astype(jnp.float32)) * sign).astype(jnp.int8)
+    return c1, c2
+
+
+def qmv_ref(codes, v):
+    return jnp.dot(codes.astype(jnp.float32), v.astype(jnp.float32))
+
+
 def row_absmax_ref(x):
     return jnp.max(jnp.abs(x.astype(jnp.float32)), axis=1, keepdims=True)
 
@@ -41,7 +61,7 @@ def ssd_chunk_scan_ref(xh, dt, logdec, bmat, cmat):
             diff = cum[:, None, :] - cum[None, :, :]
             mask = jnp.tril(jnp.ones((L, L), bool))
             dec = jnp.exp(jnp.where(mask[:, :, None], diff, -jnp.inf))
-            scores = cm_f = jnp.dot(cc, bc.T)
+            scores = jnp.dot(cc, bc.T)
             att = scores[:, :, None] * dec
             y_intra = jnp.einsum("lmh,mhp->lhp", att, xw)
             y_inter = jnp.einsum("ln,hpn->lhp", cc, state) * jnp.exp(cum)[:, :, None]

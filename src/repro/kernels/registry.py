@@ -1,0 +1,174 @@
+"""Kernel-backend registry — one switch for every hot quantization path.
+
+The ZipML hot loop (double-sample quantization + the LSQ gradient built from
+it) has two implementations:
+
+* ``ref``    — the pure-jnp path of core/quantize.py: two independent
+  full-precision quantization passes. Bit-exact with the original seed
+  numerics; the ground truth every other backend is tested against.
+* ``pallas`` — the fused pipeline: kernels/stoch_quant.ds_quant emits both
+  Q₁/Q₂ int8 code planes in a single HBM read (shared base level + two
+  up/down bits, the paper's "1 extra bit, not 2×" storage claim), and
+  kernels/qmm.qmv computes q₁ᵀ(q₂x − b) straight from codes+scales without
+  ever materializing a dequantized f32 sample tensor.
+
+Selection precedence: explicit ``backend=`` argument > ``select()`` >
+``ZIPML_KERNEL_BACKEND`` env var > default per ``jax.default_backend()``
+(pallas on TPU, ref elsewhere — interpret-mode Pallas is correctness-only on
+CPU). Resolution happens at Python trace time, so the choice is static under
+``jax.jit``/``lax.scan``.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+import jax
+import jax.numpy as jnp
+
+_BACKENDS: dict[str, "KernelBackend"] = {}
+_ACTIVE: str | None = None
+
+ENV_VAR = "ZIPML_KERNEL_BACKEND"
+
+
+class KernelBackend:
+    """Interface of a quantization kernel backend.
+
+    ``ds_quant_values`` returns the two dequantized draws (the numerical form
+    the gradient math is written in); ``ds_quant_codes`` the storage form
+    (codes1, codes2, scale); ``lsq_ds_gradient`` the symmetrized §2.2
+    estimator ½[Q₁ᵀ(Q₂x−b) + Q₂ᵀ(Q₁x−b)]/B.
+    """
+
+    name: str = "abstract"
+
+    def ds_quant_values(self, a, s, key, scale=None):
+        raise NotImplementedError
+
+    def ds_quant_codes(self, a, s, key, scale=None):
+        raise NotImplementedError
+
+    def lsq_ds_gradient(self, x, a, b, s, key, scale=None):
+        raise NotImplementedError
+
+
+def register(backend: KernelBackend) -> KernelBackend:
+    _BACKENDS[backend.name] = backend
+    return backend
+
+
+def available() -> list[str]:
+    return sorted(_BACKENDS)
+
+
+def default_name() -> str:
+    """pallas where it compiles (TPU); ref everywhere else."""
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def select(name: str | None) -> None:
+    """Set the process-wide backend (None resets to env/hardware default)."""
+    global _ACTIVE
+    if name is not None and name not in _BACKENDS:
+        raise ValueError(f"unknown kernel backend {name!r}; have {available()}")
+    _ACTIVE = name
+
+
+@contextlib.contextmanager
+def using(name: str | None):
+    """Temporarily select a backend; the previous selection is restored on
+    exit (``None`` selects nothing and just yields the resolved backend)."""
+    global _ACTIVE
+    prev = _ACTIVE
+    if name is not None:
+        select(name)
+    try:
+        yield get()
+    finally:
+        _ACTIVE = prev
+
+
+def get(name: str | None = None) -> KernelBackend:
+    name = name or _ACTIVE or os.environ.get(ENV_VAR) or default_name()
+    if name not in _BACKENDS:
+        raise ValueError(f"unknown kernel backend {name!r}; have {available()}")
+    return _BACKENDS[name]
+
+
+class _RefBackend(KernelBackend):
+    """Two independent core/quantize.py passes — the seed's exact numerics."""
+
+    name = "ref"
+
+    def ds_quant_values(self, a, s, key, scale=None):
+        from repro.core.quantize import stochastic_quantize
+
+        k1, k2 = jax.random.split(key)
+        q1 = stochastic_quantize(a, s, k1, scale=scale)
+        q2 = stochastic_quantize(a, s, k2, scale=scale)
+        return q1, q2
+
+    def ds_quant_codes(self, a, s, key, scale=None):
+        from repro.core.quantize import quantize, row_scale
+
+        if scale is None:
+            scale = row_scale(a)
+        k1, k2 = jax.random.split(key)
+        q1 = quantize(a, s, k1, scale=scale)
+        q2 = quantize(a, s, k2, scale=scale)
+        return q1.codes, q2.codes, jnp.asarray(scale)
+
+    def lsq_ds_gradient(self, x, a, b, s, key, scale=None):
+        q1, q2 = self.ds_quant_values(a, s, key, scale=scale)
+        B = a.shape[0]
+        r2 = q2 @ x - b
+        r1 = q1 @ x - b
+        return (q1.T @ r2 + q2.T @ r1) / (2.0 * B)
+
+
+class _PallasBackend(KernelBackend):
+    """Fused ds_quant + int8-codes matvecs (kernels/stoch_quant, kernels/qmm).
+
+    ``scale=None`` resolves to the same global-scalar absmax the ref backend
+    uses (core/quantize.row_scale), so the two backends quantize against
+    identical grids; column scales — the data-pipeline convention — pass
+    through. Per-row scales are not used here: they don't factor through
+    q₁ᵀ(q₂x − b), which ds_gradient_from_codes relies on.
+    """
+
+    name = "pallas"
+
+    def _resolve_scale(self, a, scale):
+        if scale is None:
+            from repro.core.quantize import row_scale
+
+            return row_scale(a)  # scalar global absmax, as in ref
+        return scale
+
+    def ds_quant_values(self, a, s, key, scale=None):
+        c1, c2, sc = self.ds_quant_codes(a, s, key, scale=scale)
+        return (c1.astype(jnp.float32) / s * sc,
+                c2.astype(jnp.float32) / s * sc)
+
+    def ds_quant_codes(self, a, s, key, scale=None):
+        from repro.kernels import ops
+
+        return ops.ds_quantize(a, s, key, scale=self._resolve_scale(a, scale))
+
+    def lsq_ds_gradient(self, x, a, b, s, key, scale=None):
+        from repro.kernels import ops
+
+        c1, c2, sc = self.ds_quant_codes(a, s, key, scale=scale)
+        return ops.ds_gradient_from_codes(c1, c2, x, b, sc, s)
+
+
+register(_RefBackend())
+register(_PallasBackend())
+
+
+def resolve(backend: "str | KernelBackend | None") -> KernelBackend:
+    """Accept a name, an instance, or None (→ active/env/hardware default)."""
+    if isinstance(backend, KernelBackend):
+        return backend
+    return get(backend)

@@ -63,6 +63,66 @@ def stoch_quant(x: jax.Array, rand: jax.Array, scale: jax.Array, *, s: int,
     )(x, rand, scale)
 
 
+def _ds_quant_kernel(x_ref, rand_ref, scale_ref, c1_ref, c2_ref, *, s: int):
+    """Fused double-sampling quantizer: one HBM read of x, two int8 code planes.
+
+    Q₁/Q₂ share the base level ⌊|x|/scale·s⌋ (paper §2.2 'Overhead of Storing
+    Samples': shipping both costs 1 extra up/down bit, not 2×) and differ only
+    in independent Bernoulli(frac) up-bits, drawn from the high/low 16 bits of
+    a single uint32 plane. E[Qᵢ] = x exactly up to 2⁻¹⁶ probability granularity.
+    """
+    x = x_ref[...].astype(jnp.float32)
+    scale = scale_ref[...].astype(jnp.float32)
+    u = rand_ref[...]                                   # uint32
+    u1 = (u >> 16).astype(jnp.float32) * (1.0 / (1 << 16))
+    u2 = (u & 0xFFFF).astype(jnp.float32) * (1.0 / (1 << 16))
+    mag = jnp.abs(x) / jnp.maximum(scale, 1e-30)
+    t = jnp.clip(mag, 0.0, 1.0) * s
+    base = jnp.clip(jnp.floor(t), 0, s - 1)             # shared base level
+    frac = t - base                                     # P(round up)
+    sign = jnp.sign(x)
+    c1_ref[...] = ((base + (u1 < frac).astype(jnp.float32)) * sign).astype(jnp.int8)
+    c2_ref[...] = ((base + (u2 < frac).astype(jnp.float32)) * sign).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "scale_axis", "block", "interpret"))
+def ds_quant(x: jax.Array, rand: jax.Array, scale: jax.Array, *, s: int,
+             scale_axis: str = "row", block=DEFAULT_BLOCK, interpret: bool = True):
+    """Fused double-sampling quantization (the ZipML §2.2 hot path).
+
+    x: (R, C) f32/bf16; rand: (R, C) uint32 (one plane feeds both draws);
+    scale: (R, 1) row scales or (1, C) column scales per ``scale_axis``.
+    Returns (codes1, codes2) int8 in [-s, s] — both emitted from a single
+    streaming pass over x, vs two full passes for the naive two-call path.
+    """
+    if s > 127:
+        raise ValueError(f"int8 code planes need s <= 127, got {s}")
+    r, c = x.shape
+    br = min(block[0], r)
+    bc = min(block[1], c)
+    grid = (pl.cdiv(r, br), pl.cdiv(c, bc))
+    if scale_axis == "row":
+        scale_spec = pl.BlockSpec((br, 1), lambda i, j: (i, 0))
+    elif scale_axis == "col":
+        scale_spec = pl.BlockSpec((1, bc), lambda i, j: (0, j))
+    else:
+        raise ValueError(f"unknown scale_axis {scale_axis!r}")
+    out_spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    return pl.pallas_call(
+        functools.partial(_ds_quant_kernel, s=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            scale_spec,
+        ],
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct((r, c), jnp.int8),
+                   jax.ShapeDtypeStruct((r, c), jnp.int8)],
+        interpret=interpret,
+    )(x, rand, scale)
+
+
 def _absmax_kernel(x_ref, out_ref):
     """Per-(row-block, col-block) absmax; the host wrapper reduces col blocks.
     (Cross-step accumulation on a revisited out block is legal on TPU but not

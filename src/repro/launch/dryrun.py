@@ -24,7 +24,6 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs

@@ -14,10 +14,7 @@ Layout (DESIGN.md §3.1):
 """
 from __future__ import annotations
 
-import re
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 

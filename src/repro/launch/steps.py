@@ -12,13 +12,11 @@ The ZipML channels hook in here:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro import configs
 from repro.launch import sharding as shd
 from repro.models import transformer as T
 from repro.models.layers import shard_hint

@@ -22,9 +22,8 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.ckpt.checkpoint import CheckpointManager
+from repro.kernels import registry
 from repro.data.pipeline import Cursor, TokenStream, TokenStreamConfig
-from repro.launch import sharding as sh
-from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import make_train_step
 from repro.models import transformer as T
 from repro.optim import adamw
@@ -55,12 +54,25 @@ class StragglerMonitor:
         return False
 
 
-def train(arch: str, *, reduced: bool = True, steps: int = 50, batch: int = 8,
-          seq: int = 64, ckpt_dir: str | None = None, ckpt_every: int = 20,
-          lr: float = 1e-3, grad_bits: int = 0, weight_bits: int = 0,
-          moment_bits: int = 0, fail_at: int | None = None,
-          log_every: int = 10):
-    """Returns (final_params, losses). ``fail_at`` injects a fault (testing)."""
+def train(arch: str, *, kernel_backend: str | None = None, **kwargs):
+    """Returns (final_params, losses). See ``_train`` for the remaining kwargs.
+
+    ``kernel_backend`` pins the quantization kernel backend for this run only
+    ('ref'/'pallas'); None keeps the registry default (env var / hardware).
+    The previous registry selection is restored when the run finishes.
+    """
+    with registry.using(kernel_backend) as backend:
+        print(f"[train] kernel backend: {backend.name} "
+              f"(available: {', '.join(registry.available())})")
+        return _train(arch, **kwargs)
+
+
+def _train(arch: str, *, reduced: bool = True, steps: int = 50, batch: int = 8,
+           seq: int = 64, ckpt_dir: str | None = None, ckpt_every: int = 20,
+           lr: float = 1e-3, grad_bits: int = 0, weight_bits: int = 0,
+           moment_bits: int = 0, fail_at: int | None = None,
+           log_every: int = 10):
+    """Supervisor body; ``fail_at`` injects a fault (testing)."""
     precision = T.PrecisionPlan(weight_bits=weight_bits, grad_bits=grad_bits)
     get = configs.get_reduced if reduced else configs.get_config
     cfg = get(arch, precision=precision)
@@ -155,11 +167,16 @@ def main(argv=None):
     ap.add_argument("--grad-bits", type=int, default=0)
     ap.add_argument("--weight-bits", type=int, default=0)
     ap.add_argument("--moment-bits", type=int, default=0)
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=registry.available(),
+                    help="quantization kernel backend (default: "
+                         "$ZIPML_KERNEL_BACKEND or per jax.default_backend())")
     args = ap.parse_args(argv)
     _, losses = train(args.arch, reduced=args.reduced, steps=args.steps,
                       batch=args.batch, seq=args.seq, lr=args.lr,
                       ckpt_dir=args.ckpt_dir, grad_bits=args.grad_bits,
-                      weight_bits=args.weight_bits, moment_bits=args.moment_bits)
+                      weight_bits=args.weight_bits, moment_bits=args.moment_bits,
+                      kernel_backend=args.kernel_backend)
     print(f"[train] done: first loss {losses[0]:.4f} → last {losses[-1]:.4f}")
 
 

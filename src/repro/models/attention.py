@@ -14,14 +14,13 @@ Design notes (TPU adaptation):
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .layers import Params, apply_rope, dense, init_dense, shard_hint
+from .layers import Params, apply_rope, dense, init_dense
 
 NEG_INF = -2.0 ** 30  # large-but-finite: keeps fully-masked rows NaN-free
 
@@ -271,8 +270,6 @@ def update_kv_cache(cache: KVCache, k_new, v_new, *, window: int = 0,
     """Append one token's K/V at the cursor (ring-buffer when ``window``>0)."""
     smax = cache.k.shape[1]
     cursor = cache.length % smax if window else jnp.minimum(cache.length, smax - 1)
-    b = cache.k.shape[0]
-
     def write(buf, new):
         # per-batch dynamic index write at (i, cursor_i)
         return jax.vmap(

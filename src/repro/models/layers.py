@@ -9,9 +9,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
@@ -140,7 +137,6 @@ def shard_hint(x: jax.Array, spec) -> jax.Array:
     makes it bind. ``spec`` is a PartitionSpec.
     """
     try:
-        from jax.sharding import NamedSharding
         env_mesh = jax.sharding.get_abstract_mesh()  # jax>=0.4.35
         if env_mesh is None or not env_mesh.shape:
             return x

@@ -20,7 +20,6 @@ the pod (cheap ICI); the compressed psum handles only the 'pod' axis (DCI).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

@@ -11,6 +11,14 @@ from repro.models import transformer as T
 KEY = jax.random.PRNGKey(0)
 B, S = 2, 32
 
+# the cheap trio stays in the fast CI lane; heavyweight reduced configs are @slow
+FAST_ARCHS = {"gemma-2b", "mamba2-780m", "musicgen-medium"}
+
+
+def _arch_params(archs):
+    return [pytest.param(a, marks=() if a in FAST_ARCHS else (pytest.mark.slow,))
+            for a in archs]
+
 
 def _batch(cfg, batch=B, seq=S):
     ktok = jax.random.fold_in(KEY, 1)
@@ -23,7 +31,7 @@ def _batch(cfg, batch=B, seq=S):
     return tokens, targets, vis
 
 
-@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+@pytest.mark.parametrize("arch", _arch_params(configs.ARCH_IDS))
 def test_forward_and_train_step(arch):
     cfg = configs.get_reduced(arch)
     params = T.init_params(KEY, cfg)
@@ -51,7 +59,7 @@ def test_forward_and_train_step(arch):
     assert loss1 < float(loss0) + 1e-3, (loss1, float(loss0))
 
 
-@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+@pytest.mark.parametrize("arch", _arch_params(configs.ARCH_IDS))
 def test_decode_step(arch):
     cfg = configs.get_reduced(arch)
     params = T.init_params(KEY, cfg)
@@ -67,8 +75,8 @@ def test_decode_step(arch):
     assert int(state.step) == 2
 
 
-@pytest.mark.parametrize("arch", ["gemma-2b", "mixtral-8x7b", "mamba2-780m",
-                                  "zamba2-2.7b"])
+@pytest.mark.parametrize("arch", _arch_params(["gemma-2b", "mixtral-8x7b",
+                                                "mamba2-780m", "zamba2-2.7b"]))
 def test_decode_matches_forward(arch):
     """Greedy decode logits ≈ teacher-forced forward logits position-by-position.
 
@@ -133,8 +141,9 @@ def test_param_counts_match_analytic():
         assert abs(actual - analytic) / actual < 0.15, (arch, actual, analytic)
 
 
-@pytest.mark.parametrize("arch", ["gemma-7b", "mixtral-8x7b", "mamba2-780m",
-                                  "zamba2-2.7b", "llama-3.2-vision-11b"])
+@pytest.mark.parametrize("arch", _arch_params(["gemma-7b", "mixtral-8x7b",
+                                                "mamba2-780m", "zamba2-2.7b",
+                                                "llama-3.2-vision-11b"]))
 def test_prefill_then_decode_matches_forward(arch):
     """prefill(prompt) + decode_step(next) == teacher-forced forward (fp32)."""
     cfg = configs.get_reduced(arch, dtype=jnp.float32)
@@ -171,6 +180,7 @@ def test_kv_cache_int4_packed_decode():
     assert bool(jnp.isfinite(lg).all())
 
 
+@pytest.mark.slow
 def test_kv_int4_quality_close_to_int8():
     """int4 KV decode logits stay close to bf16-cache logits (fp32 model)."""
     import numpy as _np

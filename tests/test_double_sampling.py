@@ -41,6 +41,7 @@ class TestDoubleSampling:
         # bias must be statistically significant on at least some coordinates
         assert (bias > 6 * np.asarray(se)).sum() >= 4
 
+    @pytest.mark.slow
     def test_e2e_unbiased(self):
         """App. E: model+gradient quantization keeps the estimator unbiased."""
         cfg = ds.DSConfig(s_sample=7, s_model=15, s_grad=15)
@@ -49,6 +50,7 @@ class TestDoubleSampling:
         )
         np.testing.assert_array_less(np.abs(mean - self.g_full), 5 * se + 5e-3)
 
+    @pytest.mark.slow
     def test_variance_shrinks_with_bits(self):
         """Lemma 2 / Cor. 1: variance ~ 1/s² in the quantization term."""
         var = {}
@@ -60,6 +62,7 @@ class TestDoubleSampling:
             var[s] = float(jnp.mean(jnp.sum((gs - self.g_full) ** 2, -1)))
         assert var[15] < var[3] < var[1]
 
+    @pytest.mark.slow
     def test_polynomial_estimator_unbiased(self):
         """§4.1: Q(P) is unbiased for P(aᵀx) for any polynomial."""
         coeffs = jnp.asarray([0.5, -1.0, 0.25, 0.1])  # degree 3
@@ -97,6 +100,7 @@ class TestChebyshev:
         exact = (z >= 0).astype(float)
         assert np.max(np.abs(approx[mask] - exact[mask])) < 0.2
 
+    @pytest.mark.slow
     def test_quantized_poly_gradient_matches_poly(self):
         """Protocol of §4.2: E[g] ≈ mean_b b·P(b aᵀx)·a (bias only from quant
         of the outer sample = 0, poly estimator unbiased)."""

@@ -1,0 +1,283 @@
+"""Fused double-sampling pipeline: ds_quant kernel parity + kernel registry.
+
+Three layers of guarantees, matching the PR's acceptance criteria:
+  * the fused Pallas ds_quant kernel is bit-exact with its pure-jnp oracle and
+    structurally correct (shared base level → planes differ by ≤ 1 level);
+  * the fused estimator is *distribution-identical* to two independent ref
+    quantizations (fixed-seed marginals match within MC error) and unbiased
+    (E[dequant] = x, E[g] = full-precision gradient);
+  * the registry's 'ref' backend reproduces the seed core/quantize.py numerics
+    bit-exactly, and selection (arg > select() > env > hardware) works.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core.quantize as qz
+from repro.core import double_sampling as ds
+from repro.kernels import ops, ref, registry
+from repro.kernels import stoch_quant as sq_mod
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mc_codes(x, scale, s, n_mc, seed=123):
+    """Monte-Carlo fused code planes via the bit-exact oracle (fast pure jnp)."""
+    rands = jax.random.bits(jax.random.PRNGKey(seed), (n_mc, *x.shape), jnp.uint32)
+    return jax.vmap(lambda r: ref.ds_quant_ref(x, r, scale, s=s))(rands)
+
+
+class TestFusedKernel:
+    @pytest.mark.parametrize("shape", [
+        (8, 128), (100, 260),
+        pytest.param((256, 512), marks=pytest.mark.slow),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("s", [1, 7, 127])
+    def test_bit_exact_vs_oracle(self, shape, dtype, s):
+        x = (jax.random.normal(KEY, shape) * 3).astype(dtype)
+        rand = jax.random.bits(jax.random.fold_in(KEY, 1), shape, jnp.uint32)
+        scale = ref.row_absmax_ref(x)
+        got1, got2 = sq_mod.ds_quant(x, rand, scale, s=s, interpret=True)
+        want1, want2 = ref.ds_quant_ref(x, rand, scale, s=s)
+        np.testing.assert_array_equal(np.asarray(got1), np.asarray(want1))
+        np.testing.assert_array_equal(np.asarray(got2), np.asarray(want2))
+
+    def test_bit_exact_column_scale(self):
+        x = jax.random.normal(KEY, (64, 384))
+        rand = jax.random.bits(jax.random.fold_in(KEY, 2), x.shape, jnp.uint32)
+        scale = jnp.max(jnp.abs(x), axis=0, keepdims=True)  # (1, C)
+        got1, got2 = sq_mod.ds_quant(x, rand, scale, s=15, scale_axis="col",
+                                     interpret=True)
+        want1, want2 = ref.ds_quant_ref(x, rand, scale, s=15)
+        np.testing.assert_array_equal(np.asarray(got1), np.asarray(want1))
+        np.testing.assert_array_equal(np.asarray(got2), np.asarray(want2))
+
+    def test_int8_range_rejected(self):
+        x = jnp.ones((8, 128))
+        rand = jnp.zeros((8, 128), jnp.uint32)
+        with pytest.raises(ValueError):
+            sq_mod.ds_quant(x, rand, jnp.ones((8, 1)), s=255, interpret=True)
+
+    def test_shared_base_one_level(self):
+        """§2.2 storage claim: the planes share ⌊|x|s/M⌋, so they differ by at
+        most one level — shipping Q₂ costs 1 bit, not another full plane."""
+        x = jax.random.normal(KEY, (32, 256))
+        c1, c2, _ = ops.ds_quantize(x, 7, jax.random.fold_in(KEY, 3))
+        diff = np.abs(np.asarray(c1, np.int32) - np.asarray(c2, np.int32))
+        assert diff.max() <= 1
+
+    def test_unbiased_dequant(self):
+        """E[dequant(cᵢ)] = x within MC error (acceptance criterion)."""
+        x = jax.random.normal(KEY, (4, 96))
+        scale = ref.row_absmax_ref(x)
+        s = 7
+        c1s, c2s = _mc_codes(x, scale, s, n_mc=4096)
+        for cs in (c1s, c2s):
+            deq = cs.astype(jnp.float32) / s * scale
+            se = deq.std(0) / np.sqrt(deq.shape[0]) + 1e-6
+            np.testing.assert_array_less(np.abs(deq.mean(0) - x), 6 * se + 1e-3)
+
+    def test_marginals_match_ref_quantizer(self):
+        """Each fused plane's per-coordinate code distribution matches the ref
+        quantizer's (core/quantize.quantize) within MC error: same support
+        {base, base+1}, same up-probability."""
+        s = 7
+        x = jax.random.normal(jax.random.fold_in(KEY, 4), (2, 64))
+        scale = ref.row_absmax_ref(x)
+        n_mc = 4096
+        c1s, c2s = _mc_codes(x, scale, s, n_mc)
+        keys = jax.random.split(jax.random.PRNGKey(7), n_mc)
+        refs = jax.vmap(lambda k: qz.quantize(x, s, k, scale=scale).codes)(keys)
+        # identical support
+        assert set(np.unique(np.asarray(c1s))) <= set(np.unique(np.asarray(refs))) | \
+            set(np.unique(np.asarray(refs) + np.sign(np.asarray(refs))))
+        # per-coordinate mean code (≈ x·s/M) agrees within combined MC error
+        for cs in (c1s, c2s):
+            m_f = np.asarray(cs, np.float64).mean(0)
+            m_r = np.asarray(refs, np.float64).mean(0)
+            se = (np.asarray(cs, np.float64).std(0) +
+                  np.asarray(refs, np.float64).std(0)) / np.sqrt(n_mc) + 1e-9
+            np.testing.assert_array_less(np.abs(m_f - m_r), 6 * se + 2e-3 * s)
+
+    def test_up_bits_independent_across_planes(self):
+        """Q₁/Q₂ draws must be independent (the whole point of double
+        sampling): P(up₁ ∧ up₂) = P(up₁)P(up₂) within MC error."""
+        s = 7
+        x = jnp.full((1, 128), 0.4321)
+        scale = jnp.ones((1, 1))
+        c1s, c2s = _mc_codes(x, scale, s, n_mc=8192)
+        base = np.floor(0.4321 * s)
+        up1 = (np.asarray(c1s, np.float64) > base).reshape(8192, -1)
+        up2 = (np.asarray(c2s, np.float64) > base).reshape(8192, -1)
+        p1, p2, p12 = up1.mean(), up2.mean(), (up1 * up2).mean()
+        frac = 0.4321 * s - base
+        n_eff = up1.size
+        tol = 6 * np.sqrt(frac * (1 - frac) / n_eff) + 1e-2
+        assert abs(p1 - frac) < tol and abs(p2 - frac) < tol
+        assert abs(p12 - p1 * p2) < tol
+
+
+class TestCodesGradient:
+    def _problem(self, B=64, n=100):
+        k = jax.random.fold_in(KEY, 5)
+        a = jax.random.normal(k, (B, n))
+        x = jax.random.normal(jax.random.fold_in(k, 1), (n,))
+        b = jax.random.normal(jax.random.fold_in(k, 2), (B,))
+        scale = jnp.maximum(jnp.max(jnp.abs(a), axis=0), 1e-12)
+        return a, x, b, scale
+
+    def test_matches_dequantized_math(self):
+        """q₁ᵀ(q₂x−b) from int8 codes == the same math on dequantized f32
+        tensors (up to fp32 accumulation order)."""
+        a, x, b, scale = self._problem()
+        s = 7
+        c1, c2, sc = ops.ds_quantize(a, s, KEY, scale=scale)
+        got = np.asarray(ops.ds_gradient_from_codes(c1, c2, x, b, sc, s))
+        q1 = c1.astype(jnp.float32) / s * sc
+        q2 = c2.astype(jnp.float32) / s * sc
+        B = a.shape[0]
+        want = np.asarray((q1.T @ (q2 @ x - b) + q2.T @ (q1 @ x - b)) / (2.0 * B))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_fused_estimator_unbiased(self):
+        """E[g_fused] = g_full over the fused estimator's own randomness
+        (shared base + independent 16-bit up-draws)."""
+        a, x, b, scale = self._problem(B=8, n=24)
+        s = 3
+        sc = scale[None, :]
+        B = a.shape[0]
+        g_full = ds.lsq_gradient_fullprec(x, a, b)
+
+        def g_of(rand):
+            c1, c2 = ref.ds_quant_ref(a, rand, sc, s=s)
+            q1 = c1.astype(jnp.float32) / s * sc
+            q2 = c2.astype(jnp.float32) / s * sc
+            return (q1.T @ (q2 @ x - b) + q2.T @ (q1 @ x - b)) / (2.0 * B)
+
+        rands = jax.random.bits(jax.random.PRNGKey(11), (4096, *a.shape),
+                                jnp.uint32)
+        gs = jax.vmap(g_of)(rands)
+        se = np.asarray(gs.std(0)) / np.sqrt(gs.shape[0]) + 1e-6
+        np.testing.assert_array_less(np.abs(np.asarray(gs.mean(0) - g_full)),
+                                     6 * se + 1e-3)
+
+    def test_pallas_backend_end_to_end(self):
+        """Full registry dispatch: backend='pallas' gradient is finite, close
+        in norm to full precision, and built without a f32 sample tensor."""
+        a, x, b, scale = self._problem(B=32, n=64)
+        g = ds.lsq_gradient_double_sampling(x, a, b, 7, KEY, scale=scale,
+                                            backend="pallas")
+        g_full = ds.lsq_gradient_fullprec(x, a, b)
+        assert np.isfinite(np.asarray(g)).all()
+        # single draw: within a few gradient norms (loose sanity, not MC)
+        assert float(jnp.linalg.norm(g - g_full)) < 10 * float(
+            jnp.linalg.norm(g_full) + 1.0)
+
+    def test_uneven_contraction_blocks_exact(self):
+        """Regression: padded dims that don't divide the 512 contraction block
+        (e.g. 600 → 640) must not read out of bounds in qmv."""
+        k = jax.random.fold_in(KEY, 13)
+        codes = jax.random.randint(k, (64, 600), -127, 128).astype(jnp.int8)
+        v = jax.random.normal(jax.random.fold_in(k, 1), (600,))
+        got = np.asarray(ops.int8_matvec(codes, v))
+        want = np.asarray(ref.qmv_ref(codes, v))
+        assert np.isfinite(got).all()
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-2)
+        # and through the full pallas gradient with n in the broken range
+        a = jax.random.normal(k, (32, 600))
+        x = jax.random.normal(jax.random.fold_in(k, 2), (600,))
+        b = jax.random.normal(jax.random.fold_in(k, 3), (32,))
+        g = ds.lsq_gradient_double_sampling(x, a, b, 7, KEY, backend="pallas")
+        assert np.isfinite(np.asarray(g)).all()
+
+    def test_default_scale_matches_ref_backend(self):
+        """scale=None must resolve to the same global-scalar grid on both
+        backends (ref semantics): every pallas value sits on ref's level grid."""
+        a = jax.random.normal(KEY, (8, 128))
+        q1, q2 = registry.get("pallas").ds_quant_values(a, 7, KEY)
+        width = float(qz.row_scale(a)) / 7
+        for q in (q1, q2):
+            assert float(jnp.max(jnp.abs(q - a))) <= width + 1e-4
+            on_grid = jnp.abs(q / width - jnp.round(q / width))
+            assert float(on_grid.max()) < 1e-4
+
+    def test_pallas_pair_within_one_level(self):
+        """double_sample_pair(backend='pallas') values stay within one level
+        width of the input — same invariant the ref pair satisfies."""
+        a = jax.random.normal(KEY, (16, 128))
+        scale = qz.row_scale(a)
+        q1, q2 = ds.double_sample_pair(a, 7, KEY, scale=scale, backend="pallas")
+        width = float(scale) / 7
+        assert float(jnp.max(jnp.abs(q1 - a))) <= width + 1e-4
+        assert float(jnp.max(jnp.abs(q2 - a))) <= width + 1e-4
+
+
+class TestRegistry:
+    def test_ref_pair_bit_exact(self):
+        """registry 'ref' == the seed's two split-key stochastic_quantize calls."""
+        a = jax.random.normal(KEY, (8, 16))
+        scale = qz.row_scale(a)
+        got1, got2 = registry.get("ref").ds_quant_values(a, 7, KEY, scale=scale)
+        k1, k2 = jax.random.split(KEY)
+        want1 = qz.stochastic_quantize(a, 7, k1, scale=scale)
+        want2 = qz.stochastic_quantize(a, 7, k2, scale=scale)
+        np.testing.assert_array_equal(np.asarray(got1), np.asarray(want1))
+        np.testing.assert_array_equal(np.asarray(got2), np.asarray(want2))
+
+    def test_ref_gradient_bit_exact(self):
+        """registry 'ref' LSQ gradient == the original seed formula, bit-exact."""
+        k = jax.random.fold_in(KEY, 9)
+        a = jax.random.normal(k, (8, 16))
+        x = jax.random.normal(jax.random.fold_in(k, 1), (16,))
+        b = jax.random.normal(jax.random.fold_in(k, 2), (8,))
+        got = ds.lsq_gradient_double_sampling(x, a, b, 3, KEY)
+        k1, k2 = jax.random.split(KEY)
+        q1 = qz.stochastic_quantize(a, 3, k1)
+        q2 = qz.stochastic_quantize(a, 3, k2)
+        want = (q1.T @ (q2 @ x - b) + q2.T @ (q1 @ x - b)) / (2.0 * 8)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_env_var_selection(self, monkeypatch):
+        monkeypatch.delenv(registry.ENV_VAR, raising=False)
+        registry.select(None)
+        assert registry.get().name == registry.default_name()
+        monkeypatch.setenv(registry.ENV_VAR, "pallas")
+        assert registry.get().name == "pallas"
+        monkeypatch.setenv(registry.ENV_VAR, "ref")
+        assert registry.get().name == "ref"
+
+    def test_select_overrides_env(self, monkeypatch):
+        monkeypatch.setenv(registry.ENV_VAR, "ref")
+        registry.select("pallas")
+        try:
+            assert registry.get().name == "pallas"
+            # explicit argument still wins over select()
+            assert registry.get("ref").name == "ref"
+        finally:
+            registry.select(None)
+
+    def test_using_restores_previous_selection(self, monkeypatch):
+        monkeypatch.delenv(registry.ENV_VAR, raising=False)
+        registry.select(None)
+        with registry.using("pallas") as be:
+            assert be.name == "pallas"
+            assert registry.get().name == "pallas"
+        assert registry.get().name == registry.default_name()
+        # None is a no-op passthrough
+        with registry.using(None) as be:
+            assert be.name == registry.get().name
+
+    def test_unknown_backend_rejected(self):
+        with pytest.raises(ValueError):
+            registry.get("fpga")
+        with pytest.raises(ValueError):
+            registry.select("fpga")
+
+    def test_available_lists_both(self):
+        assert {"ref", "pallas"} <= set(registry.available())
+
+    def test_resolve_accepts_instance(self):
+        be = registry.get("ref")
+        assert registry.resolve(be) is be

@@ -14,7 +14,11 @@ KEY = jax.random.PRNGKey(0)
 
 
 class TestStochQuant:
-    @pytest.mark.parametrize("shape", [(8, 128), (256, 512), (300, 700), (1, 128)])
+    @pytest.mark.parametrize("shape", [
+        (8, 128), (1, 128),
+        pytest.param((256, 512), marks=pytest.mark.slow),
+        pytest.param((300, 700), marks=pytest.mark.slow),
+    ])
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     @pytest.mark.parametrize("s", [1, 7, 127])
     def test_matches_ref_bit_exact(self, shape, dtype, s):
@@ -32,6 +36,7 @@ class TestStochQuant:
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref.row_absmax_ref(x)),
                                    rtol=1e-6)
 
+    @pytest.mark.slow
     def test_unbiased_end_to_end(self):
         x = jax.random.normal(KEY, (4, 128))
         s = 7
@@ -43,8 +48,11 @@ class TestStochQuant:
 
 
 class TestQMM:
-    @pytest.mark.parametrize("mkn", [(128, 256, 128), (256, 512, 256),
-                                     (384, 1024, 512), (100, 300, 200)])
+    @pytest.mark.parametrize("mkn", [
+        (128, 256, 128), (100, 300, 200),
+        pytest.param((256, 512, 256), marks=pytest.mark.slow),
+        pytest.param((384, 1024, 512), marks=pytest.mark.slow),
+    ])
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     def test_matches_ref(self, mkn, dtype):
         m, k, n = mkn
@@ -59,6 +67,7 @@ class TestQMM:
         nrms = np.sqrt(((got - want) ** 2).mean()) / (np.sqrt((want ** 2).mean()) + 1e-9)
         assert nrms < (1e-2 if dtype == jnp.bfloat16 else 1e-5), nrms
 
+    @pytest.mark.slow
     def test_blocked_equals_unblocked(self):
         m, k, n = 256, 1024, 256
         x = jax.random.normal(KEY, (m, k), jnp.float32)
@@ -73,7 +82,10 @@ class TestQMM:
 
 
 class TestSSD:
-    @pytest.mark.parametrize("dims", [(2, 4, 32, 4, 8, 16), (1, 2, 64, 8, 16, 32)])
+    @pytest.mark.parametrize("dims", [
+        (2, 4, 32, 4, 8, 16),
+        pytest.param((1, 2, 64, 8, 16, 32), marks=pytest.mark.slow),
+    ])
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     def test_matches_ref(self, dims, dtype):
         b, nc, L, h, p, n = dims

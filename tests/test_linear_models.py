@@ -2,9 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core.linear import (
-    Dataset, Precision, make_dataset, eval_accuracy, eval_mse, train_linear,
-)
+from repro.core.linear import Precision, make_dataset, eval_accuracy, train_linear
 
 
 @pytest.fixture(scope="module")
@@ -23,12 +21,14 @@ class TestLinearRegression:
         loss_at_zero = 0.5 * np.mean(reg_ds.b_train**2)  # trivial predictor x=0
         assert r.losses[-1] < loss_at_zero * 0.2
 
+    @pytest.mark.slow
     def test_double_sampling_matches_full(self, reg_ds):
         """Fig. 4 claim: 5–6 bits with double sampling reaches the fp32 loss."""
         full = train_linear(reg_ds, Precision("full"), epochs=12, lr=0.3)
         ds6 = train_linear(reg_ds, Precision("double", bits_sample=6), epochs=12, lr=0.3)
         assert ds6.losses[-1] < full.losses[-1] * 1.15 + 1e-4
 
+    @pytest.mark.slow
     def test_e2e_quantization_converges(self, reg_ds):
         """App. E: samples+model+gradient quantized, still converges."""
         full = train_linear(reg_ds, Precision("full"), epochs=12, lr=0.3)
@@ -37,6 +37,7 @@ class TestLinearRegression:
             epochs=12, lr=0.3)
         assert e2e.losses[-1] < full.losses[-1] * 1.3 + 1e-4
 
+    @pytest.mark.slow
     def test_naive_quantization_worse(self, reg_ds):
         """App. B.1: the biased estimator converges to a WORSE solution at low
         bits than double sampling with the same bits."""
@@ -44,6 +45,7 @@ class TestLinearRegression:
         dbl = train_linear(reg_ds, Precision("double", bits_sample=3), epochs=12, lr=0.3)
         assert dbl.losses[-1] < naive.losses[-1]
 
+    @pytest.mark.slow
     def test_optimal_levels_beat_uniform_low_bits(self, reg_ds):
         """Fig. 7a/8: optimal levels at 3 bits ≲ uniform at 3 bits."""
         uni = train_linear(reg_ds, Precision("double", bits_sample=3), epochs=10, lr=0.3)
@@ -59,6 +61,7 @@ class TestLinearRegression:
 
 
 class TestLSSVM:
+    @pytest.mark.slow
     def test_lssvm_low_precision(self, cls_ds):
         full = train_linear(cls_ds, Precision("full"), model="lssvm", epochs=10, lr=0.3)
         low = train_linear(cls_ds, Precision("double", bits_sample=6), model="lssvm",
@@ -74,6 +77,7 @@ class TestLogistic:
         r = train_linear(cls_ds, Precision("full"), model="logistic", epochs=10, lr=0.5)
         assert r.losses[-1] < 0.69  # < log(2) = random init loss
 
+    @pytest.mark.slow
     def test_chebyshev_8bit(self, cls_ds):
         """Fig. 9: Chebyshev with 4-bit samples × degree-15 ≈ full precision."""
         full = train_linear(cls_ds, Precision("full"), model="logistic", epochs=10, lr=0.5)
@@ -81,6 +85,7 @@ class TestLogistic:
                             model="logistic", epochs=10, lr=0.5)
         assert cheb.losses[-1] < full.losses[-1] + 0.08
 
+    @pytest.mark.slow
     def test_nearest_straw_man_also_works(self, cls_ds):
         """§5.4 negative result: naive nearest rounding at 8 bits matches."""
         near = train_linear(cls_ds, Precision("nearest", bits_sample=8),
@@ -106,6 +111,7 @@ class TestSVM:
         assert final_frac < 0.25  # paper: <6% on cod-rna; proxy data is noisier
         assert eval_accuracy(cls_ds, r.x) > 0.68
 
+    @pytest.mark.slow
     def test_chebyshev_svm(self, cls_ds):
         r = train_linear(cls_ds, Precision("double", bits_sample=4), model="svm",
                          epochs=8, lr=0.2, reg="ball")

@@ -11,7 +11,10 @@ Each property is the load-bearing guarantee of a subsystem:
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import repro.core.quantize as qz
 from repro.core import optimal

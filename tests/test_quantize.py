@@ -112,6 +112,7 @@ class TestOptimalLevels:
             mv_uni = optimal.mean_variance(xs, optimal.uniform_levels(s))
             assert mv_opt <= mv_uni + 1e-12, (s, mv_opt, mv_uni)
 
+    @pytest.mark.slow
     def test_discretized_close_to_exact(self):
         rng = np.random.default_rng(1)
         xs = np.clip(rng.normal(0.5, 0.15, 500), 0, 1)
@@ -155,6 +156,7 @@ class TestOptimalLevels:
         assert optimal.mean_variance(xs, lv) < 1e-12
 
 
+@pytest.mark.slow
 def test_property_sweep_unbiasedness():
     """Property: for random shapes/scales/levels, |MC mean − v| → 0."""
     rng = np.random.default_rng(7)

@@ -43,8 +43,11 @@ class TestCheckpoint:
         mgr = CheckpointManager(str(tmp_path))
         tree = {"w": jnp.arange(64.0).reshape(8, 8)}
         mgr.save(3, tree, blocking=True)
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        if hasattr(jax.sharding, "AxisType"):  # jax >= 0.5: explicit axis types
+            mesh = jax.make_mesh((1,), ("data",),
+                                 axis_types=(jax.sharding.AxisType.Auto,))
+        else:
+            mesh = jax.make_mesh((1,), ("data",))
         shardings = {"w": jax.sharding.NamedSharding(
             mesh, jax.sharding.PartitionSpec("data", None))}
         got, _ = mgr.restore(jax.eval_shape(lambda: tree), shardings=shardings)
@@ -58,6 +61,7 @@ class TestCheckpoint:
             mgr.restore(jax.eval_shape(lambda: {"w": jnp.zeros((2, 2))}))
 
 
+@pytest.mark.slow
 class TestTrainSupervisor:
     def test_fault_injection_recovers(self, tmp_path):
         """Injected fault at step 12 → restore from step-10 checkpoint →
@@ -118,9 +122,10 @@ class TestDataPipeline:
         store = QuantizedSampleStore.build(a, rng.normal(size=100), bits=4)
         assert store.bytes_per_sample() < 64 * 4  # < fp32
         aa, bb = store.draw(0, 8)
-        assert aa.shape == (8, 64)
-        # dequantized values within one level of the original
-        idx = np.random.default_rng(1).integers(0, 100, 8)
+        assert aa.shape == (8, 64) and bb.shape == (8,)
+        # dequantized values stay within one level width of the column scale
+        width = store.scale / store.s
+        assert (np.abs(np.asarray(aa)) <= store.scale + width + 1e-6).all()
 
 
 class TestGradCompression:
