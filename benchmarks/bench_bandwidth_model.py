@@ -15,8 +15,10 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import quant
 from repro.core.linear import make_dataset
 from repro.data.pipeline import QuantizedSampleStore
+from repro.quant import QScheme
 
 
 def wire_bytes(n_features: int, bits: int, double_sampling: bool) -> float:
@@ -37,6 +39,21 @@ def run(quick: bool = False):
             "bytes_per_sample": wb,
             "bw_reduction_vs_fp32": fp32_bytes / wb,
         })
+    # the analytic model, read back from an actual QTensor: quantize a batch
+    # with the §2.2 pair draw and report HBM bytes straight from .nbytes
+    batch = jnp.asarray(ds.a_train[:256], jnp.float32)
+    col_scale = jnp.asarray(store.scale, jnp.float32)
+    qt = quant.ds_pair(batch, QScheme.zipml(2**4 - 1, scaling="column",
+                                            rounding="ds"),
+                       jax.random.PRNGKey(0), scale=col_scale, backend="ref")
+    codes_bytes = qt.nbytes - 4 * n           # minus the shared column scales
+    qt_per_sample = codes_bytes / batch.shape[0]
+    rows.append({
+        "format": "Q4+ds_qtensor_nbytes",
+        "bytes_per_sample": qt_per_sample,
+        "scale_bytes_amortized": 4.0 * n / batch.shape[0],
+        "bw_reduction_vs_fp32": fp32_bytes / qt_per_sample,
+    })
     # wall-clock probe: fp32 step vs int8-stored step (same math, smaller reads)
     a32 = jnp.asarray(ds.a_train, jnp.float32)
     a8 = jnp.asarray(store.codes)  # int8
@@ -66,7 +83,9 @@ def run(quick: bool = False):
                  "fp32_ms": t32 * 1e3, "int8_ms": t8 * 1e3,
                  "speedup": t32 / t8})
     rows.append({"format": "CHECKS",
-                 "q4_bw_reduction_ge_6x": fp32_bytes / wire_bytes(n, 4, True) >= 6.0})
+                 "q4_bw_reduction_ge_6x": fp32_bytes / wire_bytes(n, 4, True) >= 6.0,
+                 "qtensor_nbytes_matches_wire_model":
+                     abs(qt_per_sample - wire_bytes(n, 4, True)) < 1.0})
     return rows
 
 

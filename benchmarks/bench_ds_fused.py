@@ -22,8 +22,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import quant
 from repro.core.double_sampling import lsq_gradient_double_sampling
 from repro.kernels import ops
+from repro.quant import QScheme
 
 
 def hbm_bytes(r: int, c: int, fused: bool) -> int:
@@ -66,6 +68,17 @@ def run(quick: bool = False):
         "path": "wire_bits_per_coord", "s": s,
         "fused_bits": wire_bits(s, True), "two_pass_bits": wire_bits(s, False),
         "reduction": round(wire_bits(s, False) / wire_bits(s, True), 3),
+    })
+
+    # the same accounting, read straight off the storage format: one QTensor
+    # holding both DS planes reports bits+1 per coordinate via .nbits/.nbytes
+    qt = quant.ds_pair(x, QScheme.zipml(s, scaling="column", rounding="ds"),
+                       key, scale=scale, backend="ref")  # accounting only
+    rows.append({
+        "path": "qtensor_nbytes", "shape": f"{r}x{c}", "s": s,
+        "nbits_per_coord": qt.nbits, "hbm_bytes": qt.nbytes,
+        "fp32_bytes": 4 * r * c,
+        "reduction_vs_fp32": round(4 * r * c / qt.nbytes, 3),
     })
 
     def fused_quant():
@@ -120,6 +133,8 @@ def run(quick: bool = False):
                  "fused_moves_fewer_bytes": fused_b < twopass_b,
                  "wire_overhead_is_one_bit":
                      abs(wire_bits(s, True) - (np.log2(s + 1) + 1)) < 1e-9,
+                 "qtensor_nbits_matches_wire_model":
+                     abs(qt.nbits - wire_bits(s, True)) < 1e-9,
                  "grad_paths_agree": err < 1e-3,
                  "backends_finite": bool(np.isfinite(np.asarray(g_ref)).all()
                                          and np.isfinite(np.asarray(g_pl)).all())})

@@ -96,11 +96,11 @@ def measure_cell(arch: str, shape_name: str, precision=None,
     act = _sds((b, s, cfg.d_model), dtype)
     act_sh = _named(mesh, T._act_spec(cfg))
     lp = _layer_specs(cfg)
-    if cfg.precision.weight_bits and cfg.precision.weight_storage == "int" \
+    if cfg.precision.model_bits and cfg.precision.model_storage == "int" \
             and shape.kind != "train":
         from repro.precision.qat import quantize_param_tree
         lp = jax.eval_shape(
-            lambda q: quantize_param_tree(q, cfg.precision.weight_bits), lp)
+            lambda q: quantize_param_tree(q, cfg.precision.model_bits), lp)
     lp_sh = _tree_shardings(mesh, lp, sh.param_spec)
     emb = jax.eval_shape(lambda: {"t": T.init_embedding(
         jax.random.PRNGKey(0), cfg.vocab_padded, cfg.d_model, dtype)["table"]})
@@ -130,8 +130,8 @@ def measure_cell(arch: str, shape_name: str, precision=None,
         from repro.precision import qat as qat_mod
 
         def layer_fb(layer, x):
-            if cfg.precision.weight_bits and cfg.precision.weight_storage == "ship":
-                layer = qat_mod.ship_quant_tree(layer, cfg.precision.weight_bits)
+            if cfg.precision.model_bits and cfg.precision.model_storage == "ship":
+                layer = qat_mod.ship_quant_tree(layer, cfg.precision.model_bits)
             y = T._layer_fwd(cfg, layer, x)
             return jnp.sum(y.astype(jnp.float32))
         g_layer = jax.value_and_grad(layer_fb, argnums=(0, 1))
@@ -366,9 +366,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
     precision = None
     if args.kv_bits or args.weight_bits:
-        precision = T.PrecisionPlan(weight_bits=args.weight_bits,
-                                    weight_storage=args.weight_storage,
-                                    kv_bits=args.kv_bits)
+        from repro.quant import PrecisionPlan
+        precision = PrecisionPlan(model_bits=args.weight_bits,
+                                  model_storage=args.weight_storage,
+                                  kv_bits=args.kv_bits)
     cells = configs.all_cells() if args.all else [(args.arch, args.shape)]
     results = []
     for arch, shape in cells:

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 from repro.core import optimal
 from repro.core.double_sampling import (
     lsq_gradient_double_sampling, lsq_gradient_fullprec, lsq_gradient_naive_quant)
-from repro.core.linear import Precision, make_dataset, train_linear
+from repro.core.linear import make_dataset, train_linear
+from repro.quant import PrecisionPlan
 from repro.core.quantize import stochastic_quantize
 
 key = jax.random.PRNGKey(0)
@@ -36,9 +37,9 @@ print(f"double-sampling gradient bias: {float(jnp.linalg.norm(g_ds - g_true)):.4
 
 # --- 2. end-to-end low-precision training -----------------------------------
 ds = make_dataset("synthetic100", n_train=2000, n_test=500)
-full = train_linear(ds, Precision("full"), epochs=8, lr=0.3)
-low = train_linear(ds, Precision("e2e", bits_sample=6, bits_model=8,
-                                 bits_grad=8), epochs=8, lr=0.3)
+full = train_linear(ds, PrecisionPlan("full"), epochs=8, lr=0.3)
+low = train_linear(ds, PrecisionPlan("e2e", sample_bits=6, model_bits=8,
+                                     grad_bits=8), epochs=8, lr=0.3)
 print(f"\nfp32 loss={full.losses[-1]:.5f}   e2e 6/8/8-bit loss={low.losses[-1]:.5f}")
 
 # --- 3. optimal quantization levels -----------------------------------------

@@ -1,14 +1,22 @@
 """Batched serving demo: prefill + greedy decode with int8 weights at rest
-(optimal-level codes) and an int8 KV cache — the ZipML serving channels.
+(optimal-level codes) and an int8 KV cache — the ZipML serving channels,
+driven by the one four-channel :class:`repro.quant.PrecisionPlan`.
 
 Run: PYTHONPATH=src python examples/serve_quantized.py
 """
 from repro.launch.serve import serve
+from repro.quant import PrecisionPlan
 
-for kv_bits, w_bits, opt in ((0, 0, False), (8, 8, False), (8, 8, True)):
+PLANS = (
+    ("bf16 baseline", PrecisionPlan()),
+    ("int8 w (uniform levels) + int8 KV",
+     PrecisionPlan(model_bits=8, model_storage="int", kv_bits=8)),
+    ("int8 w (optimal levels) + int8 KV",
+     PrecisionPlan(model_bits=8, model_storage="int", kv_bits=8,
+                   optimal_levels=True)),
+)
+
+for label, plan in PLANS:
     tokens, tps = serve("granite-3-8b", reduced=True, batch=4, prompt_len=32,
-                        gen=16, kv_bits=kv_bits, weight_bits=w_bits,
-                        optimal_levels=opt)
-    label = ("bf16 baseline" if not w_bits else
-             f"int8 w ({'optimal' if opt else 'uniform'} levels) + int{kv_bits} KV")
+                        gen=16, plan=plan)
     print(f"{label:42s}: {tokens.shape} tokens, {tps:7.1f} tok/s")

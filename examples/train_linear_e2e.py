@@ -4,15 +4,16 @@ model, gradient), sweeping the sample bit width — Fig. 4 in miniature.
 
 Run: PYTHONPATH=src python examples/train_linear_e2e.py
 """
-from repro.core.linear import Precision, eval_accuracy, eval_mse, make_dataset, train_linear
+from repro.core.linear import eval_accuracy, eval_mse, make_dataset, train_linear
+from repro.quant import PrecisionPlan
 
 for ds_name, model in (("synthetic100", "linreg"), ("cod-rna", "lssvm")):
     ds = make_dataset(ds_name, n_train=5000, n_test=2000)
     print(f"\n=== {model} on {ds_name} ===")
-    full = train_linear(ds, Precision("full"), model=model, epochs=12, lr=0.3)
+    full = train_linear(ds, PrecisionPlan("full"), model=model, epochs=12, lr=0.3)
     print(f"fp32        : loss={full.losses[-1]:.5f}")
     for bits in (3, 4, 6, 8):
-        prec = Precision("e2e", bits_sample=bits, bits_model=8, bits_grad=8)
+        prec = PrecisionPlan("e2e", sample_bits=bits, model_bits=8, grad_bits=8)
         r = train_linear(ds, prec, model=model, epochs=12, lr=0.3)
         extra = (f" acc={eval_accuracy(ds, r.x):.3f}" if model == "lssvm" else
                  f" test_mse={eval_mse(ds, r.x):.5f}")

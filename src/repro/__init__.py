@@ -1,1 +1,2 @@
 """ZipML end-to-end low-precision training, reproduced on JAX/Pallas."""
+from . import quant  # noqa: F401  (canonical quantization API)

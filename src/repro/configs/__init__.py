@@ -15,7 +15,8 @@ from __future__ import annotations
 import dataclasses
 import importlib
 
-from repro.models.transformer import ModelConfig, PrecisionPlan  # noqa: F401
+from repro.quant import PrecisionPlan  # noqa: F401  (canonical plan)
+from repro.models.transformer import ModelConfig  # noqa: F401
 
 ARCH_IDS = (
     "mixtral-8x7b",

@@ -6,6 +6,19 @@ C3 linear.Precision(mode='e2e') — end-to-end sample+model+gradient quantizatio
 C4 optimal — variance-optimal level DP / discretized / 2-approx solvers
 C6 chebyshev — polynomial gradient approximation for non-linear losses
 """
+from repro.quant import PrecisionPlan  # noqa: F401
 from . import chebyshev, double_sampling, linear, optimal, quantize  # noqa: F401
-from .linear import Dataset, Precision, TrainResult, make_dataset, train_linear  # noqa: F401
+from .linear import Dataset, TrainResult, make_dataset, train_linear  # noqa: F401
 from .quantize import IntTensor, Quantized, int_quantize, stochastic_quantize  # noqa: F401
+
+
+def __getattr__(name):
+    if name == "Precision":
+        import warnings
+
+        warnings.warn(
+            "repro.core.Precision is deprecated; use repro.quant.PrecisionPlan "
+            "(same class, canonical field names)", DeprecationWarning,
+            stacklevel=2)
+        return PrecisionPlan
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -26,16 +26,29 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.quant import PrecisionPlan
+
 from . import optimal
 from .chebyshev import ChebGradConfig, quantized_poly_gradient, sigmoid_prime_coeffs, step_coeffs
 from .double_sampling import (
-    DSConfig,
     lsq_gradient_double_sampling,
     lsq_gradient_e2e,
     lsq_gradient_fullprec,
     lsq_gradient_naive_quant,
 )
 from .quantize import quantize_nearest, quantize_to_levels, stochastic_quantize
+
+
+def __getattr__(name):
+    if name == "Precision":
+        import warnings
+
+        warnings.warn(
+            "core.linear.Precision is deprecated; use repro.quant.PrecisionPlan "
+            "(same class, canonical field names)", DeprecationWarning,
+            stacklevel=2)
+        return PrecisionPlan
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -119,42 +132,17 @@ PROX = {"none": prox_none, "l2": prox_l2, "l1": prox_l1, "ball": prox_l2_ball}
 
 
 # ---------------------------------------------------------------------------
-# Precision configuration
+# Precision configuration — repro.quant.PrecisionPlan (the one four-channel
+# plan; `Precision` is its deprecated alias via module __getattr__).
+#
+#   mode:
+#     'full'    — fp32 SGD (baseline)
+#     'naive'   — single quantization reused (the biased straw man of App. B.1)
+#     'double'  — double sampling (C2)
+#     'e2e'     — samples+model+gradient all quantized (C3 / App. E)
+#     'nearest' — deterministic nearest-rounding of samples (§5.4 straw man)
+#   *_bits: bit budget per channel; s = 2^bits − 1 intervals.
 # ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class Precision:
-    """End-to-end precision plan for linear-model training.
-
-    mode:
-      'full'    — fp32 SGD (baseline)
-      'naive'   — single quantization reused (the biased straw man of App. B.1)
-      'double'  — double sampling (C2)
-      'e2e'     — samples+model+gradient all quantized (C3 / App. E)
-      'nearest' — deterministic nearest-rounding of samples (§5.4 straw man)
-    bits_*: bit budget per channel; s = 2^bits − 1 intervals.
-    levels: optional variance-optimal level set (per-feature) for sample quant.
-    """
-
-    mode: str = "full"
-    bits_sample: int = 5
-    bits_model: int = 0
-    bits_grad: int = 0
-    use_optimal_levels: bool = False
-    optimal_method: str = "discretized"
-    backend: str | None = None  # kernel backend ('ref'/'pallas'; None = registry default)
-
-    @property
-    def s_sample(self) -> int:
-        return 2 ** self.bits_sample - 1
-
-    def ds_config(self) -> DSConfig:
-        return DSConfig(
-            s_sample=self.s_sample,
-            s_model=2 ** self.bits_model - 1 if self.bits_model else 0,
-            s_grad=2 ** self.bits_grad - 1 if self.bits_grad else 0,
-        )
-
 
 def fit_feature_levels(a_train: np.ndarray, bits: int, method: str = "discretized",
                        max_features_exact: int = 2000) -> np.ndarray:
@@ -193,7 +181,7 @@ def _quantize_with_levels(a, levels, scale, key):
     return sign * vals * scale
 
 
-def make_lsq_grad(prec: Precision, sample_scale, levels=None):
+def make_lsq_grad(prec: PrecisionPlan, sample_scale, levels=None):
     """Gradient fn(x, a, b, key) for least-squares objectives under ``prec``."""
 
     def grad(x, a, b, key):
@@ -239,7 +227,7 @@ def _epoch_losses(loss_fn, xs_per_epoch, a, b):
 
 
 def train_linear(
-    ds: Dataset, prec: Precision = Precision(), *, model: str = "linreg",
+    ds: Dataset, prec: PrecisionPlan = PrecisionPlan(), *, model: str = "linreg",
     epochs: int = 20, batch: int = 16, lr: float = 0.1, reg: str = "none",
     ridge_c: float = 1e-3, seed: int = 0, cheb: ChebGradConfig | None = None,
     refetch: str | None = None,
@@ -275,9 +263,9 @@ def train_linear(
         prox = lambda x, g: prox_l2_ball(inner_prox(x, g), g, radius=radius)  # noqa: E731
 
     levels = None
-    if prec.use_optimal_levels and prec.mode in ("double",):
+    if prec.optimal_levels and prec.mode in ("double",):
         levels = jnp.asarray(
-            fit_feature_levels(a_np, prec.bits_sample, prec.optimal_method), jnp.float32
+            fit_feature_levels(a_np, prec.sample_bits, prec.optimal_method), jnp.float32
         )
 
     if model in ("linreg", "lssvm"):

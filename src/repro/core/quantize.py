@@ -11,12 +11,10 @@ The quantizer maps v/M into [-1, 1], snaps each coordinate stochastically to one
 of the two nearest of ``s+1`` uniformly spaced levels (l = 0..s), such that
 E[Q(v, s)] = v exactly (Lemma 6, unbiasedness).
 
-Also provides:
-* ``quantize_to_levels`` — stochastic quantization onto an *arbitrary* sorted
-  level set (used with the variance-optimal levels of core/optimal.py, C4).
-* ``dequantize`` / packed integer codes — the storage format used by the data
-  pipeline, the QAT path, and the Pallas kernels.
-* deterministic nearest-rounding (the paper's §5.4 "straw man").
+Storage lives in :class:`repro.quant.QTensor` — the one canonical quantized
+pytree — and the rounding implementations live in :mod:`repro.quant.qtensor`;
+this module keeps the paper-notation entry points (and the deprecated
+``Quantized``/``IntTensor`` constructors) on top of them.
 
 Everything is pure jnp and jit/vmap/pjit friendly; randomness always enters via
 an explicit PRNG key (never global state) so kernels and hosts stay reproducible.
@@ -24,36 +22,30 @@ an explicit PRNG key (never global state) so kernels and hosts stay reproducible
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+import warnings
 
 import jax
 import jax.numpy as jnp
 
-
-class Quantized(NamedTuple):
-    """Storage format: integer codes + the scale(s) + the level count.
-
-    ``codes`` are int8 (s <= 255) or int32 level indices in [0, s].
-    ``scale`` broadcasts against the decoded array: scalar for row scaling,
-    per-column vector for column scaling.
-    ``signed`` quantizers map codes to [-1, 1]; unsigned to [0, 1].
-    """
-
-    codes: jax.Array
-    scale: jax.Array
-    s: int
-    signed: bool = True
-
-    @property
-    def nbits(self) -> int:
-        return int(jnp.ceil(jnp.log2(self.s + 1))) if self.s > 0 else 1
-
-    def dequantize(self) -> jax.Array:
-        return dequantize(self)
+from repro.quant import QScheme, QTensor
+from repro.quant.qtensor import encode_jnp, quantize_to_levels_jnp
 
 
-def _code_dtype(s: int):
-    return jnp.int8 if s <= 127 else jnp.int32
+def Quantized(codes, scale, s: int, signed: bool = True) -> QTensor:
+    """Deprecated: construct a :class:`repro.quant.QTensor` instead."""
+    warnings.warn(
+        "core.quantize.Quantized is deprecated; use repro.quant.QTensor "
+        "with QScheme.zipml(s)", DeprecationWarning, stacklevel=2)
+    return QTensor(codes, jnp.asarray(scale),
+                   QScheme.zipml(s, signed=signed))
+
+
+def IntTensor(codes, scale, bits: int) -> QTensor:
+    """Deprecated: construct a :class:`repro.quant.QTensor` instead."""
+    warnings.warn(
+        "core.quantize.IntTensor is deprecated; use repro.quant.QTensor "
+        "with QScheme.int_symmetric(bits)", DeprecationWarning, stacklevel=2)
+    return QTensor(codes, jnp.asarray(scale), QScheme.int_symmetric(bits))
 
 
 def row_scale(v: jax.Array, norm: str = "linf") -> jax.Array:
@@ -83,45 +75,30 @@ def quantize(
     key: jax.Array,
     scale: jax.Array | None = None,
     signed: bool = True,
-) -> Quantized:
+) -> QTensor:
     """Stochastic uniform quantization Q(v, s) — unbiased (Lemma 6).
 
     Faithful to App. A.3 Eq. (10): Q_i = M_i · sgn(v_i) · μ_i where μ_i rounds
     |v_i|/M_i ∈ [0,1] stochastically onto the grid {0, 1/s, …, 1}. Signed codes
     are sign·level ∈ [-s, s] (s=1 gives the ternary {-M, 0, M} of QSGD).
     """
-    v = jnp.asarray(v)
     if scale is None:
-        scale = row_scale(v)
-    x = (v / scale).astype(jnp.float32)
-    mag = jnp.clip(jnp.abs(x) if signed else x, 0.0, 1.0)
-    t = mag * s  # in [0, s]
-    lo = jnp.clip(jnp.floor(t), 0, s - 1)  # lower level index
-    p_up = t - lo  # P(round up), exactly unbiased
-    u = jax.random.uniform(key, v.shape, dtype=jnp.float32)
-    codes = lo + (u < p_up).astype(jnp.float32)
-    if signed:
-        codes = codes * jnp.sign(x)
-    return Quantized(codes.astype(_code_dtype(s)), jnp.asarray(scale), s, signed)
+        scale = row_scale(jnp.asarray(v))
+    return encode_jnp(v, QScheme.zipml(s, signed=signed), key, scale=scale)
 
 
 def quantize_nearest(
     v: jax.Array, s: int, scale: jax.Array | None = None, signed: bool = True
-) -> Quantized:
+) -> QTensor:
     """Deterministic nearest rounding — the §5.4 straw man (biased)."""
-    v = jnp.asarray(v)
     if scale is None:
-        scale = row_scale(v)
-    x = (v / scale).astype(jnp.float32)
-    mag = jnp.clip(jnp.abs(x) if signed else x, 0.0, 1.0)
-    codes = jnp.round(mag * s)
-    if signed:
-        codes = codes * jnp.sign(x)
-    return Quantized(codes.astype(_code_dtype(s)), jnp.asarray(scale), s, signed)
+        scale = row_scale(jnp.asarray(v))
+    return encode_jnp(v, QScheme.zipml(s, signed=signed, rounding="nearest"),
+                      scale=scale)
 
 
-def dequantize(q: Quantized) -> jax.Array:
-    return q.codes.astype(jnp.float32) / q.s * q.scale
+def dequantize(q: QTensor) -> jax.Array:
+    return q.decode()
 
 
 def stochastic_quantize(
@@ -136,7 +113,7 @@ def stochastic_quantize(
     This is the form used in the double-sampling gradient math, where we care
     about the quantized real values, not the storage codes.
     """
-    return dequantize(quantize(v, s, key, scale=scale, signed=signed))
+    return quantize(v, s, key, scale=scale, signed=signed).decode()
 
 
 # ---------------------------------------------------------------------------
@@ -154,67 +131,28 @@ def quantize_to_levels(
 
     With ``key=None`` does deterministic nearest-level rounding.
     """
-    levels = jnp.asarray(levels, jnp.float32)
-    v32 = jnp.asarray(v, jnp.float32)
-    k = levels.shape[0]
-    vc = jnp.clip(v32, levels[0], levels[-1])
-    # searchsorted: index of the interval's upper endpoint
-    hi_idx = jnp.clip(jnp.searchsorted(levels, vc, side="right"), 1, k - 1)
-    lo_idx = hi_idx - 1
-    lo = levels[lo_idx]
-    hi = levels[hi_idx]
-    width = jnp.maximum(hi - lo, 1e-30)
-    p_up = (vc - lo) / width
-    if key is None:
-        up = p_up >= 0.5
-    else:
-        up = jax.random.uniform(key, v32.shape, dtype=jnp.float32) < p_up
-    codes = jnp.where(up, hi_idx, lo_idx)
-    values = jnp.where(up, hi, lo)
-    return codes.astype(_code_dtype(k - 1)), values
+    return quantize_to_levels_jnp(v, levels, key)
 
 
 # ---------------------------------------------------------------------------
 # Convenience: per-channel int8 affine storage used by qmm / kv-cache paths.
 # ---------------------------------------------------------------------------
 
-class IntTensor(NamedTuple):
-    """Symmetric per-channel int storage: value ≈ codes * scale.
-
-    ``codes``: int8 in [-2^(b-1)+1, 2^(b-1)-1]; ``scale``: fp32, broadcastable
-    along ``axis``. This is the on-HBM format consumed by kernels/qmm.py.
-    """
-
-    codes: jax.Array
-    scale: jax.Array
-    bits: int
-
-    def dequantize(self) -> jax.Array:
-        return self.codes.astype(jnp.float32) * self.scale
-
-
 def int_quantize(
     v: jax.Array, bits: int, axis: int | tuple | None, key: jax.Array | None = None
-) -> IntTensor:
+) -> QTensor:
     """Symmetric per-channel quantization to ``bits`` (stochastic if key given).
 
     ``axis``: reduction axes for the absmax scale (None = per-tensor). The scale
     keeps those axes with size 1 so dequantize broadcasts.
     """
-    v32 = jnp.asarray(v, jnp.float32)
-    qmax = float(2 ** (bits - 1) - 1)
-    absmax = jnp.max(jnp.abs(v32), axis=axis, keepdims=axis is not None)
-    scale = jnp.where(absmax == 0, 1.0, absmax / qmax).astype(jnp.float32)
-    t = v32 / scale
-    if key is None:
-        codes = jnp.round(t)
+    rounding = "nearest" if key is None else "stochastic"
+    if axis is None:
+        scheme = QScheme.int_symmetric(bits, rounding=rounding)
     else:
-        lo = jnp.floor(t)
-        p_up = t - lo
-        u = jax.random.uniform(key, v32.shape, dtype=jnp.float32)
-        codes = lo + (u < p_up).astype(jnp.float32)
-    codes = jnp.clip(codes, -qmax, qmax).astype(jnp.int8)
-    return IntTensor(codes, scale, bits)
+        scheme = QScheme.int_symmetric(bits, scaling="channel", rounding=rounding,
+                                       channel_axis=axis)
+    return encode_jnp(v, scheme, key)
 
 
 def tv_variance(v: jax.Array, s: int, scale: jax.Array | None = None) -> jax.Array:

@@ -7,6 +7,8 @@ qmm         — fused dequantize(int8 W)·matmul with fp32 MXU accumulation, and
               qmv: the int8 code·vector product the DS gradient is built from
 ssd         — Mamba2 SSD intra-chunk dual form
 ops         — jit'd padded wrappers; ref — pure-jnp oracles
-registry    — the 'ref'/'pallas' kernel-backend switch (ZIPML_KERNEL_BACKEND)
+registry    — the 'ref'/'pallas' kernel-backend switch (ZIPML_KERNEL_BACKEND);
+              also the dispatch point of the repro.quant QTensor entry points
+              (encode/decode/ds_pair/dot)
 """
 from . import ops, ref, registry  # noqa: F401

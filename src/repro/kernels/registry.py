@@ -35,6 +35,12 @@ ENV_VAR = "ZIPML_KERNEL_BACKEND"
 class KernelBackend:
     """Interface of a quantization kernel backend.
 
+    The QTensor entry points — ``encode``/``decode``/``ds_pair``/``qt_dot`` —
+    are what :mod:`repro.quant` dispatches through; the base class provides
+    the pure-jnp reference implementations, so a backend only overrides the
+    paths it fuses.
+
+    The lower-level tuple API remains for the hot LSQ loop:
     ``ds_quant_values`` returns the two dequantized draws (the numerical form
     the gradient math is written in); ``ds_quant_codes`` the storage form
     (codes1, codes2, scale); ``lsq_ds_gradient`` the symmetrized §2.2
@@ -43,6 +49,27 @@ class KernelBackend:
 
     name: str = "abstract"
 
+    # ---------------------------------------------------- QTensor surface --
+    def encode(self, x, scheme, key=None, scale=None, levels=None):
+        """Quantize ``x`` under ``scheme`` → QTensor (single plane)."""
+        from repro.quant.qtensor import encode_jnp
+
+        return encode_jnp(x, scheme, key, scale=scale, levels=levels)
+
+    def decode(self, qt, dtype=None):
+        return qt.decode(dtype)
+
+    def ds_pair(self, x, scheme, key, scale=None):
+        """Draw the §2.2 double-sampling pair → QTensor with ``codes2``."""
+        from repro.quant.qtensor import ds_pair_jnp
+
+        return ds_pair_jnp(x, scheme, key, scale=scale)
+
+    def qt_dot(self, qt, v):
+        """decode(qt) @ v; backends may stream codes instead."""
+        return qt.decode() @ v
+
+    # ------------------------------------------------- tuple-form hot loop --
     def ds_quant_values(self, a, s, key, scale=None):
         raise NotImplementedError
 
@@ -101,23 +128,19 @@ class _RefBackend(KernelBackend):
 
     name = "ref"
 
-    def ds_quant_values(self, a, s, key, scale=None):
-        from repro.core.quantize import stochastic_quantize
+    def _zipml_pair(self, a, s, key, scale=None):
+        from repro.quant.qtensor import ds_pair_jnp
+        from repro.quant.scheme import QScheme
 
-        k1, k2 = jax.random.split(key)
-        q1 = stochastic_quantize(a, s, k1, scale=scale)
-        q2 = stochastic_quantize(a, s, k2, scale=scale)
-        return q1, q2
+        return ds_pair_jnp(a, QScheme.zipml(s), key, scale=scale)
+
+    def ds_quant_values(self, a, s, key, scale=None):
+        qt = self._zipml_pair(a, s, key, scale=scale)
+        return qt.decode(), qt.decode2()
 
     def ds_quant_codes(self, a, s, key, scale=None):
-        from repro.core.quantize import quantize, row_scale
-
-        if scale is None:
-            scale = row_scale(a)
-        k1, k2 = jax.random.split(key)
-        q1 = quantize(a, s, k1, scale=scale)
-        q2 = quantize(a, s, k2, scale=scale)
-        return q1.codes, q2.codes, jnp.asarray(scale)
+        qt = self._zipml_pair(a, s, key, scale=scale)
+        return qt.codes, qt.codes2, qt.scale
 
     def lsq_ds_gradient(self, x, a, b, s, key, scale=None):
         q1, q2 = self.ds_quant_values(a, s, key, scale=scale)
@@ -161,6 +184,47 @@ class _PallasBackend(KernelBackend):
 
         c1, c2, sc = self.ds_quant_codes(a, s, key, scale=scale)
         return ops.ds_gradient_from_codes(c1, c2, x, b, sc, s)
+
+    # ---------------------------------------------------- QTensor surface --
+    def ds_pair(self, x, scheme, key, scale=None):
+        """Fused single-read pair draw for the 2-D zipml grid; everything
+        else falls back to the reference implementation."""
+        from repro.quant.qtensor import QTensor, compute_scale
+
+        if scheme.grid != "zipml" or x.ndim != 2 or not scheme.signed \
+                or scheme.s > 127:
+            return KernelBackend.ds_pair(self, x, scheme, key, scale=scale)
+        from repro.kernels import ops
+
+        if scale is None:
+            scale = compute_scale(x, scheme)
+        scale = jnp.asarray(scale, jnp.float32)
+        c1, c2, _ = ops.ds_quantize(x, scheme.s, key, scale=scale)
+        # store the caller's scale, not the kernel's broadcast copy — ref and
+        # pallas QTensors stay structurally identical (same nbytes, stackable,
+        # checkpoint-compatible)
+        return QTensor(c1, scale, scheme.with_rounding("ds"), codes2=c2)
+
+    def qt_dot(self, qt, v):
+        """Stream int8 codes through the qmv kernel when the scale factors
+        out of the product (scalar / per-row / per-column families)."""
+        codes, scale = qt.codes, qt.scale
+        if (codes.ndim != 2 or jnp.ndim(v) != 1 or codes.dtype != jnp.int8
+                or qt.scheme.grid == "levels"):
+            return qt.decode() @ v
+        from repro.kernels import ops
+
+        denom = float(qt.scheme.s) if qt.scheme.grid == "zipml" else 1.0
+        r, c = codes.shape
+        shp = jnp.shape(scale)
+        v32 = jnp.asarray(v, jnp.float32)
+        if shp in ((), (1,), (1, 1)):
+            return ops.int8_matvec(codes, v32) * (jnp.reshape(scale, ()) / denom)
+        if shp == (r, 1):
+            return scale.ravel() * ops.int8_matvec(codes, v32) / denom
+        if shp in ((c,), (1, c)):
+            return ops.int8_matvec(codes, jnp.ravel(scale) * v32) / denom
+        return qt.decode() @ v
 
 
 register(_RefBackend())

@@ -32,6 +32,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import input_specs, make_prefill_step, make_serve_step, make_train_step
 from repro.models import transformer as T
 from repro.optim import adamw
+from repro.quant import PrecisionPlan
 
 # --- TPU v5e hardware model (roofline constants) ---------------------------
 PEAK_FLOPS = 197e12          # bf16 per chip
@@ -172,7 +173,7 @@ def build_step(cfg: T.ModelConfig, shape: configs.ShapeSpec, mesh):
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             precision: T.PrecisionPlan | None = None,
+             precision: "PrecisionPlan | None" = None,
              verbose: bool = True) -> CellResult:
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "2x16x16" if multi_pod else "16x16"
@@ -252,9 +253,9 @@ def main(argv=None):
 
     precision = None
     if args.kv_bits or args.weight_bits or args.grad_bits:
-        precision = T.PrecisionPlan(weight_bits=args.weight_bits,
-                                    weight_storage=args.weight_storage,
-                                    kv_bits=args.kv_bits, grad_bits=args.grad_bits)
+        precision = PrecisionPlan(model_bits=args.weight_bits,
+                                  model_storage=args.weight_storage,
+                                  kv_bits=args.kv_bits, grad_bits=args.grad_bits)
 
     if args.all:
         cells = configs.all_cells()

@@ -8,6 +8,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import numpy as np
@@ -18,24 +19,34 @@ from repro import configs
 from repro.launch.steps import make_serve_step
 from repro.models import transformer as T
 from repro.precision.qat import quantize_param_tree
+from repro.quant import PrecisionPlan
 
 
 def serve(arch: str, *, reduced: bool = True, batch: int = 4,
           prompt_len: int = 32, gen: int = 16, kv_bits: int = 0,
-          weight_bits: int = 0, optimal_levels: bool = False, seed: int = 0):
+          weight_bits: int = 0, optimal_levels: bool = False, seed: int = 0,
+          plan: PrecisionPlan | None = None):
     """Greedy-decode ``gen`` tokens for a random prompt batch.
 
-    Returns (tokens (B, prompt+gen), tokens/s)."""
-    precision = T.PrecisionPlan(kv_bits=kv_bits, weight_bits=weight_bits,
-                                weight_storage="int" if weight_bits else "fake",
-                                optimal_levels=optimal_levels)
+    ``plan``: a full :class:`repro.quant.PrecisionPlan`; when given it
+    overrides the individual ``kv_bits``/``weight_bits``/``optimal_levels``
+    knobs (the one-plan workflow). Returns (tokens (B, prompt+gen), tokens/s)."""
+    if plan is None:
+        plan = PrecisionPlan(kv_bits=kv_bits, model_bits=weight_bits,
+                             model_storage="int" if weight_bits else "fake",
+                             optimal_levels=optimal_levels)
+    if plan.model_bits and plan.model_storage != "int":
+        # 'fake'/'ship' are train-time storages; at serve time model_bits>0
+        # always means real int codes at rest — normalize so a plan built for
+        # training can't silently serve bf16 weights labeled as quantized
+        plan = dataclasses.replace(plan, model_storage="int")
     get = configs.get_reduced if reduced else configs.get_config
-    cfg = get(arch, precision=precision)
+    cfg = get(arch, precision=plan)
     key = jax.random.PRNGKey(seed)
     params = T.init_params(key, cfg)
-    if weight_bits:
-        params = quantize_param_tree(params, bits=weight_bits,
-                                     optimal=optimal_levels)
+    if plan.model_bits:
+        params = quantize_param_tree(params, bits=plan.model_bits,
+                                     optimal=plan.optimal_levels)
     prompts = jax.random.randint(jax.random.fold_in(key, 1),
                                  (batch, prompt_len), 0, cfg.vocab_size)
     vis = None

@@ -46,6 +46,17 @@ def param_spec(path, leaf) -> P:
     parent = ps.split("/")[-2] if "/" in ps else ""
     ndim = leaf.ndim
 
+    # QTensor children flatten as indexed leaves under the weight key:
+    # (0=codes, 1=scale, 2=codes2, 3=levels). Code planes shard exactly like
+    # the dense weight they replace; scales/level tables replicate.
+    if parent == "w" and name in ("0", "1", "2", "3"):
+        if name in ("0", "2"):
+            parts = ps.split("/")
+            name = "w"
+            parent = parts[-3] if len(parts) >= 3 else ""
+        else:
+            return P(*([None] * ndim))
+
     def with_lead(base):
         return P(*([None] * (ndim - len(base)) + list(base)))
 

@@ -3,7 +3,7 @@ functions, plus ShapeDtypeStruct input_specs for the dry-run.
 
 The ZipML channels hook in here:
 * QAT fake-quant (C5) — weights quantized inside the loss when
-  precision.weight_bits > 0 and storage == 'fake'.
+  precision.model_bits > 0 and storage == 'fake'.
 * int weight storage (C1/C5) — serve/prefill steps accept params whose matmul
   weights are int8 codes (layers.dense dequantizes on the fly).
 * gradient compression (C3) — compressed cross-pod/DP all-reduce of gradients
@@ -38,13 +38,13 @@ def make_train_step(cfg: T.ModelConfig, opt_cfg: adamw.AdamWConfig,
 
     def grads_of(params, tokens, targets, vision, kq):
         def loss(p):
-            if plan.weight_bits and plan.weight_storage == "fake":
-                p = qat.fake_quant_tree(p, plan.weight_bits, kq)
-            elif plan.weight_bits and plan.weight_storage == "ship" \
+            if plan.model_bits and plan.model_storage == "fake":
+                p = qat.fake_quant_tree(p, plan.model_bits, kq)
+            elif plan.model_bits and plan.model_storage == "ship" \
                     and not cfg.scan_layers:
                 # per-layer int8 gather; on scanned stacked params the
                 # replication pin would gather every layer at once
-                p = qat.ship_quant_tree(p, plan.weight_bits)
+                p = qat.ship_quant_tree(p, plan.model_bits)
             return T.loss_fn(p, tokens, targets, cfg, vision_tokens=vision)
         return jax.value_and_grad(loss)(params)
 

@@ -26,6 +26,7 @@ from repro.kernels import registry
 from repro.data.pipeline import Cursor, TokenStream, TokenStreamConfig
 from repro.launch.steps import make_train_step
 from repro.models import transformer as T
+from repro.quant import PrecisionPlan
 from repro.optim import adamw
 from repro.precision import gradcomp
 
@@ -71,9 +72,15 @@ def _train(arch: str, *, reduced: bool = True, steps: int = 50, batch: int = 8,
            seq: int = 64, ckpt_dir: str | None = None, ckpt_every: int = 20,
            lr: float = 1e-3, grad_bits: int = 0, weight_bits: int = 0,
            moment_bits: int = 0, fail_at: int | None = None,
-           log_every: int = 10):
-    """Supervisor body; ``fail_at`` injects a fault (testing)."""
-    precision = T.PrecisionPlan(weight_bits=weight_bits, grad_bits=grad_bits)
+           log_every: int = 10, precision: PrecisionPlan | None = None):
+    """Supervisor body; ``fail_at`` injects a fault (testing).
+
+    ``precision``: a full four-channel :class:`repro.quant.PrecisionPlan`;
+    when None one is assembled from the individual ``*_bits`` knobs.
+    """
+    if precision is None:
+        precision = PrecisionPlan(model_bits=weight_bits, grad_bits=grad_bits)
+    grad_bits = precision.grad_bits
     get = configs.get_reduced if reduced else configs.get_config
     cfg = get(arch, precision=precision)
     opt_cfg = adamw.AdamWConfig(lr=lr, warmup_steps=max(steps // 10, 1),
@@ -135,7 +142,8 @@ def _train(arch: str, *, reduced: bool = True, steps: int = 50, batch: int = 8,
                       f"skipped={float(metrics['skipped']):.0f} ({dt:.2f}s)")
             if mgr and step % ckpt_every == 0:
                 mgr.save(step, (params, opt_state),
-                         extra={"cursor": stream.cursor.to_dict()})
+                         extra={"cursor": stream.cursor.to_dict(),
+                                "precision": precision.to_dict()})
         except (RuntimeError, jax.errors.JaxRuntimeError) as e:
             print(f"[train] step {step} FAILED ({e}); restoring last checkpoint")
             if mgr is None or mgr.latest_step() is None:
@@ -150,7 +158,8 @@ def _train(arch: str, *, reduced: bool = True, steps: int = 50, batch: int = 8,
             stream.skip_to(Cursor.from_dict(manifest["extra"]["cursor"]))
     if mgr:
         mgr.save(steps, (params, opt_state),
-                 extra={"cursor": stream.cursor.to_dict()}, blocking=True)
+                 extra={"cursor": stream.cursor.to_dict(),
+                        "precision": precision.to_dict()}, blocking=True)
     return params, losses
 
 

@@ -1,3 +1,4 @@
 """Model stack: layers, attention, MoE, SSM, transformer assembly."""
 from . import attention, layers, moe, ssm, transformer  # noqa: F401
-from .transformer import ModelConfig, PrecisionPlan  # noqa: F401
+from repro.quant import PrecisionPlan  # noqa: F401  (canonical plan)
+from .transformer import ModelConfig  # noqa: F401

@@ -257,12 +257,14 @@ def _quant_rows(x: jax.Array, bits: int):
     nearest rounding: KV entries are read many times — stochastic rounding
     would add variance per read without an unbiasedness payoff (the attention
     nonlinearity already breaks strict unbiasedness; see DESIGN.md §5).
+    Delegates to the canonical quantizer (row-scaled symmetric int grid).
     """
-    qmax = float(2 ** (bits - 1) - 1)
-    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    scale = jnp.where(absmax == 0, 1.0, absmax / qmax)
-    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
-    return codes.astype(jnp.int8), scale
+    from repro import quant
+    from repro.quant import QScheme
+
+    qt = quant.encode(x, QScheme.int_symmetric(bits, scaling="row",
+                                               rounding="nearest"))
+    return qt.codes, qt.scale
 
 
 def update_kv_cache(cache: KVCache, k_new, v_new, *, window: int = 0,

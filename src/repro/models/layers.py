@@ -12,6 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.quant import QTensor
+
 Params = dict
 
 
@@ -37,17 +39,22 @@ def dense(p: Params, x: jax.Array) -> jax.Array:
     """Matmul supporting two weight storages:
 
     * ``w``: bf16/fp32 dense weight.
-    * ``w_q`` + ``w_scale``: ZipML int8 codes + per-output-channel fp32 scale
-      (C1/C5 storage format) — dequantized on the fly; XLA fuses the dequant
-      into the matmul operand read, so HBM traffic is the int8 bytes.
+    * ``w``: a :class:`repro.quant.QTensor` (ZipML C1/C5 storage: int8 codes
+      + per-output-channel fp32 scale, or C4 level-table codes) — dequantized
+      on the fly; XLA fuses the dequant into the matmul operand read, so HBM
+      traffic is the code bytes (``QTensor.nbytes``).
+
+    The pre-QTensor spliced forms (``w_q``+``w_scale`` / ``w_lvl_codes``+
+    ``w_levels``) are still read for one release.
     """
-    if "w_q" in p:
+    if "w_q" in p:          # deprecated splice format
         w = (p["w_q"].astype(jnp.bfloat16) * p["w_scale"].astype(jnp.bfloat16))
-    elif "w_lvl_codes" in p:
-        # C4 optimal-level storage: int16 level indices + dense level table
+    elif "w_lvl_codes" in p:  # deprecated splice format
         w = jnp.take(p["w_levels"], p["w_lvl_codes"].astype(jnp.int32)).astype(jnp.bfloat16)
     else:
         w = p["w"]
+        if isinstance(w, QTensor):
+            w = w.decode(jnp.bfloat16)
     y = jnp.einsum("...i,io->...o", x, w,
                    preferred_element_type=jnp.float32).astype(x.dtype)
     if "b" in p:

@@ -66,11 +66,18 @@ _gexpert_einsum.defvjp(_ge_fwd, _ge_bwd)
 
 
 def _wmat(sub: Params) -> jax.Array:
-    """Expert weight matrix supporting ZipML int8 storage (w_q + w_scale)."""
-    if "w_q" in sub:
+    """Expert weight matrix supporting ZipML QTensor storage (int8 codes +
+    scales, or C4 level tables); the pre-QTensor splice format (w_q+w_scale)
+    stays readable for one release."""
+    from repro.quant import QTensor
+
+    if "w_q" in sub:          # deprecated splice format
         return (sub["w_q"].astype(jnp.bfloat16)
                 * sub["w_scale"].astype(jnp.bfloat16))
-    return sub["w"]
+    w = sub["w"]
+    if isinstance(w, QTensor):
+        return w.decode(jnp.bfloat16)
+    return w
 
 
 @dataclasses.dataclass(frozen=True)

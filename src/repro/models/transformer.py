@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.quant import PrecisionPlan as _PrecisionPlan
+
 from . import attention as attn
 from . import moe as moe_mod
 from . import ssm as ssm_mod
@@ -30,24 +32,20 @@ from .layers import (Params, dense, embed, init_dense, init_embedding,
                      init_mlp, init_rmsnorm, mlp, rmsnorm, shard_hint, unembed)
 
 
-@dataclasses.dataclass(frozen=True)
-class PrecisionPlan:
-    """ZipML channels for LM-scale training/serving (DESIGN.md §2/§3.4).
+# The ZipML channel plan for LM-scale training/serving is the one canonical
+# repro.quant.PrecisionPlan (model_bits/model_storage/kv_bits/grad_bits/
+# act_bits/optimal_levels). `transformer.PrecisionPlan` is its deprecated
+# alias, served via module __getattr__ so access warns.
+def __getattr__(name):
+    if name == "PrecisionPlan":
+        import warnings
 
-    weight_bits: 0 = bf16; 8/4 = int codes + per-channel scales at rest (C1/C5).
-    weight_storage: 'fake' (QAT fake-quant, bf16 at rest) | 'int' (real int8).
-    kv_bits: KV-cache quantization (decode memory roofline).
-    grad_bits: gradient collective compression over the DP/pod axes (C3).
-    optimal_levels: variance-optimal (C4) levels instead of uniform for weights.
-    act_ds_bits: double-sampled activation quantization in MLP blocks (§3.4).
-    """
-
-    weight_bits: int = 0
-    weight_storage: str = "fake"
-    kv_bits: int = 0
-    grad_bits: int = 0
-    optimal_levels: bool = False
-    act_ds_bits: int = 0
+        warnings.warn(
+            "models.transformer.PrecisionPlan is deprecated; use "
+            "repro.quant.PrecisionPlan (same class, canonical field names)",
+            DeprecationWarning, stacklevel=2)
+        return _PrecisionPlan
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,7 +81,7 @@ class ModelConfig:
     dtype: Any = jnp.bfloat16
     logit_chunk: int = 512
     tie_embeddings: bool = True
-    precision: PrecisionPlan = PrecisionPlan()
+    precision: _PrecisionPlan = _PrecisionPlan()
     remat: bool = True
     scan_layers: bool = True    # False: unroll (dry-run — exact cost analysis,
                                 # per-layer collectives; XLA counts scan bodies once)

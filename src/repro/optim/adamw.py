@@ -50,14 +50,14 @@ def _q_moment(x: jax.Array, bits: int, key, positive: bool = False) -> MomentQ:
     ``positive`` (second moment): quantize √v on the unsigned grid — a
     symmetric per-tensor scheme zeroes small v entries and 1/√v explodes.
     """
+    from repro.quant.qtensor import stochastic_round
+
     qmax = float(2 ** (bits - 1) - 1)
     t0 = jnp.sqrt(x) if positive else x
     red_axis = tuple(range(x.ndim - 1)) if x.ndim > 1 else None
     absmax = jnp.max(jnp.abs(t0), axis=red_axis, keepdims=x.ndim > 1)
     scale = jnp.where(absmax == 0, 1.0, absmax / qmax)
-    t = t0 / scale
-    lo = jnp.floor(t)
-    codes = lo + (jax.random.uniform(key, x.shape) < (t - lo)).astype(jnp.float32)
+    codes = stochastic_round(t0 / scale, key)
     lo_clip = 0.0 if positive else -qmax
     return MomentQ(jnp.clip(codes, lo_clip, qmax).astype(jnp.int8),
                    scale.astype(jnp.float32))

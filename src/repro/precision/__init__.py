@@ -1,4 +1,5 @@
 """ZipML precision channels at LM scale: QAT/int weight storage, double-sampled
-activations, quantized KV cache (models/attention.py), gradient compression."""
+activations, quantized KV cache (models/attention.py), gradient compression.
+All storage is repro.quant.QTensor; all rounding delegates to repro.quant."""
 from . import qat  # noqa: F401
 from . import act_quant, gradcomp  # noqa: F401

@@ -10,7 +10,11 @@ activation memory drops 2×/4× (int8/int4 codes instead of bf16).
 
 Storage cost: per the paper §2.2, Q₁ and Q₂ share the same base level and
 differ by one stochastic bit, so the second sample costs 1 extra bit — the
-bandwidth model in benchmarks/bench_bandwidth_model.py accounts it that way.
+bandwidth model in benchmarks/bench_bandwidth_model.py accounts it that way,
+and ``QTensor.nbits`` on the saved pair reports exactly bits+1.
+
+The quantizer itself is the canonical :func:`repro.quant.ds_pair` (per-tensor
+symmetric int grid); the former inline ``_quant`` copy is gone.
 
 ``ds_dense(x, w, key)`` is a drop-in einsum with this behavior (custom_vjp);
 ``ds_mlp`` wires it through a gated MLP block.
@@ -22,46 +26,46 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import quant
+from repro.quant import QScheme
 
-def _quant(x, bits, key):
-    """Per-tensor symmetric stochastic quantization → (codes int8, scale)."""
-    x32 = x.astype(jnp.float32)
-    qmax = float(2 ** (bits - 1) - 1)
-    absmax = jax.lax.stop_gradient(jnp.max(jnp.abs(x32)))
-    scale = jnp.where(absmax == 0, 1.0, absmax / qmax)
-    t = x32 / scale
-    lo = jnp.floor(t)
-    codes = lo + (jax.random.uniform(key, x.shape) < (t - lo)).astype(jnp.float32)
-    return jnp.clip(codes, -qmax, qmax).astype(jnp.int8), scale
+
+def _act_scheme(bits: int) -> QScheme:
+    """Per-tensor symmetric int grid, double-sampled stochastic rounding."""
+    return QScheme.int_symmetric(bits, scaling="tensor", rounding="ds")
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
 def ds_dense(x, w, key, bits: int = 8):
     """y = Q₁(x)·W with ∂W computed from the independent Q₂(x)."""
+    # primal (no grad requested): draw only the Q₁ plane, with the same split
+    # key ds_pair uses for plane 1 — identical numerics, half the rounding work
     k1, _ = jax.random.split(key)
-    c1, s1 = _quant(x, bits, k1)
-    xq = c1.astype(x.dtype) * s1.astype(x.dtype)
+    qx = quant.encode(x, _act_scheme(bits).with_rounding("stochastic"), k1)
+    xq = qx.decode(x.dtype)
     return jnp.einsum("...i,io->...o", xq, w,
                       preferred_element_type=jnp.float32).astype(x.dtype)
 
 
 def _ds_fwd(x, w, key, bits):
-    k1, k2 = jax.random.split(key)
-    c1, s1 = _quant(x, bits, k1)
-    c2, s2 = _quant(x, bits, k2)
-    xq1 = c1.astype(x.dtype) * s1.astype(x.dtype)
+    from repro.quant import QTensor
+
+    qx = quant.ds_pair(x, _act_scheme(bits), key)
+    xq1 = qx.decode(x.dtype)
     y = jnp.einsum("...i,io->...o", xq1, w,
                    preferred_element_type=jnp.float32).astype(x.dtype)
-    # residuals: int8 codes + scales (the memory win) + the weight reference
-    return y, (c2, s2, w)
+    # residuals: ONLY the Q₂ plane (int8 codes — the memory win) + the
+    # weights; saving the consumed Q₁ plane too would double the stored
+    # activation-code bytes whenever XLA can't DCE across the fwd/bwd cut
+    q2 = QTensor(qx.codes2, qx.scale, qx.scheme.with_rounding("stochastic"))
+    return y, (q2, w)
 
 
 def _ds_bwd(bits, res, g):
-    c2, s2, w = res
-    xdt = w.dtype
-    xq2 = c2.astype(xdt) * s2.astype(xdt)
+    q2, w = res
+    xq2 = q2.decode(w.dtype)
     gx = jnp.einsum("...o,io->...i", g, w,
-                    preferred_element_type=jnp.float32).astype(xdt)
+                    preferred_element_type=jnp.float32).astype(w.dtype)
     flat_g = g.reshape(-1, g.shape[-1])
     flat_x = xq2.reshape(-1, xq2.shape[-1])
     gw = jnp.einsum("ni,no->io", flat_x, flat_g,
@@ -74,7 +78,7 @@ ds_dense.defvjp(_ds_fwd, _ds_bwd)
 
 def ds_mlp(p, x, key, act: str = "silu", bits: int = 8):
     """Gated MLP with double-sampled activation quantization on all three
-    matmuls (drop-in for models/layers.mlp when the plan enables act_ds)."""
+    matmuls (drop-in for models/layers.mlp when the plan enables act_bits)."""
     k1, k2, k3 = jax.random.split(key, 3)
     hg = ds_dense(x, p["gate"]["w"], k1, bits)
     hu = ds_dense(x, p["up"]["w"], k2, bits)

@@ -4,11 +4,12 @@ gradient channel on the TPU ICI/DCI mesh).
 Two layers:
 
 * ``compress_tree`` / ``decompress_tree`` — ZipML row-scaled stochastic
-  quantization (C1, unbiased) of a gradient pytree into int8 codes + scales.
-  With ``error_feedback`` state, the quantization residual is carried to the
-  next step (telescoping bias cancellation — needed because an all-reduce sums
-  many quantized terms per step; the single-worker analysis of App. D does
-  not cover the accumulated worst case, EF restores it).
+  quantization (C1, unbiased) of a gradient pytree into :class:`repro.quant.
+  QTensor` leaves (int8 codes + per-tensor scales). With ``error_feedback``
+  state, the quantization residual is carried to the next step (telescoping
+  bias cancellation — needed because an all-reduce sums many quantized terms
+  per step; the single-worker analysis of App. D does not cover the
+  accumulated worst case, EF restores it).
 
 * ``make_compressed_psum(axis)`` — a shard_map-manual all-reduce over one mesh
   axis (the cross-pod 'pod' axis in production: the slowest link is exactly
@@ -20,34 +21,33 @@ the pod (cheap ICI); the compressed psum handles only the 'pod' axis (DCI).
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+import warnings
 
 import jax
 import jax.numpy as jnp
 
-
-class CompressedLeaf(NamedTuple):
-    codes: jax.Array      # int8 in [-qmax, qmax]
-    scale: jax.Array      # () fp32 per tensor
+from repro import quant
+from repro.quant import QScheme, QTensor
 
 
-def _quantize_leaf(g: jax.Array, bits: int, key) -> CompressedLeaf:
-    g32 = g.astype(jnp.float32)
-    qmax = float(2 ** (bits - 1) - 1)
-    absmax = jnp.max(jnp.abs(g32))
-    scale = jnp.where(absmax == 0, 1.0, absmax / qmax)
-    t = g32 / scale
-    lo = jnp.floor(t)
-    codes = lo + (jax.random.uniform(key, g.shape) < (t - lo)).astype(jnp.float32)
-    return CompressedLeaf(jnp.clip(codes, -qmax, qmax).astype(jnp.int8),
-                          scale.astype(jnp.float32))
+def CompressedLeaf(codes, scale) -> QTensor:
+    """Deprecated: gradient leaves are plain :class:`repro.quant.QTensor`."""
+    warnings.warn(
+        "gradcomp.CompressedLeaf is deprecated; use repro.quant.QTensor "
+        "with QScheme.int_symmetric(bits)", DeprecationWarning, stacklevel=2)
+    return QTensor(codes, jnp.asarray(scale, jnp.float32),
+                   QScheme.int_symmetric(8))
 
 
-def _dequantize_leaf(c: CompressedLeaf) -> jax.Array:
-    return c.codes.astype(jnp.float32) * c.scale
+def _grad_scheme(bits: int) -> QScheme:
+    return QScheme.int_symmetric(bits, scaling="tensor", rounding="stochastic")
 
 
-def compress_tree(grads, bits: int, key, error: Any | None = None):
+def _is_qtensor(x) -> bool:
+    return isinstance(x, QTensor)
+
+
+def compress_tree(grads, bits: int, key, error=None):
     """Quantize a gradient pytree. Returns (compressed, new_error).
 
     ``error``: error-feedback pytree (same structure, fp32) added before
@@ -56,21 +56,21 @@ def compress_tree(grads, bits: int, key, error: Any | None = None):
     leaves, treedef = jax.tree.flatten(grads)
     keys = jax.random.split(key, len(leaves))
     err_leaves = jax.tree.leaves(error) if error is not None else [None] * len(leaves)
+    scheme = _grad_scheme(bits)
     comp, new_err = [], []
     for g, e, k in zip(leaves, err_leaves, keys):
         g32 = g.astype(jnp.float32)
         if e is not None:
             g32 = g32 + e
-        c = _quantize_leaf(g32, bits, k)
+        c = quant.encode(g32, scheme, k)
         comp.append(c)
-        new_err.append(g32 - _dequantize_leaf(c))
+        new_err.append(g32 - c.decode())
     return (jax.tree.unflatten(treedef, comp),
             jax.tree.unflatten(treedef, new_err))
 
 
 def decompress_tree(comp):
-    return jax.tree.map(_dequantize_leaf, comp,
-                        is_leaf=lambda x: isinstance(x, CompressedLeaf))
+    return jax.tree.map(lambda c: c.decode(), comp, is_leaf=_is_qtensor)
 
 
 def init_error_feedback(grads_like):
@@ -94,14 +94,13 @@ def make_compressed_psum(axis: str, bits: int):
     def psum_compressed(grads, key):
         comp, _ = compress_tree(grads, bits, key)
 
-        def reduce_leaf(c: CompressedLeaf):
+        def reduce_leaf(c: QTensor):
             codes_all = jax.lax.all_gather(c.codes, axis)      # (P, …)
             scales_all = jax.lax.all_gather(c.scale, axis)     # (P,)
             vals = codes_all.astype(jnp.float32) * scales_all.reshape(
                 (-1,) + (1,) * c.codes.ndim)
             return vals.mean(axis=0)
 
-        return jax.tree.map(reduce_leaf, comp,
-                            is_leaf=lambda x: isinstance(x, CompressedLeaf))
+        return jax.tree.map(reduce_leaf, comp, is_leaf=_is_qtensor)
 
     return psum_compressed

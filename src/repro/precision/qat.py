@@ -3,17 +3,21 @@
 Two storages for the ZipML weight channel:
 
 * ``quantize_param_tree(params, bits)`` — *int storage*: every matmul weight
-  becomes {w_q: int8 codes, w_scale: fp32 per-out-channel}. layers.dense
-  dequantizes on the fly. This is the serving / dry-run format — HBM weight
-  bytes drop 2×/4× (the paper's SampleStore compression mapped to TPU HBM).
-  With ``optimal=True`` the codes live on variance-optimal levels (C4 DP,
-  fitted per tensor on a sample of entries) instead of the uniform grid —
-  the §3.3 "Optimal5 beats XNOR5" configuration.
+  ``w`` becomes a :class:`repro.quant.QTensor` (int8 codes + fp32 per-out-
+  channel scale). layers.dense dequantizes on the fly. This is the serving /
+  dry-run format — HBM weight bytes drop 2×/4× (the paper's SampleStore
+  compression mapped to TPU HBM). With ``optimal=True`` the codes live on
+  variance-optimal levels (C4 DP, fitted per tensor on a sample of entries)
+  instead of the uniform grid — the §3.3 "Optimal5 beats XNOR5" configuration
+  — stored as a ``grid='levels'`` QTensor with its level table.
 
 * ``fake_quant_tree(params, bits, key)`` — *QAT fake-quant* with the straight-
   through estimator: forward sees quantized values, backward passes through.
   Used inside the train step (weights stay bf16 at rest; the quantization
   noise is part of training, matching XNOR-Net-style min_W l(Q(W)) ).
+
+All rounding goes through the canonical quantizer in :mod:`repro.quant` —
+the former inline ``_int_quantize_weight`` copy is gone.
 """
 from __future__ import annotations
 
@@ -23,8 +27,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import quant
 from repro.core import optimal as opt_mod
-from repro.core.quantize import quantize_to_levels
+from repro.quant import QScheme, QTensor
 
 
 def _is_weight(path: tuple) -> bool:
@@ -34,21 +39,23 @@ def _is_weight(path: tuple) -> bool:
     # would dominate; tables are a small share of weight bytes here)
 
 
-def _int_quantize_weight(w: jax.Array, bits: int) -> dict:
-    """Per-out-channel symmetric int quantization. w: (..., d_in, d_out)."""
-    w32 = w.astype(jnp.float32)
-    qmax = float(2 ** (bits - 1) - 1)
-    absmax = jnp.max(jnp.abs(w32), axis=-2, keepdims=True)     # per out-channel
-    scale = jnp.where(absmax == 0, 1.0, absmax / qmax)
-    codes = jnp.clip(jnp.round(w32 / scale), -qmax, qmax).astype(jnp.int8)
-    return {"w_q": codes, "w_scale": scale.astype(jnp.float32)}
+def _weight_scheme(bits: int, rounding: str = "nearest") -> QScheme:
+    """Per-out-channel symmetric int grid: w is (..., d_in, d_out) → the
+    absmax reduces over d_in (axis -2)."""
+    return QScheme.int_symmetric(bits, scaling="channel", rounding=rounding,
+                                 channel_axis=-2)
 
 
-def _optimal_quantize_weight(w: jax.Array, bits: int, sample: int = 65536) -> dict:
+def _optimal_quantize_weight(w: jax.Array, bits: int, sample: int = 65536) -> QTensor:
     """C4+C5: codes snapped to the per-tensor variance-optimal symmetric level
-    set (fitted on |w| with the discretized DP), stored as int8 level indices
+    set (fitted on |w| with the discretized DP), stored as int16 level indices
     with a dense level table. Wins over the uniform grid exactly when the
-    weight distribution is far from uniform — always, for trained nets."""
+    weight distribution is far from uniform — always, for trained nets.
+
+    Stacked weights (ndim > 2, the scan-over-layers layout) get the table
+    broadcast over the leading axes so every QTensor child carries the layer
+    dim — the pre-QTensor splice format put a dim-less table next to stacked
+    codes, which ``lax.scan`` over layers rejected (seed bug)."""
     w_np = np.asarray(w.astype(jnp.float32)).ravel()
     if w_np.size > sample:
         rng = np.random.default_rng(0)
@@ -57,37 +64,27 @@ def _optimal_quantize_weight(w: jax.Array, bits: int, sample: int = 65536) -> di
     hi = float(np.abs(w_np).max()) or 1.0
     lv = opt_mod.optimal_levels_discretized(np.abs(w_np) / hi, s, M=256) * hi
     levels = jnp.asarray(np.concatenate([-lv[::-1], lv[1:]]), jnp.float32)
-    codes, _ = quantize_to_levels(w.astype(jnp.float32), levels, key=None)
-    return {"w_lvl_codes": codes.astype(jnp.int16), "w_levels": levels}
+    qt = quant.encode(w.astype(jnp.float32),
+                      QScheme.levels(levels.shape[0], rounding="nearest"),
+                      levels=levels)
+    lead = w.shape[:-2]
+    if lead:
+        levels = jnp.broadcast_to(levels, (*lead, levels.shape[0]))
+    scale = jnp.ones(lead, jnp.float32)
+    return QTensor(qt.codes.astype(jnp.int16), scale, qt.scheme, levels=levels)
 
 
 def quantize_param_tree(params, bits: int = 8, optimal: bool = False):
-    """Convert every matmul weight to int storage (see layers.dense)."""
+    """Convert every matmul weight to QTensor storage (see layers.dense)."""
 
     def convert(path, leaf):
         if not _is_weight(path) or leaf.ndim < 2:
             return leaf
         if optimal:
             return _optimal_quantize_weight(leaf, bits)
-        return _int_quantize_weight(leaf, bits)
+        return quant.encode(leaf, _weight_scheme(bits))
 
-    converted = jax.tree_util.tree_map_with_path(convert, params)
-
-    # splice dict-replacements into parent dicts: {'w': {...}} → {...}
-    def splice(node):
-        if isinstance(node, dict):
-            out = {}
-            for k, v in node.items():
-                v = splice(v)
-                if isinstance(v, dict) and ("w_q" in v or "w_lvl_codes" in v) \
-                        and k == "w":
-                    out.update(v)
-                else:
-                    out[k] = v
-            return out
-        return node
-
-    return splice(converted)
+    return jax.tree_util.tree_map_with_path(convert, params)
 
 
 # ---------------------------------------------------------------------------
@@ -116,18 +113,9 @@ def fake_quant(w: jax.Array, bits: int, key=None) -> jax.Array:
     Stochastic rounding when ``key`` given (unbiased E[Q(w)]=w, C1), nearest
     otherwise (XNOR-style deterministic).
     """
-    w32 = w.astype(jnp.float32)
-    qmax = float(2 ** (bits - 1) - 1)
-    absmax = jax.lax.stop_gradient(jnp.max(jnp.abs(w32), axis=-2, keepdims=True))
-    scale = jnp.where(absmax == 0, 1.0, absmax / qmax)
-    t = w32 / scale
-    if key is None:
-        codes = jnp.round(t)
-    else:
-        lo = jnp.floor(t)
-        codes = lo + (jax.random.uniform(key, t.shape) < (t - lo)).astype(jnp.float32)
-    wq = (jnp.clip(codes, -qmax, qmax) * scale).astype(w.dtype)
-    return _ste(w, wq)
+    rounding = "nearest" if key is None else "stochastic"
+    qt = quant.encode(w, _weight_scheme(bits, rounding), key)
+    return _ste(w, qt.decode().astype(w.dtype))
 
 
 def fake_quant_tree(params, bits: int, key=None):
@@ -161,11 +149,8 @@ def _ship_quant_impl(w, bits: int, spec):
     """
     from jax.sharding import PartitionSpec as P
     from repro.models.layers import shard_hint
-    qmax = float(2 ** (bits - 1) - 1)
-    w32 = w.astype(jnp.float32)
-    absmax = jnp.max(jnp.abs(w32), axis=-2, keepdims=True)  # per out-channel
-    scale = jnp.where(absmax == 0, 1.0, absmax / qmax)
-    codes = jnp.clip(jnp.round(w32 / scale), -qmax, qmax).astype(jnp.int8)
+    qt = quant.encode(w, _weight_scheme(bits))
+    codes, scale = qt.codes, qt.scale
     if spec is not None:
         codes = shard_hint(codes, spec)               # pin: local quantize
     codes = jax.lax.optimization_barrier(codes)

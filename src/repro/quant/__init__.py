@@ -1,0 +1,36 @@
+"""repro.quant — the canonical quantization API (storage + plan).
+
+One storage type, one scheme spec, one precision plan:
+
+* :class:`QScheme`   — frozen spec: bits/levels, scaling family, rounding mode.
+* :class:`QTensor`   — registered pytree: codes + scale(s) (+ DS plane /
+  level table) + scheme, with ``encode``/``decode``/``dot``/``ds_pair`` entry
+  points dispatching through :mod:`repro.kernels.registry`.
+* :class:`PrecisionPlan` — the four-channel (sample/model/grad/activation
+  + kv) training/serving plan consumed by the linear suite, the LM train
+  step, serving and checkpointing. ``core.linear.Precision`` and
+  ``models.transformer.PrecisionPlan`` are deprecated aliases of it.
+"""
+from .plan import PrecisionPlan
+from .qtensor import (
+    QTensor,
+    compute_scale,
+    decode,
+    dot,
+    ds_pair,
+    encode,
+    quantize_to_levels_jnp,
+)
+from .scheme import QScheme
+
+__all__ = [
+    "PrecisionPlan",
+    "QScheme",
+    "QTensor",
+    "compute_scale",
+    "decode",
+    "dot",
+    "ds_pair",
+    "encode",
+    "quantize_to_levels_jnp",
+]

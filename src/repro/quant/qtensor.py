@@ -1,0 +1,323 @@
+"""QTensor — the one canonical quantized-tensor storage format.
+
+A ``QTensor`` is a registered JAX pytree holding ``codes`` (the integer
+storage), ``scale`` (the decode multiplier family of its ``QScheme``), an
+optional second double-sampling plane ``codes2`` (§2.2 — Q₁/Q₂ share the base
+level, so the pair costs +1 bit, not 2×), and an optional ``levels`` table
+(C4 variance-optimal grids). The ``QScheme`` rides as static aux data, so
+QTensors flow through ``jit``/``vmap``/``lax.scan``/``shard_map`` and
+checkpoint save/restore like any other pytree.
+
+This module is also the **single implementation** of each rounding mode —
+``stochastic_round`` (floor + Bernoulli up-bit, unbiased by Lemma 6),
+``nearest_round`` (the §5.4 deterministic straw man), and level-table
+rounding — which the former copies in ``precision/act_quant``,
+``precision/gradcomp``, ``precision/qat`` and ``optim/adamw`` now all
+delegate to.
+
+The public entry points ``encode`` / ``decode`` / ``ds_pair`` / ``dot``
+dispatch through :mod:`repro.kernels.registry`, so the pure-jnp ``ref``
+backend and the fused Pallas pipeline share this one storage format.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .scheme import QScheme
+
+
+def _code_dtype(s: int):
+    return jnp.int8 if s <= 127 else jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# Rounding modes — exactly one implementation of each lives here.
+# ---------------------------------------------------------------------------
+
+def stochastic_round(t: jax.Array, key: jax.Array) -> jax.Array:
+    """Unbiased stochastic rounding: ⌊t⌋ + Bernoulli(t − ⌊t⌋) (Lemma 6)."""
+    lo = jnp.floor(t)
+    u = jax.random.uniform(key, t.shape, dtype=jnp.float32)
+    return lo + (u < (t - lo)).astype(jnp.float32)
+
+
+def nearest_round(t: jax.Array) -> jax.Array:
+    """Deterministic nearest rounding — the paper's §5.4 biased straw man."""
+    return jnp.round(t)
+
+
+def _round(t: jax.Array, key: jax.Array | None) -> jax.Array:
+    return nearest_round(t) if key is None else stochastic_round(t, key)
+
+
+# ---------------------------------------------------------------------------
+# Scale families
+# ---------------------------------------------------------------------------
+
+def _reduce_axes(scheme: QScheme, ndim: int):
+    if scheme.scaling == "tensor":
+        return None, False
+    if scheme.scaling == "row":
+        return -1, True
+    if scheme.scaling == "column":
+        return tuple(range(ndim - 1)), False
+    return scheme.channel_axis, True      # 'channel'
+
+
+def compute_scale(x: jax.Array, scheme: QScheme) -> jax.Array:
+    """The decode multiplier for ``x`` under ``scheme``'s scaling family.
+
+    zipml grid → M with |x|/M ≤ 1 (the paper's row/column scale);
+    int grid   → absmax/qmax (one code step). Zeros map to scale 1 so decode
+    of an all-zero tensor is exact. Scales never carry gradients.
+    """
+    x32 = jax.lax.stop_gradient(x.astype(jnp.float32))
+    axes, keepdims = _reduce_axes(scheme, x.ndim)
+    m = jnp.max(jnp.abs(x32), axis=axes, keepdims=keepdims)
+    if scheme.grid == "int":
+        qmax = float(scheme.qmax)
+        return jnp.where(m == 0, 1.0, m / qmax).astype(jnp.float32)
+    return jnp.where(m == 0, 1.0, m).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# QTensor
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class QTensor:
+    """codes + scale(s) (+ optional second DS plane / level table) + scheme."""
+
+    __slots__ = ("codes", "scale", "scheme", "codes2", "levels")
+
+    def __init__(self, codes: jax.Array, scale: jax.Array, scheme: QScheme,
+                 codes2: jax.Array | None = None,
+                 levels: jax.Array | None = None):
+        self.codes = codes
+        self.scale = scale
+        self.scheme = scheme
+        self.codes2 = codes2
+        self.levels = levels
+
+    # ------------------------------------------------------------- pytree --
+    def tree_flatten(self):
+        return (self.codes, self.scale, self.codes2, self.levels), self.scheme
+
+    @classmethod
+    def tree_unflatten(cls, scheme, children):
+        codes, scale, codes2, levels = children
+        return cls(codes, scale, scheme, codes2=codes2, levels=levels)
+
+    # -------------------------------------------------------------- shape --
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    @property
+    def ndim(self):
+        return self.codes.ndim
+
+    @property
+    def size(self):
+        return self.codes.size
+
+    @property
+    def is_ds(self) -> bool:
+        return self.codes2 is not None
+
+    # legacy `Quantized` surface --------------------------------------------
+    @property
+    def s(self) -> int:
+        return self.scheme.s
+
+    @property
+    def signed(self) -> bool:
+        return self.scheme.signed
+
+    @property
+    def bits(self) -> int:
+        return self.scheme.bits
+
+    @property
+    def nbits(self) -> int:
+        """Storage bits per element, host-side. A double-sampled pair costs
+        +1 bit on top of the base code width (§2.2 — the same accounting as
+        ``benchmarks/bench_bandwidth_model.wire_bytes``)."""
+        return self.scheme.code_bits + (1 if self.is_ds else 0)
+
+    @property
+    def nbytes(self) -> int:
+        """Logical HBM/wire bytes: packed codes + scales + level table."""
+        n = int(np.prod(self.codes.shape)) if self.codes.shape else 1
+        total = -(-n * self.nbits // 8)          # ceil(n · nbits / 8)
+        total += int(np.prod(self.scale.shape) if self.scale.shape else 1) * \
+            np.dtype(jnp.float32).itemsize
+        if self.levels is not None:
+            total += int(np.prod(self.levels.shape)) * \
+                np.dtype(jnp.float32).itemsize
+        return int(total)
+
+    # ------------------------------------------------------------- decode --
+    def _decode_plane(self, codes, dtype=None):
+        sch = self.scheme
+        if sch.grid == "levels":
+            lv = self.levels
+            c32 = codes.astype(jnp.int32)
+            if lv.ndim == 1:
+                out = jnp.take(lv, c32)
+            else:
+                # per-slice tables: levels (*lead, n_levels) pairs with codes
+                # (*lead, ...) — the stacked-layer layout that lets a QTensor
+                # ride through lax.scan over layers (each slice gets its table)
+                lead = int(np.prod(lv.shape[:-1]))
+                out = jax.vmap(jnp.take)(
+                    lv.reshape(lead, lv.shape[-1]),
+                    c32.reshape(lead, -1)).reshape(codes.shape)
+            return out.astype(dtype) if dtype is not None else out
+        ct = jnp.float32 if dtype is None else dtype
+        if sch.grid == "int":
+            return codes.astype(ct) * self.scale.astype(ct)
+        return codes.astype(ct) / sch.s * self.scale.astype(ct)
+
+    def decode(self, dtype=None) -> jax.Array:
+        """Dequantize the (first) code plane. ``dtype`` selects the multiply
+        dtype for the int grid (e.g. bf16 weight dequant); default fp32."""
+        return self._decode_plane(self.codes, dtype)
+
+    def decode2(self, dtype=None) -> jax.Array:
+        """Dequantize the second double-sampling plane (Q₂)."""
+        if self.codes2 is None:
+            raise ValueError("QTensor has no second double-sampling plane")
+        return self._decode_plane(self.codes2, dtype)
+
+    def dequantize(self) -> jax.Array:   # old Quantized/IntTensor spelling
+        return self.decode()
+
+    def dot(self, v: jax.Array, backend: str | None = None) -> jax.Array:
+        """decode(self) @ v, dispatched through the kernel-backend registry
+        (the Pallas backend streams int8 codes instead of materializing f32)."""
+        return dot(self, v, backend=backend)
+
+    def __repr__(self):
+        extra = "+ds" if self.is_ds else ""
+        return (f"QTensor({self.codes.shape}, {self.scheme.grid}{extra}, "
+                f"bits={self.scheme.bits}, scaling={self.scheme.scaling})")
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp encode implementations (what the 'ref' backend runs; the Pallas
+# backend is tested bit-exact/distribution-identical against these).
+# ---------------------------------------------------------------------------
+
+def encode_jnp(x: jax.Array, scheme: QScheme, key: jax.Array | None = None,
+               scale: jax.Array | None = None,
+               levels: jax.Array | None = None) -> QTensor:
+    """Reference encoder for every grid/rounding — the seed numerics."""
+    if scheme.rounding == "stochastic" and key is None:
+        raise ValueError("stochastic rounding requires a PRNG key")
+    rkey = None if scheme.rounding == "nearest" else key
+    if scheme.grid == "levels":
+        if levels is None:
+            raise ValueError("grid='levels' requires a level table")
+        codes, _ = quantize_to_levels_jnp(x, levels, rkey)
+        return QTensor(codes, jnp.ones((), jnp.float32), scheme, levels=levels)
+    if scale is None:
+        scale = compute_scale(x, scheme)
+    else:
+        scale = jnp.asarray(scale, jnp.float32)
+    if scheme.grid == "zipml":
+        s = scheme.s
+        xn = (jnp.asarray(x) / scale).astype(jnp.float32)
+        mag = jnp.clip(jnp.abs(xn) if scheme.signed else xn, 0.0, 1.0)
+        codes = _round(mag * s, rkey)
+        if scheme.signed:
+            codes = codes * jnp.sign(xn)
+        return QTensor(codes.astype(_code_dtype(s)), scale, scheme)
+    # symmetric int grid (int8 up to 8 bits, int32 above — no silent overflow)
+    qmax = float(scheme.qmax)
+    t = x.astype(jnp.float32) / scale
+    codes = jnp.clip(_round(t, rkey), -qmax, qmax).astype(_code_dtype(scheme.qmax))
+    return QTensor(codes, scale, scheme)
+
+
+def ds_pair_jnp(x: jax.Array, scheme: QScheme, key: jax.Array,
+                scale: jax.Array | None = None) -> QTensor:
+    """Two independent stochastic planes from one split key — the reference
+    double-sampling draw (the fused Pallas path shares the base level)."""
+    if key is None:
+        raise ValueError("double-sampling ('ds' rounding) requires a PRNG key")
+    if scale is None:
+        scale = compute_scale(x, scheme)
+    one = scheme.with_rounding("stochastic")
+    k1, k2 = jax.random.split(key)
+    q1 = encode_jnp(x, one, k1, scale=scale)
+    q2 = encode_jnp(x, one, k2, scale=scale)
+    return QTensor(q1.codes, q1.scale, scheme.with_rounding("ds"),
+                   codes2=q2.codes)
+
+
+def quantize_to_levels_jnp(
+    v: jax.Array, levels: jax.Array, key: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Stochastic (or nearest, ``key=None``) rounding onto a sorted 1-D level
+    set — unbiased inside the level range. Returns (codes, values)."""
+    levels = jnp.asarray(levels, jnp.float32)
+    v32 = jnp.asarray(v, jnp.float32)
+    k = levels.shape[0]
+    vc = jnp.clip(v32, levels[0], levels[-1])
+    hi_idx = jnp.clip(jnp.searchsorted(levels, vc, side="right"), 1, k - 1)
+    lo_idx = hi_idx - 1
+    lo = levels[lo_idx]
+    hi = levels[hi_idx]
+    width = jnp.maximum(hi - lo, 1e-30)
+    p_up = (vc - lo) / width
+    if key is None:
+        up = p_up >= 0.5
+    else:
+        up = jax.random.uniform(key, v32.shape, dtype=jnp.float32) < p_up
+    codes = jnp.where(up, hi_idx, lo_idx)
+    values = jnp.where(up, hi, lo)
+    return codes.astype(_code_dtype(k - 1)), values
+
+
+# ---------------------------------------------------------------------------
+# Public entry points — dispatch through the kernel-backend registry.
+# ---------------------------------------------------------------------------
+
+def _backend(backend):
+    from repro.kernels import registry
+    return registry.resolve(backend)
+
+
+def encode(x: jax.Array, scheme: QScheme, key: jax.Array | None = None,
+           scale: jax.Array | None = None, levels: jax.Array | None = None,
+           backend: "str | Any | None" = None) -> QTensor:
+    """Quantize ``x`` under ``scheme``. ``rounding='ds'`` draws both planes."""
+    if scheme.rounding == "ds":
+        return ds_pair(x, scheme, key, scale=scale, backend=backend)
+    return _backend(backend).encode(x, scheme, key, scale=scale, levels=levels)
+
+
+def decode(qt: QTensor, dtype=None,
+           backend: "str | Any | None" = None) -> jax.Array:
+    return _backend(backend).decode(qt, dtype=dtype)
+
+
+def ds_pair(x: jax.Array, scheme: QScheme, key: jax.Array,
+            scale: jax.Array | None = None,
+            backend: "str | Any | None" = None) -> QTensor:
+    """Draw the §2.2 double-sampling pair as one QTensor (codes + codes2)."""
+    if key is None:
+        raise ValueError("double-sampling ('ds' rounding) requires a PRNG key")
+    return _backend(backend).ds_pair(x, scheme, key, scale=scale)
+
+
+def dot(qt: QTensor, v: jax.Array,
+        backend: "str | Any | None" = None) -> jax.Array:
+    """decode(qt) @ v — backends may compute it from codes without ever
+    materializing the dequantized tensor."""
+    return _backend(backend).qt_dot(qt, v)

@@ -1,0 +1,90 @@
+"""QScheme — the frozen spec of *how* a tensor is quantized.
+
+One scheme describes everything the paper's Q(v, s) family needs to round-trip
+a tensor through integer codes:
+
+* **bits / s** — the bit budget. Two grid conventions coexist in ZipML:
+  the paper's interval grid (``grid='zipml'``: codes ∈ [-s, s] with
+  s = 2^bits − 1 intervals, value = codes/s · M) and the symmetric integer
+  grid used by the deep-net channels (``grid='int'``: codes ∈ [-qmax, qmax]
+  with qmax = 2^(bits−1) − 1, value = codes · scale). ``grid='levels'``
+  stores indices into an arbitrary (variance-optimal, C4) level table.
+* **scaling family** — 'tensor' (one scalar), 'row' (per-row, last axis),
+  'column' (per-feature, App. A.3), 'channel' (per-out-channel, reduction
+  over ``channel_axis``).
+* **rounding mode** — 'stochastic' (unbiased, Lemma 6), 'nearest'
+  (deterministic, the §5.4 straw man), 'ds' (double sampling §2.2: two
+  independent stochastic planes sharing one base level, +1 bit of storage).
+
+Schemes are frozen/hashable so they ride as static pytree aux data on
+``QTensor`` — ``jit``/``vmap``/``lax.scan`` treat them as compile-time
+constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+GRIDS = ("int", "zipml", "levels")
+SCALINGS = ("tensor", "row", "column", "channel")
+ROUNDINGS = ("stochastic", "nearest", "ds")
+
+
+@dataclasses.dataclass(frozen=True)
+class QScheme:
+    bits: int = 8
+    grid: str = "int"
+    scaling: str = "tensor"
+    rounding: str = "stochastic"
+    signed: bool = True
+    s: int = 0                 # zipml intervals; 0 → 2**bits − 1
+    channel_axis: int = -2     # reduction axis for 'channel' scaling
+
+    def __post_init__(self):
+        if self.grid not in GRIDS:
+            raise ValueError(f"unknown grid {self.grid!r}; have {GRIDS}")
+        if self.scaling not in SCALINGS:
+            raise ValueError(f"unknown scaling {self.scaling!r}; have {SCALINGS}")
+        if self.rounding not in ROUNDINGS:
+            raise ValueError(f"unknown rounding {self.rounding!r}; have {ROUNDINGS}")
+        if self.grid == "zipml" and self.s == 0:
+            object.__setattr__(self, "s", 2 ** self.bits - 1)
+
+    # -- derived grid constants (all host-side Python ints: no jnp on ints) --
+    @property
+    def qmax(self) -> int:
+        """Largest magnitude code of the symmetric int grid."""
+        return 2 ** (self.bits - 1) - 1
+
+    @property
+    def code_bits(self) -> int:
+        """Storage width of one code in bits (host-side; satellite of the old
+        ``Quantized.nbits`` which ran ``jnp.ceil(jnp.log2(...))`` on a Python
+        int). For the zipml grid this is ⌈log₂(s+1)⌉ = s.bit_length()."""
+        if self.grid == "zipml":
+            return max(int(self.s).bit_length(), 1)
+        return self.bits
+
+    def with_rounding(self, rounding: str) -> "QScheme":
+        return dataclasses.replace(self, rounding=rounding)
+
+    # -- conventional constructors ------------------------------------------
+    @classmethod
+    def zipml(cls, s: int, *, scaling: str = "tensor",
+              rounding: str = "stochastic", signed: bool = True) -> "QScheme":
+        """The paper's Q(v, s): s intervals on [0, 1] (signed: [-1, 1])."""
+        return cls(bits=max(int(s).bit_length(), 1), grid="zipml",
+                   scaling=scaling, rounding=rounding, signed=signed, s=int(s))
+
+    @classmethod
+    def int_symmetric(cls, bits: int, *, scaling: str = "tensor",
+                      rounding: str = "stochastic",
+                      channel_axis: int = -2) -> "QScheme":
+        """Symmetric integer grid: value ≈ codes · scale, scale = absmax/qmax."""
+        return cls(bits=int(bits), grid="int", scaling=scaling,
+                   rounding=rounding, channel_axis=channel_axis)
+
+    @classmethod
+    def levels(cls, n_levels: int, *, rounding: str = "nearest") -> "QScheme":
+        """Arbitrary (variance-optimal) level-table storage, C4."""
+        return cls(bits=max(int(n_levels - 1).bit_length(), 1), grid="levels",
+                   rounding=rounding, s=int(n_levels - 1))

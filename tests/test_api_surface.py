@@ -1,0 +1,138 @@
+"""API-surface gate (fast — runs as its own CI job).
+
+Pins three properties of the QTensor/PrecisionPlan redesign:
+
+1. ``repro.quant``'s public exports are exactly the documented set.
+2. Every deprecated alias still resolves to the canonical object AND emits
+   ``DeprecationWarning`` (one release of compatibility, loudly).
+3. No copy of the old inline quantizers survives anywhere in ``src/`` —
+   exactly one encode/decode implementation remains per rounding mode.
+"""
+import os
+import re
+import warnings
+
+import jax.numpy as jnp
+import pytest
+
+import repro.quant as quant
+from repro.quant import PrecisionPlan, QTensor
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src", "repro")
+
+
+class TestPublicExports:
+    def test_quant_all(self):
+        assert set(quant.__all__) == {
+            "PrecisionPlan", "QScheme", "QTensor", "compute_scale", "decode",
+            "dot", "ds_pair", "encode", "quantize_to_levels_jnp",
+        }
+        for name in quant.__all__:
+            assert hasattr(quant, name), name
+
+    def test_plan_canonical_fields(self):
+        import dataclasses
+        names = {f.name for f in dataclasses.fields(PrecisionPlan)}
+        assert {"mode", "sample_bits", "model_bits", "grad_bits", "act_bits",
+                "kv_bits", "model_storage", "optimal_levels"} <= names
+
+
+class TestDeprecatedAliases:
+    def test_linear_precision_warns_and_aliases(self):
+        from repro.core import linear
+        with pytest.warns(DeprecationWarning):
+            P = linear.Precision
+        assert P is PrecisionPlan
+
+    def test_core_package_precision_warns_and_aliases(self):
+        import repro.core as core
+        with pytest.warns(DeprecationWarning):
+            P = core.Precision
+        assert P is PrecisionPlan
+
+    def test_transformer_plan_warns_and_aliases(self):
+        from repro.models import transformer as T
+        with pytest.warns(DeprecationWarning):
+            P = T.PrecisionPlan
+        assert P is PrecisionPlan
+
+    def test_quantized_constructor_warns(self):
+        from repro.core.quantize import Quantized
+        with pytest.warns(DeprecationWarning):
+            q = Quantized(jnp.zeros((4,), jnp.int8), jnp.float32(1.0), 7)
+        assert isinstance(q, QTensor) and q.s == 7
+
+    def test_inttensor_constructor_warns(self):
+        from repro.core.quantize import IntTensor
+        with pytest.warns(DeprecationWarning):
+            q = IntTensor(jnp.zeros((4,), jnp.int8), jnp.float32(1.0), 8)
+        assert isinstance(q, QTensor) and q.scheme.grid == "int"
+
+    def test_compressed_leaf_warns(self):
+        from repro.precision.gradcomp import CompressedLeaf
+        with pytest.warns(DeprecationWarning):
+            q = CompressedLeaf(jnp.zeros((4,), jnp.int8), jnp.float32(1.0))
+        assert isinstance(q, QTensor)
+
+    def test_legacy_plan_kwargs_warn(self):
+        with pytest.warns(DeprecationWarning):
+            p = PrecisionPlan(weight_bits=8)
+        assert p.model_bits == 8
+
+    def test_legacy_plan_attrs_warn(self):
+        p = PrecisionPlan(model_bits=8, act_bits=4)
+        for attr, want in [("weight_bits", 8), ("bits_model", 8),
+                           ("act_ds_bits", 4), ("use_optimal_levels", False),
+                           ("weight_storage", "fake")]:
+            with pytest.warns(DeprecationWarning):
+                assert getattr(p, attr) == want
+
+    def test_canonical_construction_is_silent(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            PrecisionPlan("e2e", sample_bits=6, model_bits=8, grad_bits=8,
+                          kv_bits=8, model_storage="int")
+
+
+class TestNoSurvivingCopies:
+    """grep the source tree: the deleted inline quantizers must not regrow."""
+
+    BANNED = [
+        r"def _quant\(",                      # act_quant's inline copy
+        r"def _quantize_leaf\(",              # gradcomp's inline copy
+        r"def _int_quantize_weight\(",        # qat's inline copy
+        r"class Quantized\(NamedTuple\)",     # old storage NamedTuples
+        r"class IntTensor\(NamedTuple\)",
+        r"class CompressedLeaf\(NamedTuple\)",
+    ]
+    # the single blessed home of the rounding-mode implementations
+    ALLOWED_ROUNDING_HOME = os.path.join("quant", "qtensor.py")
+
+    def _source_files(self):
+        for root, _, files in os.walk(SRC):
+            for f in files:
+                if f.endswith(".py"):
+                    yield os.path.join(root, f)
+
+    def test_banned_patterns_absent(self):
+        hits = []
+        for path in self._source_files():
+            text = open(path).read()
+            for pat in self.BANNED:
+                if re.search(pat, text):
+                    hits.append((os.path.relpath(path, SRC), pat))
+        assert not hits, f"old inline quantizers resurfaced: {hits}"
+
+    def test_one_stochastic_round_implementation(self):
+        """The floor+Bernoulli stochastic-rounding idiom exists exactly once
+        in src/ (the Pallas kernel body in kernels/ is its uint16 fixed-point
+        mirror, pinned bit-exact by tests/test_ds_fused.py)."""
+        pat = re.compile(r"jax\.random\.uniform\([^)]*\)[^\n]*< \(t - lo\)"
+                         r"|\(u < \(t - lo\)\)")
+        homes = []
+        for path in self._source_files():
+            if "kernels" in path.split(os.sep):
+                continue
+            if pat.search(open(path).read()):
+                homes.append(os.path.relpath(path, SRC))
+        assert homes == [self.ALLOWED_ROUNDING_HOME], homes

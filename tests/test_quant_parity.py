@@ -1,0 +1,137 @@
+"""Bit-exact parity: the one canonical quantizer in repro/quant vs frozen
+copies of the three deleted inline quantizers (satellite of the QTensor PR).
+
+The old implementations — ``precision/act_quant._quant``,
+``precision/gradcomp._quantize_leaf``, ``precision/qat._int_quantize_weight``
+— are reproduced verbatim below; every test pins codes AND scales equal to
+the new ``repro.quant.encode`` output under the same PRNG key. The zipml-grid
+path (``core.quantize.quantize``) is pinned the same way.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import quant
+from repro.core import quantize as qz
+from repro.quant import QScheme
+
+KEY = jax.random.PRNGKey(42)
+
+
+# --- frozen copies of the deleted quantizers (seed-era code, verbatim) ------
+
+def _old_act_quant(x, bits, key):
+    """precision/act_quant._quant as of the seed."""
+    x32 = x.astype(jnp.float32)
+    qmax = float(2 ** (bits - 1) - 1)
+    absmax = jax.lax.stop_gradient(jnp.max(jnp.abs(x32)))
+    scale = jnp.where(absmax == 0, 1.0, absmax / qmax)
+    t = x32 / scale
+    lo = jnp.floor(t)
+    codes = lo + (jax.random.uniform(key, x.shape) < (t - lo)).astype(jnp.float32)
+    return jnp.clip(codes, -qmax, qmax).astype(jnp.int8), scale
+
+
+def _old_gradcomp_leaf(g, bits, key):
+    """precision/gradcomp._quantize_leaf as of the seed."""
+    g32 = g.astype(jnp.float32)
+    qmax = float(2 ** (bits - 1) - 1)
+    absmax = jnp.max(jnp.abs(g32))
+    scale = jnp.where(absmax == 0, 1.0, absmax / qmax)
+    t = g32 / scale
+    lo = jnp.floor(t)
+    codes = lo + (jax.random.uniform(key, g.shape) < (t - lo)).astype(jnp.float32)
+    return (jnp.clip(codes, -qmax, qmax).astype(jnp.int8),
+            scale.astype(jnp.float32))
+
+
+def _old_qat_weight(w, bits):
+    """precision/qat._int_quantize_weight as of the seed."""
+    w32 = w.astype(jnp.float32)
+    qmax = float(2 ** (bits - 1) - 1)
+    absmax = jnp.max(jnp.abs(w32), axis=-2, keepdims=True)
+    scale = jnp.where(absmax == 0, 1.0, absmax / qmax)
+    codes = jnp.clip(jnp.round(w32 / scale), -qmax, qmax).astype(jnp.int8)
+    return {"w_q": codes, "w_scale": scale.astype(jnp.float32)}
+
+
+def _old_zipml_quantize(v, s, key, scale, signed=True):
+    """core/quantize.quantize as of the seed (codes + scale)."""
+    v = jnp.asarray(v)
+    x = (v / scale).astype(jnp.float32)
+    mag = jnp.clip(jnp.abs(x) if signed else x, 0.0, 1.0)
+    t = mag * s
+    lo = jnp.clip(jnp.floor(t), 0, s - 1)
+    p_up = t - lo
+    u = jax.random.uniform(key, v.shape, dtype=jnp.float32)
+    codes = lo + (u < p_up).astype(jnp.float32)
+    if signed:
+        codes = codes * jnp.sign(x)
+    dt = jnp.int8 if s <= 127 else jnp.int32
+    return codes.astype(dt), jnp.asarray(scale)
+
+
+class TestIntGridParity:
+    @pytest.mark.parametrize("bits", [4, 8])
+    @pytest.mark.parametrize("shape", [(16,), (8, 32), (4, 8, 16)])
+    def test_act_quant(self, bits, shape):
+        x = jax.random.normal(KEY, shape) * 3
+        k = jax.random.fold_in(KEY, bits)
+        want_c, want_s = _old_act_quant(x, bits, k)
+        got = quant.encode(x, QScheme.int_symmetric(bits), k)
+        np.testing.assert_array_equal(np.asarray(got.codes), np.asarray(want_c))
+        np.testing.assert_array_equal(np.asarray(got.scale), np.asarray(want_s))
+
+    @pytest.mark.parametrize("bits", [2, 8])
+    def test_gradcomp_leaf(self, bits):
+        g = jax.random.normal(KEY, (64,)) * 0.1
+        k = jax.random.fold_in(KEY, 7 + bits)
+        want_c, want_s = _old_gradcomp_leaf(g, bits, k)
+        got = quant.encode(g, QScheme.int_symmetric(bits), k)
+        np.testing.assert_array_equal(np.asarray(got.codes), np.asarray(want_c))
+        np.testing.assert_array_equal(np.asarray(got.scale), np.asarray(want_s))
+
+    @pytest.mark.parametrize("bits", [4, 8])
+    def test_qat_weight(self, bits):
+        w = jax.random.normal(KEY, (32, 16)) * 0.05
+        want = _old_qat_weight(w, bits)
+        got = quant.encode(w, QScheme.int_symmetric(
+            bits, scaling="channel", rounding="nearest", channel_axis=-2))
+        np.testing.assert_array_equal(np.asarray(got.codes),
+                                      np.asarray(want["w_q"]))
+        np.testing.assert_array_equal(np.asarray(got.scale),
+                                      np.asarray(want["w_scale"]))
+
+    def test_ds_pair_matches_split_key_draws(self):
+        """The double-sampled activation pair == two old _quant calls with the
+        same split keys (what act_quant.ds_dense used to do)."""
+        x = jax.random.normal(KEY, (16, 24))
+        k1, k2 = jax.random.split(KEY)
+        want1, s1 = _old_act_quant(x, 8, k1)
+        want2, s2 = _old_act_quant(x, 8, k2)
+        qt = quant.ds_pair(x, QScheme.int_symmetric(8, rounding="ds"), KEY)
+        np.testing.assert_array_equal(np.asarray(qt.codes), np.asarray(want1))
+        np.testing.assert_array_equal(np.asarray(qt.codes2), np.asarray(want2))
+        np.testing.assert_array_equal(np.asarray(qt.scale), np.asarray(s1))
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+class TestZipmlGridParity:
+    @pytest.mark.parametrize("s", [1, 7, 255])
+    def test_stochastic(self, s):
+        v = jax.random.normal(KEY, (8, 16)) * 2
+        scale = qz.row_scale(v)
+        k = jax.random.fold_in(KEY, s)
+        want_c, want_s = _old_zipml_quantize(v, s, k, scale)
+        got = qz.quantize(v, s, k, scale=scale)
+        np.testing.assert_array_equal(np.asarray(got.codes), np.asarray(want_c))
+        np.testing.assert_array_equal(np.asarray(got.scale), np.asarray(want_s))
+        assert got.codes.dtype == want_c.dtype
+
+    def test_column_scaled(self):
+        v = jax.random.normal(KEY, (32, 5)) * jnp.asarray([1, 5, 0.2, 2, 9.0])
+        scale = qz.column_scale(v)
+        want_c, _ = _old_zipml_quantize(v, 15, KEY, scale)
+        got = qz.quantize(v, 15, KEY, scale=scale)
+        np.testing.assert_array_equal(np.asarray(got.codes), np.asarray(want_c))
