@@ -39,10 +39,11 @@ BENCHES = [
     ("fig9_chebyshev_negative", "benchmarks.bench_chebyshev"),
     ("fig12_refetch", "benchmarks.bench_refetch"),
     ("ds_fused", "benchmarks.bench_ds_fused"),
+    ("serve_engine", "benchmarks.bench_serve_engine"),
 ]
 
 # fast, shape-independent claims only — what CI runs on every PR
-SMOKE_BENCHES = {"fig5_bandwidth_model", "ds_fused"}
+SMOKE_BENCHES = {"fig5_bandwidth_model", "ds_fused", "serve_engine"}
 
 
 def main(argv=None) -> int:

@@ -6,6 +6,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from . import paged_attn as pa_mod
 from . import qmm as qmm_mod
 from . import ssd as ssd_mod
 from . import stoch_quant as sq_mod
@@ -121,6 +122,33 @@ def quantized_matmul(x: jax.Array, codes: jax.Array, scale: jax.Array) -> jax.Ar
                     bk=_block_fit(k, 512), bn=_block_fit(n, 256),
                     interpret=INTERPRET)
     return y[:m0, :n0]
+
+
+def kv_bits_of(pages: jax.Array) -> int:
+    """Infer the KV quantization width from a page plane's dtype (the pool's
+    storage convention): uint8 = packed int4, int8 = int8, else bf16 (0)."""
+    if pages.dtype == jnp.uint8:
+        return 4
+    if pages.dtype == jnp.int8:
+        return 8
+    return 0
+
+
+def paged_attention(q, k_pages, v_pages, k_scale, v_scale, block_table,
+                    seq_lens, *, softmax_scale: float):
+    """Paged flash-decode attention via the Pallas kernel (in-kernel int8/int4
+    dequant). q: (B, H, D); pages (P, page, Hkv, D[/2]); scales may be None
+    (bf16 pool). Returns (B, H, D) in q.dtype.
+    """
+    hkv = k_pages.shape[2]
+    if k_scale is None:
+        k_scale = jnp.ones((1, 1, hkv, 1), jnp.float32)
+        v_scale = jnp.ones((1, 1, hkv, 1), jnp.float32)
+    out = pa_mod.paged_decode_attn(
+        q, k_pages, v_pages, k_scale, v_scale, block_table, seq_lens,
+        softmax_scale=float(softmax_scale), kv_bits=kv_bits_of(k_pages),
+        interpret=INTERPRET)
+    return out.astype(q.dtype)
 
 
 def ssd_chunked_kernel(xh, dt, a_log, b_mat, c_mat, chunk: int = 256):

@@ -45,6 +45,59 @@ def qmm_ref(x, codes, scale):
     return jnp.dot(x.astype(jnp.float32), w)
 
 
+def dequant_pages_ref(pages, scale):
+    """Dequantize KV pages to bf16 rows — exactly ``KVCache.materialize``'s
+    per-row math, so bf16/int8/int4 paged serving stays bit-compatible with
+    the legacy ring buffer.
+
+    pages: (…, page, Hkv, D) bf16 | int8 codes | uint8 packed int4 (…, D/2);
+    scale: (…, page, Hkv, 1) f32 or None (bf16 passthrough).
+    """
+    if scale is None:
+        return pages
+    if pages.dtype == jnp.uint8:
+        from repro.quant import unpack_int4
+
+        codes = unpack_int4(pages)
+    else:
+        codes = pages.astype(jnp.float32)
+    return (codes * scale).astype(jnp.bfloat16)
+
+
+def gather_pages_ref(pages, block_table):
+    """(P, page, Hkv, Dk) pool + (B, MAXP) table → (B, MAXP·page, Hkv, Dk)
+    contiguous per-sequence KV rows (rows past seq_len are garbage — the
+    attention mask is what makes them unread)."""
+    g = pages[block_table]                       # (B, MAXP, page, Hkv, Dk)
+    b, mp, page = g.shape[:3]
+    return g.reshape(b, mp * page, *g.shape[3:])
+
+
+def paged_attention_ref(q, k_pages, v_pages, k_scale, v_scale, block_table,
+                        seq_lens, *, softmax_scale):
+    """Oracle for kernels/paged_attn.py: gather pages through the block table,
+    dequantize with the ring-buffer math, run models.attention.decode_attention
+    (the legacy masked-softmax decode) — bit-exact with the ring path whenever
+    the gathered rows equal the ring rows.
+
+    q: (B, H, D); k/v_pages: (P, page, Hkv, D[/2]); block_table: (B, MAXP)
+    int32; seq_lens: (B,) int32. Returns (B, H, D) in q.dtype.
+    """
+    from repro.models import attention as attn
+
+    k = dequant_pages_ref(gather_pages_ref(k_pages, block_table),
+                          gather_pages_ref(k_scale, block_table)
+                          if k_scale is not None else None)
+    v = dequant_pages_ref(gather_pages_ref(v_pages, block_table),
+                          gather_pages_ref(v_scale, block_table)
+                          if v_scale is not None else None)
+    b, h, d = q.shape
+    spec = attn.AttnSpec(n_heads=h, n_kv_heads=k.shape[2], head_dim=d,
+                         softmax_scale=softmax_scale)
+    out = attn.decode_attention(q[:, None], k, v, spec, kv_len=seq_lens)
+    return out[:, 0]
+
+
 def ssd_chunk_scan_ref(xh, dt, logdec, bmat, cmat):
     """Reference chunked SSD (mirrors models/ssm.ssd_chunked math).
 

@@ -69,6 +69,19 @@ class KernelBackend:
         """decode(qt) @ v; backends may stream codes instead."""
         return qt.decode() @ v
 
+    def paged_attention(self, q, k_pages, v_pages, k_scale, v_scale,
+                        block_table, seq_lens, *, softmax_scale):
+        """Decode attention of q (B, H, D) against a paged, possibly
+        quantized KV pool (repro/serve/pages.py layout). The base
+        implementation gathers pages through the block table and reuses the
+        legacy masked-softmax decode — bit-exact with the ring-buffer cache;
+        backends may stream codes page-by-page instead."""
+        from repro.kernels import ref
+
+        return ref.paged_attention_ref(
+            q, k_pages, v_pages, k_scale, v_scale, block_table, seq_lens,
+            softmax_scale=softmax_scale)
+
     # ------------------------------------------------- tuple-form hot loop --
     def ds_quant_values(self, a, s, key, scale=None):
         raise NotImplementedError
@@ -204,6 +217,16 @@ class _PallasBackend(KernelBackend):
         # pallas QTensors stay structurally identical (same nbytes, stackable,
         # checkpoint-compatible)
         return QTensor(c1, scale, scheme.with_rounding("ds"), codes2=c2)
+
+    def paged_attention(self, q, k_pages, v_pages, k_scale, v_scale,
+                        block_table, seq_lens, *, softmax_scale):
+        """Fused paged flash-decode: block-table-indexed page DMA (scalar
+        prefetch) + in-VMEM int8/int4 dequant (kernels/paged_attn.py)."""
+        from repro.kernels import ops
+
+        return ops.paged_attention(
+            q, k_pages, v_pages, k_scale, v_scale, block_table, seq_lens,
+            softmax_scale=softmax_scale)
 
     def qt_dot(self, qt, v):
         """Stream int8 codes through the qmv kernel when the scale factors

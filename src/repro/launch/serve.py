@@ -1,9 +1,17 @@
-"""Serving driver: batched prefill + decode with the ZipML serving channels
-(int8 weights at rest, int8/int4 KV cache).
+"""Serving driver — a thin CLI over the continuous-batching engine
+(repro/serve/engine.py) with the ZipML serving channels: int8 weights at
+rest, bf16/int8/packed-int4 paged KV cache.
 
-Usage:
+Engine mode (default) serves a mixed-length synthetic trace:
+
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
-      --batch 4 --prompt-len 32 --gen 16 --kv-bits 8 --weight-bits 8
+      --requests 16 --max-new 24 --kv-bits 4 --page-size 8
+
+Legacy single-shot mode (the pre-engine fixed-batch greedy loop, kept as a
+compatibility wrapper around the ring-buffer cache):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
+      --legacy --batch 4 --prompt-len 32 --gen 16 --kv-bits 8
 """
 from __future__ import annotations
 
@@ -22,15 +30,7 @@ from repro.precision.qat import quantize_param_tree
 from repro.quant import PrecisionPlan
 
 
-def serve(arch: str, *, reduced: bool = True, batch: int = 4,
-          prompt_len: int = 32, gen: int = 16, kv_bits: int = 0,
-          weight_bits: int = 0, optimal_levels: bool = False, seed: int = 0,
-          plan: PrecisionPlan | None = None):
-    """Greedy-decode ``gen`` tokens for a random prompt batch.
-
-    ``plan``: a full :class:`repro.quant.PrecisionPlan`; when given it
-    overrides the individual ``kv_bits``/``weight_bits``/``optimal_levels``
-    knobs (the one-plan workflow). Returns (tokens (B, prompt+gen), tokens/s)."""
+def _resolve_plan(plan, kv_bits, weight_bits, optimal_levels) -> PrecisionPlan:
     if plan is None:
         plan = PrecisionPlan(kv_bits=kv_bits, model_bits=weight_bits,
                              model_storage="int" if weight_bits else "fake",
@@ -40,6 +40,10 @@ def serve(arch: str, *, reduced: bool = True, batch: int = 4,
         # always means real int codes at rest — normalize so a plan built for
         # training can't silently serve bf16 weights labeled as quantized
         plan = dataclasses.replace(plan, model_storage="int")
+    return plan
+
+
+def _build(arch: str, *, reduced: bool, plan: PrecisionPlan, seed: int):
     get = configs.get_reduced if reduced else configs.get_config
     cfg = get(arch, precision=plan)
     key = jax.random.PRNGKey(seed)
@@ -47,6 +51,28 @@ def serve(arch: str, *, reduced: bool = True, batch: int = 4,
     if plan.model_bits:
         params = quantize_param_tree(params, bits=plan.model_bits,
                                      optimal=plan.optimal_levels)
+    return cfg, params, key
+
+
+def serve(arch: str, *, reduced: bool = True, batch: int = 4,
+          prompt_len: int = 32, gen: int = 16, kv_bits: int = 0,
+          weight_bits: int = 0, optimal_levels: bool = False, seed: int = 0,
+          plan: PrecisionPlan | None = None):
+    """Legacy single-shot serve: greedy-decode ``gen`` tokens for one random
+    fixed-length prompt batch against the ring-buffer cache.
+
+    ``plan``: a full :class:`repro.quant.PrecisionPlan`; when given it
+    overrides the individual ``kv_bits``/``weight_bits``/``optimal_levels``
+    knobs. Returns (tokens (B, prompt+gen), steady-state tokens/s).
+
+    The reported tokens/s measures **steady-state decode only**: a warmup
+    step runs (and is discarded — state is functional) before the clock
+    starts, so jit compilation of the decode step is never billed. The old
+    implementation took t0 before the first prefill, which billed the entire
+    XLA compile to throughput.
+    """
+    plan = _resolve_plan(plan, kv_bits, weight_bits, optimal_levels)
+    cfg, params, key = _build(arch, reduced=reduced, plan=plan, seed=seed)
     prompts = jax.random.randint(jax.random.fold_in(key, 1),
                                  (batch, prompt_len), 0, cfg.vocab_size)
     vis = None
@@ -54,39 +80,125 @@ def serve(arch: str, *, reduced: bool = True, batch: int = 4,
         vis = jnp.zeros((batch, cfg.n_vis_tokens, cfg.d_model), jnp.float32)
 
     smax = prompt_len + gen
-    t0 = time.time()
     logits, state = T.prefill(params, prompts, cfg, vision_tokens=vis,
                               pad_to=smax)
     next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
     step_fn = jax.jit(make_serve_step(cfg))
+    # warmup: trigger compile + first-dispatch costs on a throwaway call
+    # (state is immutable — discarding the result leaves the decode unchanged)
+    _, warm_tok, _ = step_fn(params, state, next_tok)
+    warm_tok.block_until_ready()
+
     out = [prompts, next_tok]
+    t0 = time.perf_counter()
     for _ in range(gen - 1):
         _, nxt, state = step_fn(params, state, out[-1])
         out.append(nxt[:, None])
     tokens = jnp.concatenate(out, axis=1)
     tokens.block_until_ready()
-    dt = time.time() - t0
-    tps = batch * gen / dt
+    dt = time.perf_counter() - t0
+    # gen=1 times zero decode steps — report NaN rather than batch/ε nonsense
+    tps = batch * (gen - 1) / dt if gen > 1 else float("nan")
     return np.asarray(tokens), tps
+
+
+def make_trace(n_requests: int, vocab_size: int, *, max_new: int = 16,
+               min_prompt: int = 4, max_prompt: int = 32, seed: int = 0,
+               temperature: float = 0.0, top_k: int = 0):
+    """A mixed-length synthetic request trace (varied prompt/gen lengths)."""
+    from repro.serve import Request
+
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid in range(n_requests):
+        s = int(rng.integers(min_prompt, max_prompt + 1))
+        g = int(rng.integers(max(1, max_new // 4), max_new + 1))
+        reqs.append(Request(
+            rid=rid, prompt=rng.integers(0, vocab_size, s),
+            max_new_tokens=g, temperature=temperature, top_k=top_k, seed=seed))
+    return reqs
+
+
+def serve_engine(arch: str, *, reduced: bool = True, n_requests: int = 16,
+                 max_new: int = 16, min_prompt: int = 4, max_prompt: int = 32,
+                 kv_bits: int = 0, weight_bits: int = 0,
+                 optimal_levels: bool = False, seed: int = 0,
+                 plan: PrecisionPlan | None = None, max_slots: int = 4,
+                 page_size: int = 8, temperature: float = 0.0,
+                 top_k: int = 0, backend: str | None = None):
+    """Serve a mixed-length trace through the continuous-batching engine.
+
+    Returns (engine, results dict rid → Finished). Throughput/byte stats via
+    ``engine.throughput()`` / ``engine.kv_pool_nbytes()`` / ``engine.stats``.
+    """
+    from repro.serve import ServeEngine
+
+    plan = _resolve_plan(plan, kv_bits, weight_bits, optimal_levels)
+    cfg, params, _ = _build(arch, reduced=reduced, plan=plan, seed=seed)
+    max_seq_len = max_prompt + max_new + page_size
+    engine = ServeEngine(params, cfg, plan=plan, max_slots=max_slots,
+                         page_size=page_size, max_seq_len=max_seq_len,
+                         backend=backend)
+    trace = make_trace(n_requests, cfg.vocab_size, max_new=max_new,
+                       min_prompt=min_prompt, max_prompt=max_prompt,
+                       seed=seed, temperature=temperature, top_k=top_k)
+    results = engine.run(trace)
+    return engine, results
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--kv-bits", type=int, default=0, choices=(0, 4, 8))
+    ap.add_argument("--weight-bits", type=int, default=0)
+    ap.add_argument("--optimal-levels", action="store_true")
+    ap.add_argument("--kernel-backend", default=None, choices=(None, "ref", "pallas"))
+    # engine mode (default)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--min-prompt", type=int, default=4)
+    ap.add_argument("--max-prompt", type=int, default=32)
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    # legacy single-shot mode
+    ap.add_argument("--legacy", action="store_true",
+                    help="old fixed-batch greedy loop (ring-buffer cache)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--kv-bits", type=int, default=0)
-    ap.add_argument("--weight-bits", type=int, default=0)
-    ap.add_argument("--optimal-levels", action="store_true")
     args = ap.parse_args(argv)
-    tokens, tps = serve(args.arch, reduced=args.reduced, batch=args.batch,
-                        prompt_len=args.prompt_len, gen=args.gen,
-                        kv_bits=args.kv_bits, weight_bits=args.weight_bits,
-                        optimal_levels=args.optimal_levels)
-    print(f"[serve] generated {tokens.shape} tokens at {tps:.1f} tok/s "
-          f"(kv_bits={args.kv_bits}, weight_bits={args.weight_bits})")
+
+    if args.legacy:
+        tokens, tps = serve(args.arch, reduced=args.reduced, batch=args.batch,
+                            prompt_len=args.prompt_len, gen=args.gen,
+                            kv_bits=args.kv_bits, weight_bits=args.weight_bits,
+                            optimal_levels=args.optimal_levels)
+        print(f"[serve] generated {tokens.shape} tokens at {tps:.1f} tok/s "
+              f"steady-state (kv_bits={args.kv_bits}, "
+              f"weight_bits={args.weight_bits})")
+        return
+
+    engine, results = serve_engine(
+        args.arch, reduced=args.reduced, n_requests=args.requests,
+        max_new=args.max_new, min_prompt=args.min_prompt,
+        max_prompt=args.max_prompt, kv_bits=args.kv_bits,
+        weight_bits=args.weight_bits, optimal_levels=args.optimal_levels,
+        max_slots=args.max_slots, page_size=args.page_size,
+        temperature=args.temperature, top_k=args.top_k,
+        backend=args.kernel_backend)
+    st = engine.stats
+    gen_total = sum(f.n_generated for f in results.values())
+    print(f"[serve-engine] {len(results)} requests, {gen_total} tokens "
+          f"generated in {st['decode_steps']} decode steps "
+          f"(+{st['prefill_tokens']} prefill tokens)")
+    print(f"[serve-engine] steady-state decode: {engine.throughput():.1f} "
+          f"tok/s; preemptions={st['preemptions']}")
+    print(f"[serve-engine] KV pool: {engine.kv_pool_nbytes():,} bytes "
+          f"(kv_bits={args.kv_bits or 'bf16'}, "
+          f"page_size={args.page_size}) via QTensor.nbytes")
 
 
 if __name__ == "__main__":

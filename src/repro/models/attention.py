@@ -210,19 +210,16 @@ class KVCache(NamedTuple):
 
 
 def _pack_int4(codes: jax.Array) -> jax.Array:
-    """int codes in [-7, 7], last dim even → uint8 (…, D/2): offset-binary
-    nibbles (c+8 ∈ [1,15]; 0 reserved ⇒ unpack is branch-free)."""
-    c = (codes.astype(jnp.int32) + 8).astype(jnp.uint8)
-    lo = c[..., 0::2]
-    hi = c[..., 1::2]
-    return (lo | (hi << 4)).astype(jnp.uint8)
+    """Delegates to the canonical :func:`repro.quant.pack_int4`."""
+    from repro.quant import pack_int4
+
+    return pack_int4(codes)
 
 
 def _unpack_int4(packed: jax.Array) -> jax.Array:
-    lo = (packed & 0xF).astype(jnp.float32) - 8.0
-    hi = ((packed >> 4) & 0xF).astype(jnp.float32) - 8.0
-    out = jnp.stack([lo, hi], axis=-1)
-    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+    from repro.quant import unpack_int4
+
+    return unpack_int4(packed)
 
 
 def init_kv_cache(batch: int, smax: int, n_kv: int, head_dim: int,
@@ -348,16 +345,24 @@ def prefill_cache_from_kv(k: jax.Array, v: jax.Array, *, window: int = 0,
     return KVCache(k, v, length)
 
 
-def attention_decode_step(p: Params, x: jax.Array, cache: KVCache, spec: AttnSpec,
-                          *, kv_bits: int = 0) -> tuple[jax.Array, KVCache]:
-    """x: (B, 1, d). Appends to cache and attends. Returns (out, new_cache)."""
+def decode_qkv(p: Params, x: jax.Array, spec: AttnSpec, pos: jax.Array):
+    """Single-token q/k/v projections + RoPE at absolute positions ``pos``
+    (B, 1) — shared by the ring-buffer decode step and the paged serving
+    engine, so both quantize/attend over identical rows."""
     b = x.shape[0]
     q = dense(p["q"], x).reshape(b, 1, spec.n_heads, spec.head_dim)
     k = dense(p["k"], x).reshape(b, 1, spec.n_kv_heads, spec.head_dim)
     v = dense(p["v"], x).reshape(b, 1, spec.n_kv_heads, spec.head_dim)
-    pos = cache.length[:, None]  # (B, 1) absolute position
     q = apply_rope(q, pos, spec.rope_theta)
     k = apply_rope(k, pos, spec.rope_theta)
+    return q, k, v
+
+
+def attention_decode_step(p: Params, x: jax.Array, cache: KVCache, spec: AttnSpec,
+                          *, kv_bits: int = 0) -> tuple[jax.Array, KVCache]:
+    """x: (B, 1, d). Appends to cache and attends. Returns (out, new_cache)."""
+    b = x.shape[0]
+    q, k, v = decode_qkv(p, x, spec, cache.length[:, None])
     cache = update_kv_cache(cache, k, v, window=spec.window, kv_bits=kv_bits)
     kc, vc = cache.materialize()
     smax = kc.shape[1]

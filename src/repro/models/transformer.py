@@ -413,11 +413,18 @@ def loss_fn(params: Params, tokens: jax.Array, targets: jax.Array,
 # ---------------------------------------------------------------------------
 
 def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig,
-            vision_tokens: jax.Array | None = None, pad_to: int = 0):
+            vision_tokens: jax.Array | None = None, pad_to: int = 0,
+            last_pos: jax.Array | None = None):
     """Process a full prompt; return (last-token logits (B, V), DecodeState).
 
     Caches are sized to the prompt length (the decode_* shapes measure one
     step against a cache of exactly seq_len).
+
+    ``last_pos``: optional (traced) index of the position to read logits
+    from, instead of the final one — lets callers right-pad prompts to a
+    bucketed length (one jit compile per bucket, not per exact length)
+    while still reading the true last-token logits; causality keeps
+    positions ≤ last_pos unaffected by the padding garbage behind them.
     """
     kvb = cfg.precision.kv_bits
     x = embed(params["embed"], tokens).astype(cfg.dtype)
@@ -492,7 +499,12 @@ def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig,
             cfg, lambda h, layer: attn_layer_collect(layer, h), x, params["layers"])
         state = DecodeState(caches, step=tokens.shape[1])
 
-    h_last = rmsnorm(params["final_norm"], x[:, -1:, :])
+    if last_pos is None:
+        h_sel = x[:, -1:, :]
+    else:
+        idx = jnp.reshape(jnp.asarray(last_pos, jnp.int32), (1,))
+        h_sel = jnp.take(x, idx, axis=1)
+    h_last = rmsnorm(params["final_norm"], h_sel)
     logits = _readout(params, cfg, h_last)[:, 0]
     return logits, state
 
@@ -554,6 +566,23 @@ def init_decode_state(cfg: ModelConfig, batch: int, smax: int,
     return DecodeState(layers, cross=cross, step=jnp.zeros((), jnp.int32))
 
 
+def decode_layer_block(cfg: ModelConfig, layer: Params, h: jax.Array,
+                       attend) -> jax.Array:
+    """One decoder-layer body for single-token decode: pre-norm attention
+    residual, then pre-norm MLP/MoE residual. ``attend(z)`` runs attention
+    of the normed stream (including its cache update) — the ring-buffer
+    ``decode_step`` and the paged serving engine plug their cache layouts in
+    here, so the block structure exists exactly once."""
+    z = rmsnorm(layer["ln1"], h)
+    h = h + attend(z)
+    z2 = rmsnorm(layer["ln2"], h)
+    if cfg.family == "moe":
+        y = moe_mod.moe_block(layer["moe"], z2, cfg.moe_spec)
+    else:
+        y = mlp(layer["mlp"], z2, cfg.mlp_act)
+    return h + y
+
+
 def _cross_decode(cfg: ModelConfig, blk: Params, x, ck, cv):
     b = x.shape[0]
     spec = cfg.attn_spec
@@ -612,12 +641,15 @@ def decode_step(params: Params, state: DecodeState, tokens: jax.Array,
             def inner(c2, inp2):
                 (hh,) = c2
                 layer, cache = inp2
-                z = rmsnorm(layer["ln1"], hh)
-                a_out, new_cache = attn.attention_decode_step(
-                    layer["attn"], z, cache, cfg.attn_spec, kv_bits=kvb)
-                hh = hh + a_out
-                hh = hh + mlp(layer["mlp"], rmsnorm(layer["ln2"], hh), cfg.mlp_act)
-                return (hh,), new_cache
+                box = {}
+
+                def attend(z):
+                    a_out, box["cache"] = attn.attention_decode_step(
+                        layer["attn"], z, cache, cfg.attn_spec, kv_bits=kvb)
+                    return a_out
+
+                hh = decode_layer_block(cfg, layer, hh, attend)
+                return (hh,), box["cache"]
             (h,), new_caches = _maybe_scan(cfg, inner, (h,), (blk["self"], caches))
             h = _cross_decode(cfg, blk["cross"], h, ck, cv)
             return (h,), new_caches
@@ -632,16 +664,15 @@ def decode_step(params: Params, state: DecodeState, tokens: jax.Array,
         def body(carry, inp):
             (h,) = carry
             layer, cache = inp
-            z = rmsnorm(layer["ln1"], h)
-            a_out, new_cache = attn.attention_decode_step(
-                layer["attn"], z, cache, cfg.attn_spec, kv_bits=kvb)
-            h = h + a_out
-            if cfg.family == "moe":
-                y = moe_mod.moe_block(layer["moe"], rmsnorm(layer["ln2"], h),
-                                      cfg.moe_spec)
-            else:
-                y = mlp(layer["mlp"], rmsnorm(layer["ln2"], h), cfg.mlp_act)
-            return (h + y,), new_cache
+            box = {}
+
+            def attend(z):
+                a_out, box["cache"] = attn.attention_decode_step(
+                    layer["attn"], z, cache, cfg.attn_spec, kv_bits=kvb)
+                return a_out
+
+            h = decode_layer_block(cfg, layer, h, attend)
+            return (h,), box["cache"]
         (x,), new_layers = _maybe_scan(cfg, body, (x,), (params["layers"], state.layers))
         new_state = DecodeState(new_layers, None, None, state.step + 1)
 

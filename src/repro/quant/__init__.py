@@ -19,7 +19,9 @@ from .qtensor import (
     dot,
     ds_pair,
     encode,
+    pack_int4,
     quantize_to_levels_jnp,
+    unpack_int4,
 )
 from .scheme import QScheme
 
@@ -32,5 +34,7 @@ __all__ = [
     "dot",
     "ds_pair",
     "encode",
+    "pack_int4",
     "quantize_to_levels_jnp",
+    "unpack_int4",
 ]

@@ -55,6 +55,30 @@ def _round(t: jax.Array, key: jax.Array | None) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# int4 nibble packing — the one implementation (models/attention and the
+# paged serving KV pool both delegate here).
+# ---------------------------------------------------------------------------
+
+def pack_int4(codes: jax.Array) -> jax.Array:
+    """int codes in [-7, 7], last dim even → uint8 (…, D/2): offset-binary
+    nibbles (c+8 ∈ [1, 15]; 0 reserved ⇒ unpack is branch-free)."""
+    if codes.shape[-1] % 2:
+        raise ValueError(f"packed int4 needs an even last dim, got {codes.shape}")
+    c = (codes.astype(jnp.int32) + 8).astype(jnp.uint8)
+    lo = c[..., 0::2]
+    hi = c[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """uint8 (…, D/2) → f32 codes (…, D) in [-7, 7] (inverse of pack_int4)."""
+    lo = (packed & 0xF).astype(jnp.float32) - 8.0
+    hi = ((packed >> 4) & 0xF).astype(jnp.float32) - 8.0
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+# ---------------------------------------------------------------------------
 # Scale families
 # ---------------------------------------------------------------------------
 
@@ -153,6 +177,8 @@ class QTensor:
     def nbytes(self) -> int:
         """Logical HBM/wire bytes: packed codes + scales + level table."""
         n = int(np.prod(self.codes.shape)) if self.codes.shape else 1
+        if self.scheme.packed:
+            n *= 2                               # two logical codes per byte
         total = -(-n * self.nbits // 8)          # ceil(n · nbits / 8)
         total += int(np.prod(self.scale.shape) if self.scale.shape else 1) * \
             np.dtype(jnp.float32).itemsize
@@ -180,6 +206,8 @@ class QTensor:
             return out.astype(dtype) if dtype is not None else out
         ct = jnp.float32 if dtype is None else dtype
         if sch.grid == "int":
+            if sch.packed:
+                codes = unpack_int4(codes)
             return codes.astype(ct) * self.scale.astype(ct)
         return codes.astype(ct) / sch.s * self.scale.astype(ct)
 
@@ -241,6 +269,8 @@ def encode_jnp(x: jax.Array, scheme: QScheme, key: jax.Array | None = None,
     qmax = float(scheme.qmax)
     t = x.astype(jnp.float32) / scale
     codes = jnp.clip(_round(t, rkey), -qmax, qmax).astype(_code_dtype(scheme.qmax))
+    if scheme.packed:
+        codes = pack_int4(codes)
     return QTensor(codes, scale, scheme)
 
 

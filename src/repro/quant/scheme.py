@@ -15,6 +15,10 @@ a tensor through integer codes:
 * **rounding mode** — 'stochastic' (unbiased, Lemma 6), 'nearest'
   (deterministic, the §5.4 straw man), 'ds' (double sampling §2.2: two
   independent stochastic planes sharing one base level, +1 bit of storage).
+* **packed** — physical nibble packing for the 4-bit int grid: two
+  offset-binary codes per uint8 byte (the MLWeaving-style any-precision
+  memory layout the serving KV cache stores). Logical semantics are
+  identical to the unpacked int4 grid; only the storage bytes halve.
 
 Schemes are frozen/hashable so they ride as static pytree aux data on
 ``QTensor`` — ``jit``/``vmap``/``lax.scan`` treat them as compile-time
@@ -38,6 +42,7 @@ class QScheme:
     signed: bool = True
     s: int = 0                 # zipml intervals; 0 → 2**bits − 1
     channel_axis: int = -2     # reduction axis for 'channel' scaling
+    packed: bool = False       # nibble-packed storage (int grid, bits=4)
 
     def __post_init__(self):
         if self.grid not in GRIDS:
@@ -46,6 +51,8 @@ class QScheme:
             raise ValueError(f"unknown scaling {self.scaling!r}; have {SCALINGS}")
         if self.rounding not in ROUNDINGS:
             raise ValueError(f"unknown rounding {self.rounding!r}; have {ROUNDINGS}")
+        if self.packed and (self.grid != "int" or self.bits != 4 or not self.signed):
+            raise ValueError("packed storage is the signed 4-bit int grid only")
         if self.grid == "zipml" and self.s == 0:
             object.__setattr__(self, "s", 2 ** self.bits - 1)
 
@@ -78,10 +85,13 @@ class QScheme:
     @classmethod
     def int_symmetric(cls, bits: int, *, scaling: str = "tensor",
                       rounding: str = "stochastic",
-                      channel_axis: int = -2) -> "QScheme":
-        """Symmetric integer grid: value ≈ codes · scale, scale = absmax/qmax."""
+                      channel_axis: int = -2, packed: bool = False) -> "QScheme":
+        """Symmetric integer grid: value ≈ codes · scale, scale = absmax/qmax.
+
+        ``packed=True`` (bits=4 only) stores two offset-binary nibbles per
+        uint8 byte — same values, half the storage bytes."""
         return cls(bits=int(bits), grid="int", scaling=scaling,
-                   rounding=rounding, channel_axis=channel_axis)
+                   rounding=rounding, channel_axis=channel_axis, packed=packed)
 
     @classmethod
     def levels(cls, n_levels: int, *, rounding: str = "nearest") -> "QScheme":

@@ -1,0 +1,30 @@
+"""repro.serve — the continuous-batching low-precision serving engine.
+
+* :class:`ServeEngine` / :class:`Request` / :class:`Finished` — the
+  iteration-level scheduler (admit / prefill / batched paged decode /
+  evict) over a mixed request stream (engine.py).
+* :class:`PagedKVPool` + :class:`PageAllocator` — the paged KV cache whose
+  pages are QTensor code planes: bf16 / int8 / packed int4 per
+  ``PrecisionPlan.kv_bits`` (pages.py).
+* :func:`sample_tokens` — greedy / temperature / top-k with per-request
+  keys (sampling.py).
+
+The decode hot loop dispatches through :mod:`repro.kernels.registry`'s
+``paged_attention`` op: ``ref`` gathers pages and reuses the legacy decode
+softmax (bit-exact with the ring buffer); ``pallas`` streams pages by block
+table with in-kernel int8/int4 dequantization (kernels/paged_attn.py).
+"""
+from .engine import Finished, Request, ServeEngine
+from .pages import PageAllocator, PagedKVPool, init_pool, pool_nbytes
+from .sampling import sample_tokens
+
+__all__ = [
+    "Finished",
+    "PageAllocator",
+    "PagedKVPool",
+    "Request",
+    "ServeEngine",
+    "init_pool",
+    "pool_nbytes",
+    "sample_tokens",
+]

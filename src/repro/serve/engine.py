@@ -1,0 +1,490 @@
+"""Continuous-batching serving engine over the paged quantized KV pool.
+
+The ZipML/MLWeaving serving thesis is that inference is data-movement-bound,
+so int8/int4 KV storage buys near-linear decode speedups — but a fixed-batch
+fixed-length loop (the old launch/serve.py) can't exploit it under real
+traffic. This engine serves a **mixed stream**: requests with arbitrary
+prompt/generation lengths are admitted into decode slots as they fit,
+decode runs one batched step over every live sequence, and finished
+sequences free their pages immediately for the next admission.
+
+Scheduling model (Orca-style iteration-level batching):
+
+* ``submit()`` queues requests FIFO; ``step()`` = admit → ensure-pages →
+  one batched decode.
+* **admission**: a request is admitted when a decode slot is free and the
+  allocator can hand it its pages — ``reserve='full'`` takes the worst-case
+  page count up front (no mid-flight eviction, ever); ``reserve='none'``
+  takes only the prompt pages and grows on demand.
+* **prefill** runs per request at its exact prompt length (no padding, no
+  masking subtleties) through the unmodified ``transformer.prefill``; the
+  raw post-RoPE K/V rows are then quantized per (token, head) and scattered
+  into pages — bit-identical codes to the legacy ring buffer.
+* **decode** is one jitted step over all ``max_slots`` slots: append each
+  slot's token KV into its current page (inactive slots write to the null
+  page), run the paged-attention op through the kernel registry (ref or
+  Pallas), sample with per-request keys (greedy / temperature / top-k).
+* **eviction/preemption** (``reserve='none'``): when a sequence needs a page
+  and none is free, the youngest sequence is evicted — its pages return to
+  the pool and it is re-queued (front) carrying its generated tokens as a
+  **replay list**. Re-admission recomputes: prefill the original prompt
+  (same call as the first admission), then force-feed the replayed tokens
+  through ordinary decode steps (batched with everyone else) instead of
+  sampling. That rebuilds the quantized KV pages through the *same*
+  computation path that produced them, so the post-replay continuation is
+  bit-identical to the never-preempted run — re-prefilling generated tokens
+  as prompt would instead read full-precision K/V where the original decode
+  read quantized pages, and diverge.
+
+Invariants the tests pin: every admitted request finishes; no page leaks;
+per-request outputs are independent of batch composition; paged decode
+matches the legacy ring path.
+
+Throughput accounting deliberately excludes the first decode call (jit
+compile) — ``stats['decode_seconds']`` is steady-state only, the fix the
+old serve loop needed (its t0 sat before compilation).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import registry
+from repro.models import attention as attn
+from repro.models import transformer as T
+from repro.models.layers import dense, embed, rmsnorm
+from repro.quant import PrecisionPlan
+from repro.serve import pages as pg
+from repro.serve import sampling
+
+SUPPORTED_FAMILIES = ("dense", "moe", "audio")
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One serving request. ``temperature<=0`` → greedy; ``top_k<=0`` → no
+    top-k filter; ``eos_id=None`` → length-only stopping."""
+
+    rid: int
+    prompt: Any                      # 1-D int array-like of token ids
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    top_k: int = 0
+    eos_id: int | None = None
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Finished:
+    rid: int
+    tokens: np.ndarray               # prompt + generated, 1-D int32
+    prompt_len: int
+    n_generated: int
+    reason: str                      # 'eos' | 'length'
+
+
+class ServeEngine:
+    def __init__(self, params, cfg, *, plan: PrecisionPlan | None = None,
+                 max_slots: int = 4, page_size: int = 8,
+                 max_seq_len: int = 128, n_pages: int | None = None,
+                 reserve: str = "full", backend: str | None = None):
+        if cfg.family not in SUPPORTED_FAMILIES:
+            raise ValueError(
+                f"ServeEngine supports {SUPPORTED_FAMILIES} families, "
+                f"got {cfg.family!r} (SSM/hybrid/VLM caches are not paged yet)")
+        if cfg.window:
+            raise ValueError("sliding-window models are not paged yet")
+        if reserve not in ("full", "none"):
+            raise ValueError(f"reserve must be 'full' or 'none', got {reserve!r}")
+        plan = plan if plan is not None else cfg.precision
+        self.cfg = dataclasses.replace(cfg, precision=plan)
+        # prefill runs with kv_bits=0: the ring cache it fills is then the
+        # raw post-RoPE K/V, which the pool quantizes page-wise itself
+        self._cfg_fp = dataclasses.replace(
+            cfg, precision=dataclasses.replace(plan, kv_bits=0))
+        self.plan = plan
+        self.params = params
+        self.backend = backend
+        self.page_size = int(page_size)
+        self.max_slots = int(max_slots)
+        self.max_seq_len = int(max_seq_len)
+        self.max_pages_per_seq = pg.pages_needed(max_seq_len, page_size)
+        self.reserve = reserve
+        if n_pages is None:
+            n_pages = self.max_slots * self.max_pages_per_seq + 1
+        self.allocator = pg.PageAllocator(n_pages)
+        self.pool = pg.init_pool(
+            cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim,
+            kv_bits=plan.kv_bits, dtype=cfg.dtype)
+
+        B, MP = self.max_slots, self.max_pages_per_seq
+        self._bt = np.zeros((B, MP), np.int32)
+        self._lens = np.zeros((B,), np.int32)
+        self._active = np.zeros((B,), bool)
+        self._temps = np.zeros((B,), np.float32)
+        self._topks = np.zeros((B,), np.int32)
+        self._base_keys = np.zeros((B, 2), np.uint32)
+        self._last_tok = np.zeros((B,), np.int32)
+        self._slots: list[dict | None] = [None] * B
+        self._queue: collections.deque = collections.deque()
+        self._admit_seq = 0
+        self._compiled_variants: set[bool] = set()
+        self.stats = {"admitted": 0, "finished": 0, "preemptions": 0,
+                      "decode_steps": 0, "decode_tokens": 0,
+                      "decode_seconds": 0.0, "steady_decode_tokens": 0,
+                      "prefill_tokens": 0}
+
+        # two decode variants: the greedy-only one skips the sort +
+        # categorical machinery entirely (the common case); lazily compiled
+        self._decode_jits: dict[bool, Any] = {}
+        self._prefill_jits: dict[int, Any] = {}
+        self._sample1 = jax.jit(
+            lambda lg, t, k, key: sampling.sample_tokens(
+                lg[None], t[None], k[None], key[None])[0])
+
+    # ------------------------------------------------------------ device fns
+    def _make_decode_fn(self, sampled: bool):
+        """``sampled=False`` compiles the greedy-only fast path (no vocab
+        sort, no categorical) — picked per step from host state."""
+        cfg, spec = self.cfg, self.cfg.attn_spec
+        page = self.page_size
+        kb = registry.get(self.backend)
+
+        def decode_fn(params, pool, tokens, positions, block_table, active,
+                      base_keys, temps, topks):
+            b = tokens.shape[0]
+            pos = positions.astype(jnp.int32)
+            x = embed(params["embed"], tokens).astype(cfg.dtype)      # (B,1,d)
+            page_ids = jnp.take_along_axis(
+                block_table, (pos // page)[:, None], axis=1)[:, 0]
+            page_ids = jnp.where(active, page_ids, 0)                 # null page
+            offs = pos % page
+            new_lens = pos + active.astype(jnp.int32)
+
+            def body(h, inp):
+                layer, kp, vp, ks, vs = inp
+                box = {}
+
+                def attend(z):
+                    q, k, v = attn.decode_qkv(layer["attn"], z, spec,
+                                              pos[:, None])
+                    kp2, vp2, ks2, vs2 = pg.append_rows(
+                        kp, vp, ks, vs, k[:, 0], v[:, 0], page_ids, offs)
+                    box["planes"] = (kp2, vp2, ks2, vs2)
+                    out = kb.paged_attention(
+                        q[:, 0], kp2, vp2, ks2, vs2, block_table, new_lens,
+                        softmax_scale=spec.scale)
+                    return dense(layer["attn"]["o"], out.reshape(
+                        b, 1, spec.n_heads * spec.head_dim))
+
+                h = T.decode_layer_block(cfg, layer, h, attend)
+                return h, box["planes"]
+
+            xs = (params["layers"], pool.k_pages, pool.v_pages,
+                  pool.k_scale, pool.v_scale)
+            x, planes = jax.lax.scan(body, x, xs)
+            new_pool = pg.PagedKVPool(*planes)
+            x = rmsnorm(params["final_norm"], x)
+            logits = T._readout(params, cfg, x)[:, 0]                 # (B, V)
+            if sampled:
+                keys = jax.vmap(sampling.slot_key)(base_keys, pos + 1)
+                tok = sampling.sample_tokens(logits, temps, topks, keys)
+            else:
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return jnp.where(active, tok, 0), logits, new_pool
+
+        return decode_fn
+
+    def _decode_jit(self, sampled: bool):
+        fn = self._decode_jits.get(sampled)
+        if fn is None:
+            fn = self._decode_jits[sampled] = jax.jit(
+                self._make_decode_fn(sampled))
+        return fn
+
+    def _prefill_jit(self, bucket: int):
+        """One compile per page-multiple *bucket*, not per exact prompt
+        length: prompts are right-padded to the bucket, logits read at the
+        true last position (causality shields it from the pad garbage), and
+        the pad rows land in the last page masked by seq_len — decode
+        appends overwrite them one by one as generation proceeds."""
+        fn = self._prefill_jits.get(bucket)
+        if fn is None:
+            cfg_fp = self._cfg_fp
+
+            def prefill_fn(params, toks, last_pos, page_ids, pool):
+                logits, state = T.prefill(params, toks, cfg_fp,
+                                          last_pos=last_pos)
+                k_all = state.layers.k[:, 0]       # (L, bucket, Hkv, D)
+                v_all = state.layers.v[:, 0]
+                return logits[0], pg.write_prompt(pool, k_all, v_all, page_ids)
+
+            fn = self._prefill_jits[bucket] = jax.jit(prefill_fn)
+        return fn
+
+    # -------------------------------------------------------------- host API
+    def submit(self, req: Request) -> None:
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if prompt.size >= self.max_seq_len:
+            raise ValueError(
+                f"prompt of {prompt.size} tokens needs max_seq_len > that "
+                f"(engine has {self.max_seq_len})")
+        worst = pg.pages_needed(
+            min(prompt.size + req.max_new_tokens, self.max_seq_len),
+            self.page_size)
+        if worst > self.allocator.n_pages - 1:
+            raise ValueError(
+                f"request {req.rid} can never fit: needs {worst} pages, "
+                f"pool has {self.allocator.n_pages - 1}")
+        self._queue.append({"req": req, "prompt": prompt,
+                            "replay": np.zeros((0,), np.int32)})
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def n_active(self) -> int:
+        return int(self._active.sum())
+
+    def kv_pool_nbytes(self, used_only: bool = False) -> int:
+        """Logical KV HBM bytes (QTensor.nbytes accounting; §2.2)."""
+        if used_only:
+            used = sum(len(s["pages"]) for s in self._slots if s)
+            return pg.pool_nbytes(self.pool, n_pages=used)
+        return pg.pool_nbytes(self.pool)
+
+    # ------------------------------------------------------------- scheduler
+    def _free_slot(self) -> int | None:
+        idx = np.flatnonzero(~self._active)
+        return int(idx[0]) if idx.size else None
+
+    def _budget(self, entry) -> int:
+        """Generation budget: the request's ask, capped by the context."""
+        return min(entry["req"].max_new_tokens,
+                   self.max_seq_len - len(entry["prompt"]))
+
+    def _bucket(self, s: int) -> int:
+        return pg.pages_needed(max(s, 1), self.page_size) * self.page_size
+
+    def _admit(self, finished: list) -> None:
+        while self._queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            entry = self._queue[0]
+            prompt = entry["prompt"]
+            replay = entry["replay"]
+            s = int(prompt.size)
+            budget = self._budget(entry)
+            if budget <= 0:                        # context already full
+                self._queue.popleft()
+                finished.append(self._finish_entry(entry, reason="length"))
+                continue
+            n_now = pg.pages_needed(s + 1, self.page_size)
+            n_res = (pg.pages_needed(min(s + budget, self.max_seq_len),
+                                     self.page_size)
+                     if self.reserve == "full" else n_now)
+            ids = self.allocator.alloc(max(n_res, n_now))
+            if ids is None:
+                return                              # FIFO head-of-line wait
+            self._queue.popleft()
+            req = entry["req"]
+            row = np.zeros((self.max_pages_per_seq,), np.int32)
+            row[:len(ids)] = ids
+            self._bt[slot] = row
+            self._lens[slot] = s
+            self._temps[slot] = req.temperature
+            self._topks[slot] = req.top_k
+            base = np.asarray(jax.random.fold_in(
+                jax.random.PRNGKey(req.seed), req.rid), np.uint32)
+            self._base_keys[slot] = base
+
+            bucket = self._bucket(s)
+            padded = np.zeros((bucket,), np.int32)
+            padded[:s] = prompt
+            fn = self._prefill_jit(bucket)
+            logits, self.pool = fn(
+                self.params, jnp.asarray(padded)[None], jnp.int32(s - 1),
+                jnp.asarray(ids[:bucket // self.page_size], jnp.int32),
+                self.pool)
+            if replay.size:
+                # recompute preemption: the first generated token is known;
+                # the rest replays through forced decode steps
+                tok, replay_left = int(replay[0]), list(replay[1:])
+            else:
+                tok = int(self._sample1(
+                    logits, jnp.float32(req.temperature),
+                    jnp.int32(req.top_k),
+                    sampling.slot_key(jnp.asarray(base), jnp.int32(s))))
+                replay_left = []
+            self._active[slot] = True
+            self._last_tok[slot] = tok
+            self._slots[slot] = {"req": req, "prompt": prompt, "gen": [tok],
+                                 "replay_left": replay_left,
+                                 "pages": list(ids),
+                                 "admit_seq": self._admit_seq}
+            self._admit_seq += 1
+            self.stats["admitted"] += 1
+            self.stats["prefill_tokens"] += s
+            self._maybe_finish(slot, finished)
+
+    def _full_tokens(self, state) -> np.ndarray:
+        return np.concatenate([state["prompt"],
+                               np.asarray(state["gen"], np.int32)])
+
+    def _finish_entry(self, entry, *, reason: str) -> Finished:
+        """A queue entry finished without (re-)admission (context full)."""
+        replay = entry["replay"]
+        tokens = np.concatenate([entry["prompt"], replay])
+        self.stats["finished"] += 1
+        return Finished(rid=entry["req"].rid, tokens=tokens,
+                        prompt_len=len(entry["prompt"]),
+                        n_generated=int(replay.size), reason=reason)
+
+    def _maybe_finish(self, slot: int, finished: list) -> bool:
+        state = self._slots[slot]
+        req = state["req"]
+        n_gen = len(state["gen"])
+        full_len = len(state["prompt"]) + n_gen
+        reason = None
+        if req.eos_id is not None and state["gen"][-1] == req.eos_id:
+            reason = "eos"
+        elif n_gen >= self._budget(state) or full_len >= self.max_seq_len:
+            reason = "length"
+        if reason is None:
+            return False
+        self.allocator.free(state["pages"])
+        self._active[slot] = False
+        self._bt[slot] = 0
+        self._lens[slot] = 0
+        self._slots[slot] = None
+        self.stats["finished"] += 1
+        finished.append(Finished(
+            rid=req.rid, tokens=self._full_tokens(state),
+            prompt_len=len(state["prompt"]), n_generated=n_gen,
+            reason=reason))
+        return True
+
+    def _preempt_one(self) -> int | None:
+        """Evict the youngest active sequence; requeue it (front) with its
+        generated tokens as the replay list. Returns the freed slot."""
+        cands = [(s["admit_seq"], i) for i, s in enumerate(self._slots) if s]
+        if not cands:
+            return None
+        _, slot = max(cands)
+        state = self._slots[slot]
+        self.allocator.free(state["pages"])
+        self._active[slot] = False
+        self._bt[slot] = 0
+        self._lens[slot] = 0
+        self._slots[slot] = None
+        replay = np.concatenate([
+            np.asarray(state["gen"], np.int32),
+            np.asarray(state["replay_left"], np.int32)])
+        self._queue.appendleft({"req": state["req"],
+                                "prompt": state["prompt"], "replay": replay})
+        self.stats["preemptions"] += 1
+        return slot
+
+    def _ensure_pages(self) -> None:
+        """Before decode: every active slot must own the page its next KV row
+        lands in; grow on demand, preempting (youngest-first) when the pool
+        is exhausted."""
+        for slot in range(self.max_slots):
+            while True:
+                if not self._active[slot] or self._slots[slot] is None:
+                    break
+                pidx = int(self._lens[slot]) // self.page_size
+                if self._bt[slot, pidx] != 0:
+                    break
+                ids = self.allocator.alloc(1)
+                if ids is not None:
+                    self._bt[slot, pidx] = ids[0]
+                    self._slots[slot]["pages"].append(ids[0])
+                    break
+                victim = self._preempt_one()
+                if victim is None or victim == slot:
+                    break                      # this slot itself got evicted
+
+    def step(self) -> list[Finished]:
+        """One scheduler iteration: admit what fits, decode one token for
+        every live sequence. Returns the requests that finished."""
+        finished: list[Finished] = []
+        self._admit(finished)
+        self._ensure_pages()
+        if not self._active.any():
+            return finished
+
+        sampled = bool((self._temps[self._active] > 0).any())
+        t0 = time.perf_counter()
+        tok, _, self.pool = self._decode_jit(sampled)(
+            self.params, self.pool,
+            jnp.asarray(self._last_tok)[:, None],
+            jnp.asarray(self._lens), jnp.asarray(self._bt),
+            jnp.asarray(self._active), jnp.asarray(self._base_keys),
+            jnp.asarray(self._temps), jnp.asarray(self._topks))
+        tok_np = np.asarray(tok)               # blocks until ready
+        dt = time.perf_counter() - t0
+        n_live = int(self._active.sum())
+        self.stats["decode_steps"] += 1
+        self.stats["decode_tokens"] += n_live
+        if sampled in self._compiled_variants:  # steady state: skip compiles
+            self.stats["decode_seconds"] += dt
+            self.stats["steady_decode_tokens"] += n_live
+        self._compiled_variants.add(sampled)
+
+        for slot in range(self.max_slots):
+            if not self._active[slot]:
+                continue
+            state = self._slots[slot]
+            if state["replay_left"]:
+                # forced replay (recompute preemption): the decode step
+                # rebuilt this position's KV exactly; the token is known
+                tok = state["replay_left"].pop(0)
+            else:
+                tok = int(tok_np[slot])
+            self._lens[slot] += 1
+            state["gen"].append(tok)
+            self._last_tok[slot] = tok
+            self._maybe_finish(slot, finished)
+        return finished
+
+    def run(self, requests=None, max_steps: int = 100_000) -> dict[int, Finished]:
+        """Serve until the queue drains and every sequence finishes."""
+        for r in requests or ():
+            self.submit(r)
+        out: dict[int, Finished] = {}
+        for _ in range(max_steps):
+            if not self._queue and not self._active.any():
+                break
+            before = (len(self._queue), int(self._active.sum()),
+                      self.stats["decode_steps"])
+            for f in self.step():
+                out[f.rid] = f
+            after = (len(self._queue), int(self._active.sum()),
+                     self.stats["decode_steps"])
+            if before == after:
+                raise RuntimeError(
+                    "scheduler stalled (pool too small for any queued "
+                    "request?) — nothing admitted, decoded, or finished")
+        else:
+            raise RuntimeError(f"run() exceeded {max_steps} steps")
+        return out
+
+    def throughput(self) -> float:
+        """Steady-state decode tokens/s (compile step excluded)."""
+        if self.stats["decode_seconds"] == 0:
+            return float("nan")
+        return self.stats["steady_decode_tokens"] / self.stats["decode_seconds"]
+
+
+__all__ = ["Request", "Finished", "ServeEngine", "SUPPORTED_FAMILIES"]

@@ -1,0 +1,225 @@
+"""Paged KV-cache pool: fixed-size pages of QTensor code planes + a host-side
+page allocator.
+
+Layout (vLLM-style, quantized à la ZipML/MLWeaving):
+
+* ``PagedKVPool`` — one pool per model, pages stacked over layers:
+  ``k_pages``/``v_pages``: (L, P, page, Hkv, D) bf16 or int8 codes, or
+  (L, P, page, Hkv, D/2) uint8 **packed int4** (two offset-binary nibbles per
+  byte — :func:`repro.quant.pack_int4`). Quantized pools carry per-(token,
+  head) fp32 scales (L, P, page, Hkv, 1) — the same row-symmetric nearest
+  scheme the legacy ring buffer used (``QScheme.int_symmetric(bits,
+  scaling='row', rounding='nearest')``), so paged and ring codes are
+  identical bit-for-bit.
+* a **block table** (B_slots, MAXP) int32 of page indices per sequence plus
+  ``seq_lens`` (B_slots,) — owned by the engine, passed into every kernel
+  call. All layers of one sequence share one block-table row (each layer has
+  its own page storage at the same indices).
+* **page 0 is the null page**: the allocator never hands it out, inactive
+  slots point at it, and masked decode writes land there — so a dead slot
+  can never corrupt a live sequence.
+
+``pool_nbytes`` reports logical HBM bytes straight from ``QTensor.nbytes``
+(shape-only views — nothing is materialized), which is what
+benchmarks/bench_serve_engine.py charts: int8 ≈ 2×, packed int4 ≈ 3.5× fewer
+KV bytes than bf16 at production head dims.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import QScheme, QTensor, encode
+
+
+def kv_scheme(kv_bits: int) -> QScheme:
+    """The pool's quantization scheme: row-symmetric (per token×head)
+    deterministic-nearest int grid; packed nibbles at 4 bits. Matches
+    models/attention._quant_rows so paged == ring codes exactly."""
+    if kv_bits not in (4, 8):
+        raise ValueError(f"quantized KV pools support 4/8 bits, got {kv_bits}")
+    return QScheme.int_symmetric(kv_bits, scaling="row", rounding="nearest",
+                                 packed=(kv_bits == 4))
+
+
+class PagedKVPool(NamedTuple):
+    """Device-side page storage (a pytree — rides through jit/scan)."""
+
+    k_pages: jax.Array                 # (L, P, page, Hkv, D or D/2)
+    v_pages: jax.Array
+    k_scale: jax.Array | None = None   # (L, P, page, Hkv, 1) f32 if quantized
+    v_scale: jax.Array | None = None
+
+    @property
+    def n_layers(self) -> int:
+        return self.k_pages.shape[0]
+
+    @property
+    def n_pages(self) -> int:
+        return self.k_pages.shape[1]
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pages.shape[2]
+
+    @property
+    def kv_bits(self) -> int:
+        from repro.kernels.ops import kv_bits_of   # the one dtype→bits rule
+
+        return kv_bits_of(self.k_pages)
+
+
+def init_pool(n_layers: int, n_pages: int, page_size: int, n_kv: int,
+              head_dim: int, *, kv_bits: int = 0,
+              dtype=jnp.bfloat16) -> PagedKVPool:
+    shape = (n_layers, n_pages, page_size, n_kv)
+    if kv_bits == 4:
+        if head_dim % 2:
+            raise ValueError("packed int4 pool needs an even head_dim")
+        return PagedKVPool(
+            k_pages=jnp.zeros((*shape, head_dim // 2), jnp.uint8),
+            v_pages=jnp.zeros((*shape, head_dim // 2), jnp.uint8),
+            k_scale=jnp.ones((*shape, 1), jnp.float32),
+            v_scale=jnp.ones((*shape, 1), jnp.float32),
+        )
+    if kv_bits:
+        return PagedKVPool(
+            k_pages=jnp.zeros((*shape, head_dim), jnp.int8),
+            v_pages=jnp.zeros((*shape, head_dim), jnp.int8),
+            k_scale=jnp.ones((*shape, 1), jnp.float32),
+            v_scale=jnp.ones((*shape, 1), jnp.float32),
+        )
+    return PagedKVPool(k_pages=jnp.zeros((*shape, head_dim), dtype),
+                       v_pages=jnp.zeros((*shape, head_dim), dtype))
+
+
+def quant_rows(x: jax.Array, kv_bits: int, dtype=jnp.bfloat16):
+    """Quantize new KV rows (…, Hkv, D) → (codes, scale|None) in the pool's
+    storage format (``dtype`` is the unquantized page dtype)."""
+    if not kv_bits:
+        return x.astype(dtype), None
+    qt = encode(x, kv_scheme(kv_bits))
+    return qt.codes, qt.scale
+
+
+def write_prompt(pool: PagedKVPool, k: jax.Array, v: jax.Array,
+                 page_ids: jax.Array) -> PagedKVPool:
+    """Write one sequence's prefill K/V into freshly-allocated pages.
+
+    k/v: (L, S, Hkv, D) post-RoPE rows; page_ids: (n,) int32 with
+    n = ceil(S / page). Rows are quantized per (token, head) — identical
+    codes to the ring path's prefill_cache_from_kv — padded rows (scale 1,
+    codes 0) fill the tail of the last page and stay masked by seq_len.
+    """
+    L, s, hkv, d = k.shape
+    page = pool.page_size
+    n = page_ids.shape[0]
+    pad = n * page - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    k = k.reshape(L, n, page, hkv, d)
+    v = v.reshape(L, n, page, hkv, d)
+    kc, ks = quant_rows(k, pool.kv_bits, pool.k_pages.dtype)
+    vc, vs = quant_rows(v, pool.kv_bits, pool.v_pages.dtype)
+    new = pool._replace(k_pages=pool.k_pages.at[:, page_ids].set(kc),
+                        v_pages=pool.v_pages.at[:, page_ids].set(vc))
+    if pool.kv_bits:
+        new = new._replace(k_scale=pool.k_scale.at[:, page_ids].set(ks),
+                           v_scale=pool.v_scale.at[:, page_ids].set(vs))
+    return new
+
+
+def append_rows(k_pages: jax.Array, v_pages: jax.Array,
+                k_scale: jax.Array | None, v_scale: jax.Array | None,
+                k_new: jax.Array, v_new: jax.Array,
+                page_ids: jax.Array, offsets: jax.Array):
+    """Append one decode token's K/V per slot into ONE layer's page planes
+    (the engine calls this inside its per-layer scan body).
+
+    k/v_pages: (P, page, Hkv, Dk); k/v_new: (B, Hkv, D) pre-quantization;
+    page_ids/offsets: (B,) int32 — the target (page, row) of each slot
+    (inactive slots target the null page 0). Returns the updated planes.
+    """
+    from repro.kernels.ops import kv_bits_of
+
+    kv_bits = kv_bits_of(k_pages)
+    kc, ks = quant_rows(k_new, kv_bits, k_pages.dtype)
+    vc, vs = quant_rows(v_new, kv_bits, v_pages.dtype)
+    k_pages = k_pages.at[page_ids, offsets].set(kc)
+    v_pages = v_pages.at[page_ids, offsets].set(vc)
+    if kv_bits:
+        k_scale = k_scale.at[page_ids, offsets].set(ks)
+        v_scale = v_scale.at[page_ids, offsets].set(vs)
+    return k_pages, v_pages, k_scale, v_scale
+
+
+def pool_nbytes(pool: PagedKVPool, n_pages: int | None = None) -> int:
+    """Logical KV HBM bytes of ``n_pages`` pages (default: the whole pool),
+    accounted through :attr:`repro.quant.QTensor.nbytes` shape-only views —
+    the same §2.2 accounting as the training-side benchmarks."""
+    P = pool.n_pages if n_pages is None else n_pages
+    bits = pool.kv_bits
+
+    def plane(codes_like, scale_like):
+        shape = (pool.n_layers, P, *codes_like.shape[2:])
+        codes = jax.ShapeDtypeStruct(shape, codes_like.dtype)
+        if bits:
+            scale = jax.ShapeDtypeStruct((pool.n_layers, P, *scale_like.shape[2:]),
+                                         jnp.float32)
+            return QTensor(codes, scale, kv_scheme(bits)).nbytes
+        # bf16: 16-bit codes, no scale plane (a zero-size struct contributes 0)
+        scale = jax.ShapeDtypeStruct((0,), jnp.float32)
+        return QTensor(codes, scale,
+                       QScheme(bits=16, grid="int", rounding="nearest")).nbytes
+
+    return int(plane(pool.k_pages, pool.k_scale)
+               + plane(pool.v_pages, pool.v_scale))
+
+
+class PageAllocator:
+    """Host-side free-list over pool pages. Page 0 is the reserved null page
+    (never allocated): the write target of masked slots."""
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError("pool needs at least 2 pages (one is the null page)")
+        self.n_pages = n_pages
+        self._free = list(range(n_pages - 1, 0, -1))   # pop() yields 1, 2, …
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Allocate ``n`` pages, or None (and no change) if not enough free."""
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        return out
+
+    def free(self, ids) -> None:
+        for i in ids:
+            i = int(i)
+            if i == 0:
+                raise ValueError("page 0 is the null page — never allocated")
+            if i in self._free:
+                raise ValueError(f"double free of page {i}")
+            self._free.append(i)
+
+    def check_leaks(self, expected_in_use: int = 0) -> None:
+        in_use = (self.n_pages - 1) - len(self._free)
+        if in_use != expected_in_use:
+            raise AssertionError(
+                f"page leak: {in_use} pages in use, expected {expected_in_use}")
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    return -(-int(n_tokens) // int(page_size))
+
+
+__all__ = ["PagedKVPool", "PageAllocator", "init_pool", "write_prompt",
+           "append_rows", "quant_rows", "pool_nbytes", "kv_scheme",
+           "pages_needed"]

@@ -1,0 +1,45 @@
+"""Token sampling for the serving engine: greedy + temperature / top-k.
+
+Every slot samples with its **own** PRNG key, derived from (request seed,
+sequence position) — never from the batch layout — so a request's sampled
+continuation is identical whether it runs alone or packed into a mixed batch
+(the scheduler-invariant the engine tests pin).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(logits: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, keys: jax.Array) -> jax.Array:
+    """logits (B, V) f32 → token ids (B,) int32.
+
+    temperature (B,): ≤ 0 means greedy argmax for that slot.
+    top_k (B,) int32: ≤ 0 means no top-k filter; otherwise logits outside the
+    k largest are masked before the categorical draw.
+    keys (B, 2) uint32: one PRNG key per slot.
+    """
+    b, v = logits.shape
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    # per-slot dynamic top-k: threshold at the k-th largest logit
+    sorted_desc = -jnp.sort(-logits, axis=-1)                  # (B, V) desc
+    kth_idx = jnp.clip(top_k.astype(jnp.int32), 1, v) - 1
+    kth = jnp.take_along_axis(sorted_desc, kth_idx[:, None], axis=-1)
+    keep = (top_k[:, None] <= 0) | (logits >= kth)
+    masked = jnp.where(keep, logits, -jnp.inf)
+
+    temp = jnp.where(temperature > 0, temperature, 1.0).astype(jnp.float32)
+    sampled = jax.vmap(lambda lg, k: jax.random.categorical(k, lg))(
+        masked / temp[:, None], keys).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy_tok)
+
+
+def slot_key(seed_key: jax.Array, position: jax.Array) -> jax.Array:
+    """The per-step sampling key: fold the absolute sequence position into
+    the request's base key (batch-composition independent)."""
+    return jax.random.fold_in(seed_key, position)
+
+
+__all__ = ["sample_tokens", "slot_key"]

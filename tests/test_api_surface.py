@@ -25,7 +25,8 @@ class TestPublicExports:
     def test_quant_all(self):
         assert set(quant.__all__) == {
             "PrecisionPlan", "QScheme", "QTensor", "compute_scale", "decode",
-            "dot", "ds_pair", "encode", "quantize_to_levels_jnp",
+            "dot", "ds_pair", "encode", "pack_int4", "quantize_to_levels_jnp",
+            "unpack_int4",
         }
         for name in quant.__all__:
             assert hasattr(quant, name), name

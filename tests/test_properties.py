@@ -2,6 +2,9 @@
 
 Each property is the load-bearing guarantee of a subsystem:
   * quantizer unbiasedness & boundedness over arbitrary inputs/levels (C1)
+  * the full repro.quant QScheme grid: round-trip error bound and
+    stochastic/double-sampling unbiasedness over bits × tensor/row/column/
+    channel scaling × nearest/stochastic/ds rounding, incl. packed int4
   * DP-optimal levels never lose to uniform, monotone in s (C4)
   * double-sampling estimator unbiasedness for arbitrary (a, x, b) (C2)
   * gradient compression roundtrip bound & error-feedback telescoping (C3)
@@ -17,11 +20,13 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import repro.core.quantize as qz
+from repro import quant
 from repro.core import optimal
 from repro.core.double_sampling import (lsq_gradient_double_sampling,
                                         lsq_gradient_fullprec)
 from repro.data.pipeline import Cursor, TokenStream, TokenStreamConfig
 from repro.precision import gradcomp
+from repro.quant import QScheme
 
 SETTINGS = dict(max_examples=25, deadline=None)
 
@@ -61,6 +66,117 @@ class TestQuantizerProperties:
         tv = float(qz.tv_variance(v, s, scale=qz.row_scale(v, "l2")))
         bound = min(n / s**2, np.sqrt(n) / s) * float(jnp.sum(v * v))
         assert tv <= bound + 1e-4 * bound + 1e-6
+
+
+SCALINGS = ("tensor", "row", "column", "channel")
+
+
+def _grid_matrix(seed, rows=4, cols=8, spread=True):
+    rng = np.random.default_rng(seed)
+    sd = rng.uniform(1e-2, 10.0) if spread else 1.0
+    return jnp.asarray(rng.normal(0, sd, (rows, cols)), jnp.float32)
+
+
+def _bcast_scale(qt, shape):
+    return np.broadcast_to(np.asarray(qt.scale), shape)
+
+
+class TestQSchemeGridProperties:
+    """The repro.quant contract over the whole scheme grid: every
+    (grid × bits × scaling × rounding) cell round-trips within one code step
+    and the stochastic modes are unbiased — including the nibble-packed int4
+    storage, which must be value-identical to unpacked int4."""
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([2, 4, 8]),
+           scaling=st.sampled_from(SCALINGS),
+           rounding=st.sampled_from(["nearest", "stochastic", "ds"]))
+    def test_int_grid_roundtrip_within_one_step(self, seed, bits, scaling,
+                                                rounding):
+        x = _grid_matrix(seed)
+        sch = QScheme.int_symmetric(bits, scaling=scaling, rounding=rounding)
+        qt = quant.encode(x, sch, key=jax.random.PRNGKey(seed))
+        step = _bcast_scale(qt, x.shape)
+        tol = step * (0.5 if rounding == "nearest" else 1.0) + 1e-5
+        planes = [qt.decode()] + ([qt.decode2()] if rounding == "ds" else [])
+        for deq in planes:
+            err = np.abs(np.asarray(deq) - np.asarray(x))
+            assert (err <= tol).all(), float((err - tol).max())
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1), s=st.sampled_from([3, 7, 31]),
+           scaling=st.sampled_from(["tensor", "row"]),
+           rounding=st.sampled_from(["nearest", "stochastic", "ds"]))
+    def test_zipml_grid_roundtrip_within_one_interval(self, seed, s, scaling,
+                                                      rounding):
+        x = _grid_matrix(seed)
+        sch = QScheme.zipml(s, scaling=scaling, rounding=rounding)
+        qt = quant.encode(x, sch, key=jax.random.PRNGKey(seed))
+        width = _bcast_scale(qt, x.shape) / s
+        tol = width * (0.5 if rounding == "nearest" else 1.0) + 1e-5
+        planes = [qt.decode()] + ([qt.decode2()] if rounding == "ds" else [])
+        for deq in planes:
+            err = np.abs(np.asarray(deq) - np.asarray(x))
+            assert (err <= tol).all(), float((err - tol).max())
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([2, 4]),
+           scaling=st.sampled_from(["tensor", "row"]))
+    def test_stochastic_rounding_unbiased(self, seed, bits, scaling):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(0, 1, (12,)), jnp.float32)
+        sch = QScheme.int_symmetric(bits, scaling=scaling)
+        keys = jax.random.split(jax.random.PRNGKey(seed), 1500)
+        deq = jax.vmap(lambda k: quant.encode(x, sch, key=k).decode())(keys)
+        se = np.asarray(deq.std(0)) / np.sqrt(1500) + 1e-6
+        bias = np.abs(np.asarray(deq.mean(0)) - np.asarray(x))
+        smax = float(np.max(np.asarray(quant.compute_scale(x, sch))))
+        assert (bias < 6 * se + 1e-3 * smax).all(), bias.max()
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([2, 4]))
+    def test_ds_planes_each_unbiased(self, seed, bits):
+        """§2.2: both double-sampling planes are themselves unbiased draws
+        (they share the scale and base level, not the up/down bits)."""
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(0, 1, (12,)), jnp.float32)
+        sch = QScheme.int_symmetric(bits, rounding="ds")
+        keys = jax.random.split(jax.random.PRNGKey(seed), 1500)
+        smax = float(np.max(np.asarray(quant.compute_scale(x, sch))))
+        for plane in ("decode", "decode2"):
+            deq = jax.vmap(
+                lambda k: getattr(quant.encode(x, sch, key=k), plane)())(keys)
+            se = np.asarray(deq.std(0)) / np.sqrt(1500) + 1e-6
+            bias = np.abs(np.asarray(deq.mean(0)) - np.asarray(x))
+            assert (bias < 6 * se + 1e-3 * smax).all(), (plane, bias.max())
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1), scaling=st.sampled_from(SCALINGS),
+           rounding=st.sampled_from(["nearest", "stochastic"]))
+    def test_packed_int4_value_identical(self, seed, scaling, rounding):
+        """Nibble packing is a pure storage transform: same key ⇒ identical
+        dequantized values, identical logical nbytes, half the physical
+        code bytes."""
+        x = _grid_matrix(seed, rows=6, cols=16)
+        key = jax.random.PRNGKey(seed)
+        qu = quant.encode(x, QScheme.int_symmetric(
+            4, scaling=scaling, rounding=rounding), key=key)
+        qp = quant.encode(x, QScheme.int_symmetric(
+            4, scaling=scaling, rounding=rounding, packed=True), key=key)
+        np.testing.assert_array_equal(np.asarray(qu.decode()),
+                                      np.asarray(qp.decode()))
+        assert qp.nbytes == qu.nbytes
+        assert qp.codes.size * 2 == qu.codes.size
+        assert qp.codes.dtype == jnp.uint8
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_pack_unpack_roundtrip_exact(self, seed):
+        rng = np.random.default_rng(seed)
+        codes = jnp.asarray(rng.integers(-7, 8, (5, 10)), jnp.int8)
+        np.testing.assert_array_equal(
+            np.asarray(quant.unpack_int4(quant.pack_int4(codes))),
+            np.asarray(codes, np.float32))
 
 
 class TestOptimalLevelProperties:

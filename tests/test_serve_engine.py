@@ -1,0 +1,355 @@
+"""Serving-engine tests: paged-attention parity (ref + Pallas, bf16/int8/int4),
+paged-vs-ring bit-exactness, engine-vs-legacy equivalence, and the scheduler
+invariants (no page leaks, every admitted request finishes, outputs
+independent of batch composition, preemption recovers)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.kernels import registry
+from repro.kernels import ref as kref
+from repro.models import attention as attn
+from repro.models import transformer as T
+from repro.quant import PrecisionPlan, encode
+from repro.serve import PageAllocator, Request, ServeEngine
+from repro.serve import pages as pg
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mk_qkv(b, s, h, g, d, key=KEY):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, s, h, d), jnp.float32)
+    k = jax.random.normal(kk, (b, s, g, d), jnp.float32)
+    v = jax.random.normal(kv, (b, s, g, d), jnp.float32)
+    return q, k, v
+
+
+def _pool_from_rows(k, v, page, n_pages, kv_bits):
+    """Pack per-sequence rows (B, S, G, D) into a single-layer pool with an
+    in-order block table (page i of seq b = rows [i·page, (i+1)·page))."""
+    b, s, g, d = k.shape
+    maxp = -(-s // page)
+    pool = pg.init_pool(1, n_pages, page, g, d, kv_bits=kv_bits)
+    bt = np.zeros((b, maxp), np.int32)
+    nxt = 1                                    # page 0 is the null page
+    for i in range(b):
+        ids = list(range(nxt, nxt + maxp))
+        nxt += maxp
+        pool = pg.write_prompt(pool, k[i][None], v[i][None],
+                               jnp.asarray(ids, jnp.int32))
+        bt[i] = ids
+    return pool, jnp.asarray(bt)
+
+
+class TestPagedAttentionParity:
+    @pytest.mark.parametrize("kv_bits", [8, 4])
+    def test_paged_vs_chunked_fp32_reference(self, kv_bits):
+        """Quantized paged decode ≈ full-precision chunked_attention on the
+        last query position, within the quantization tolerance."""
+        b, s, h, g, d = 2, 24, 4, 2, 16
+        q, k, v = _mk_qkv(b, s, h, g, d)
+        spec = attn.AttnSpec(n_heads=h, n_kv_heads=g, head_dim=d, q_chunk=8)
+        ref_full = attn.chunked_attention(q, k, v, spec)[:, -1]     # (B, H, D)
+
+        pool, bt = _pool_from_rows(k, v, page=8, n_pages=16, kv_bits=kv_bits)
+        lens = jnp.full((b,), s, jnp.int32)
+        out = kref.paged_attention_ref(
+            q[:, -1], pool.k_pages[0], pool.v_pages[0],
+            None if pool.k_scale is None else pool.k_scale[0],
+            None if pool.v_scale is None else pool.v_scale[0],
+            bt, lens, softmax_scale=spec.scale)
+        rel = float(jnp.linalg.norm(out.astype(jnp.float32) - ref_full)
+                    / jnp.linalg.norm(ref_full))
+        assert rel < (0.05 if kv_bits == 8 else 0.2), rel
+
+    def test_paged_bf16_bitexact_vs_ring(self):
+        """bf16 paged decode == ring-buffer decode bit-for-bit: with pages
+        laid out in ring order the gathered tensor IS the ring tensor, and
+        the ref backend runs the identical decode_attention on it."""
+        b, s, h, g, d, page = 2, 16, 4, 2, 16, 8
+        q, k, v = _mk_qkv(b, s, h, g, d)
+        kb = k.astype(jnp.bfloat16)
+        vb = v.astype(jnp.bfloat16)
+        spec = attn.AttnSpec(n_heads=h, n_kv_heads=g, head_dim=d)
+        lens = jnp.asarray([s, s - 5], jnp.int32)
+
+        ring = attn.decode_attention(q[:, -1:].astype(jnp.bfloat16), kb, vb,
+                                     spec, kv_len=lens)[:, 0]
+        pool, bt = _pool_from_rows(kb, vb, page=page, n_pages=8, kv_bits=0)
+        paged = kref.paged_attention_ref(
+            q[:, -1].astype(jnp.bfloat16), pool.k_pages[0], pool.v_pages[0],
+            None, None, bt, lens, softmax_scale=spec.scale)
+        np.testing.assert_array_equal(np.asarray(paged, np.float32),
+                                      np.asarray(ring, np.float32))
+
+    @pytest.mark.parametrize("kv_bits", [8, 4])
+    def test_paged_quantized_bitexact_vs_ring(self, kv_bits):
+        """int8/int4 pages hold the same codes as the ring cache (same
+        row-nearest scheme) and dequantize to the same bf16 rows."""
+        b, s, g, d = 2, 16, 2, 16
+        _, k, v = _mk_qkv(b, s, 4, g, d)
+        ring = attn.prefill_cache_from_kv(k, v, kv_bits=kv_bits)
+        ring_k, ring_v = ring.materialize()
+        pool, bt = _pool_from_rows(k, v, page=8, n_pages=8, kv_bits=kv_bits)
+        paged_k = kref.dequant_pages_ref(
+            kref.gather_pages_ref(pool.k_pages[0], bt),
+            kref.gather_pages_ref(pool.k_scale[0], bt))
+        paged_v = kref.dequant_pages_ref(
+            kref.gather_pages_ref(pool.v_pages[0], bt),
+            kref.gather_pages_ref(pool.v_scale[0], bt))
+        np.testing.assert_array_equal(np.asarray(paged_k, np.float32),
+                                      np.asarray(ring_k, np.float32))
+        np.testing.assert_array_equal(np.asarray(paged_v, np.float32),
+                                      np.asarray(ring_v, np.float32))
+
+    @pytest.mark.parametrize("kv_bits", [0, 8, 4])
+    def test_pallas_matches_ref(self, kv_bits):
+        """The Pallas flash kernel ≈ the gather-ref backend on active rows
+        (f32 streaming softmax vs one-shot bf16 softmax associativity)."""
+        rng = np.random.default_rng(0)
+        b, h, g, d, page, maxp, n_pages = 3, 4, 2, 16, 8, 4, 12
+        q = jnp.asarray(rng.normal(0, 1, (b, h, d)), jnp.float32)
+        lens = jnp.asarray([17, 3, 29], jnp.int32)
+        bt = jnp.asarray(rng.integers(1, n_pages, (b, maxp)), jnp.int32)
+        kv = rng.normal(0, 1, (2, n_pages, page, g, d)).astype(np.float32)
+        if kv_bits:
+            sch = pg.kv_scheme(kv_bits)
+            qk = encode(jnp.asarray(kv[0]), sch)
+            qv = encode(jnp.asarray(kv[1]), sch)
+            args = (qk.codes, qv.codes, qk.scale, qv.scale)
+        else:
+            args = (jnp.asarray(kv[0], jnp.bfloat16),
+                    jnp.asarray(kv[1], jnp.bfloat16), None, None)
+        r = registry.get("ref").paged_attention(
+            q, *args, bt, lens, softmax_scale=d ** -0.5)
+        p = registry.get("pallas").paged_attention(
+            q, *args, bt, lens, softmax_scale=d ** -0.5)
+        err = float(jnp.max(jnp.abs(r.astype(jnp.float32)
+                                    - p.astype(jnp.float32))))
+        assert err < 2e-2, err
+
+
+def _cfg():
+    return configs.get_reduced("qwen2.5-14b")
+
+
+def _params(cfg):
+    return T.init_params(KEY, cfg)
+
+
+def _legacy_greedy(params, cfg, prompts, gen):
+    """The ring-buffer greedy loop (what launch/serve.serve runs)."""
+    from repro.launch.steps import make_serve_step
+
+    s = prompts.shape[1]
+    logits, state = T.prefill(params, prompts, cfg, pad_to=s + gen)
+    toks = [jnp.argmax(logits, -1).astype(jnp.int32)[:, None]]
+    step = jax.jit(make_serve_step(cfg))
+    for _ in range(gen - 1):
+        _, nxt, state = step(params, state, toks[-1])
+        toks.append(nxt[:, None])
+    return np.asarray(jnp.concatenate(toks, 1))
+
+
+class TestEngineParity:
+    @pytest.mark.parametrize("kv_bits", [0, 8])
+    def test_engine_matches_legacy_greedy(self, kv_bits):
+        """Paged engine greedy tokens == ring-buffer loop tokens (the codes
+        are identical; only the cache layout changed)."""
+        cfg = _cfg()
+        params = _params(cfg)
+        b, s, gen = 3, 12, 6
+        prompts = jax.random.randint(jax.random.fold_in(KEY, 1), (b, s), 0,
+                                     cfg.vocab_size)
+        cfgp = dataclasses.replace(cfg,
+                                   precision=PrecisionPlan(kv_bits=kv_bits))
+        legacy = _legacy_greedy(params, cfgp, prompts, gen)
+        eng = ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=kv_bits),
+                          max_slots=b, page_size=8, max_seq_len=s + gen + 8)
+        out = eng.run([Request(rid=i, prompt=np.asarray(prompts[i]),
+                               max_new_tokens=gen) for i in range(b)])
+        got = np.stack([out[i].tokens[s:] for i in range(b)])
+        np.testing.assert_array_equal(got, legacy)
+
+    @pytest.mark.slow
+    def test_engine_int4_pallas_first_steps_match_ref(self):
+        """int4 KV through the Pallas kernel: the prefill token and the
+        first decode-step token match the ref backend exactly (one kernel
+        call's numerics), and the run completes leak-free. Full-trajectory
+        token equality is NOT asserted — flash (f32 streaming) vs one-shot
+        (bf16) softmax differ at float granularity, which random-weight
+        tiny-vocab models amplify into argmax flips after a few steps."""
+        cfg = _cfg()
+        params = _params(cfg)
+        b, s, gen = 2, 8, 5
+        prompts = jax.random.randint(jax.random.fold_in(KEY, 2), (b, s), 0,
+                                     cfg.vocab_size)
+        runs = {}
+        for backend in ("ref", "pallas"):
+            eng = ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=4),
+                              max_slots=b, page_size=8,
+                              max_seq_len=s + gen + 8, backend=backend)
+            out = eng.run([Request(rid=i, prompt=np.asarray(prompts[i]),
+                                   max_new_tokens=gen) for i in range(b)])
+            eng.allocator.check_leaks(0)
+            runs[backend] = np.stack([out[i].tokens[s:] for i in range(b)])
+        np.testing.assert_array_equal(runs["pallas"][:, :2],
+                                      runs["ref"][:, :2])
+
+
+class TestSchedulerInvariants:
+    def _mixed_requests(self, cfg, n, seed=0, **kw):
+        rng = np.random.default_rng(seed)
+        return [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            int(rng.integers(3, 20))),
+                        max_new_tokens=int(rng.integers(2, 10)), **kw)
+                for i in range(n)]
+
+    @pytest.mark.parametrize("kv_bits", [0, 4])
+    def test_all_finish_no_leaks(self, kv_bits):
+        cfg = _cfg()
+        eng = ServeEngine(_params(cfg), cfg, plan=PrecisionPlan(kv_bits=kv_bits),
+                          max_slots=4, page_size=8, max_seq_len=48)
+        reqs = self._mixed_requests(cfg, 8)
+        out = eng.run(reqs)
+        assert sorted(out) == list(range(8))
+        for f in out.values():
+            assert 1 <= f.n_generated <= 10
+            assert f.reason in ("eos", "length")
+            assert f.tokens.shape == (f.prompt_len + f.n_generated,)
+        eng.allocator.check_leaks(0)          # raises on leaked pages
+
+    @pytest.mark.slow
+    def test_outputs_independent_of_batch_composition(self):
+        """Every request (greedy and sampled) produces the same tokens
+        served solo as in a churning mixed batch."""
+        cfg = _cfg()
+        params = _params(cfg)
+        rng = np.random.default_rng(3)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, 4 + 3 * i),
+                        max_new_tokens=5,
+                        temperature=0.8 if i % 2 else 0.0,
+                        top_k=5 if i % 2 else 0, seed=7)
+                for i in range(4)]
+        mixed = ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=8),
+                            max_slots=4, page_size=8,
+                            max_seq_len=64).run(reqs)
+        for r in reqs:
+            solo = ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=8),
+                               max_slots=1, page_size=8,
+                               max_seq_len=64).run([r])
+            np.testing.assert_array_equal(solo[r.rid].tokens,
+                                          mixed[r.rid].tokens)
+
+    def test_preemption_recovers_and_frees(self):
+        """reserve='none' + a pool too small for everyone: the engine must
+        preempt, replay, and still finish every request leak-free."""
+        cfg = _cfg()
+        eng = ServeEngine(_params(cfg), cfg, plan=PrecisionPlan(kv_bits=8),
+                          max_slots=3, page_size=4, max_seq_len=32,
+                          n_pages=8, reserve="none")
+        rng = np.random.default_rng(4)
+        reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 6),
+                        max_new_tokens=8) for i in range(4)]
+        out = eng.run(reqs)
+        assert sorted(out) == list(range(4))
+        assert eng.stats["preemptions"] >= 1
+        for f in out.values():
+            assert f.n_generated == 8
+        eng.allocator.check_leaks(0)
+
+    @pytest.mark.slow
+    def test_preemption_replay_exact_at_quantized_kv(self):
+        """Recompute preemption must not change a request's greedy output
+        even at int4 KV: replay rebuilds the quantized pages through the
+        same decode path that produced them (re-prefilling generated tokens
+        as prompt would read full-precision K/V and diverge)."""
+        cfg = _cfg()
+        params = _params(cfg)
+        rng = np.random.default_rng(7)
+        prompts = [rng.integers(0, cfg.vocab_size, 6) for _ in range(4)]
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=16)
+                for i, p in enumerate(prompts)]
+        tight = ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=4),
+                            max_slots=3, page_size=4, max_seq_len=32,
+                            n_pages=9, reserve="none")
+        out = tight.run(reqs)
+        assert tight.stats["preemptions"] >= 1
+        tight.allocator.check_leaks(0)
+        for r in reqs:
+            solo = ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=4),
+                               max_slots=1, page_size=4,
+                               max_seq_len=32).run([r])
+            np.testing.assert_array_equal(solo[r.rid].tokens,
+                                          out[r.rid].tokens)
+
+    def test_eos_stops_early(self):
+        cfg = _cfg()
+        params = _params(cfg)
+        probe = ServeEngine(params, cfg, max_slots=1, page_size=8,
+                            max_seq_len=32)
+        prompt = np.arange(5) % cfg.vocab_size
+        first = probe.run([Request(rid=0, prompt=prompt, max_new_tokens=1)])
+        eos = int(first[0].tokens[-1])        # greedy ⇒ reproduced below
+        eng = ServeEngine(params, cfg, max_slots=1, page_size=8,
+                          max_seq_len=32)
+        out = eng.run([Request(rid=0, prompt=prompt, max_new_tokens=10,
+                               eos_id=eos)])
+        assert out[0].reason == "eos"
+        assert out[0].n_generated == 1
+        eng.allocator.check_leaks(0)
+
+    def test_unsupported_family_raises(self):
+        cfg = configs.get_reduced("mamba2-780m")
+        with pytest.raises(ValueError, match="SSM"):
+            ServeEngine({}, cfg)
+
+    def test_oversized_request_rejected(self):
+        cfg = _cfg()
+        eng = ServeEngine(_params(cfg), cfg, max_slots=1, page_size=4,
+                          max_seq_len=16)
+        with pytest.raises(ValueError, match="max_seq_len"):
+            eng.submit(Request(rid=0, prompt=np.zeros(20, np.int32)))
+
+
+class TestPageAllocator:
+    def test_null_page_reserved(self):
+        a = PageAllocator(4)
+        got = a.alloc(3)
+        assert got is not None and 0 not in got
+        assert a.alloc(1) is None             # exhausted, no partial alloc
+        a.free(got)
+        assert a.n_free == 3
+        with pytest.raises(ValueError, match="null page"):
+            a.free([0])
+
+    def test_double_free_rejected(self):
+        a = PageAllocator(4)
+        (pid,) = a.alloc(1)
+        a.free([pid])
+        with pytest.raises(ValueError, match="double free"):
+            a.free([pid])
+
+    def test_leak_check(self):
+        a = PageAllocator(4)
+        a.alloc(2)
+        with pytest.raises(AssertionError, match="leak"):
+            a.check_leaks(0)
+
+
+class TestKVBytesAccounting:
+    def test_pool_nbytes_ratios(self):
+        """QTensor.nbytes accounting: int8 ≈ 2× and packed int4 ≥ 3× fewer
+        KV bytes than bf16 at head_dim 64 (scales included)."""
+        kw = dict(n_layers=2, n_pages=8, page_size=8, n_kv=2, head_dim=64)
+        nb = {bits: pg.pool_nbytes(pg.init_pool(**kw, kv_bits=bits))
+              for bits in (0, 8, 4)}
+        assert nb[0] / nb[8] >= 1.8
+        assert nb[0] / nb[4] >= 3.0
