@@ -40,10 +40,12 @@ BENCHES = [
     ("fig12_refetch", "benchmarks.bench_refetch"),
     ("ds_fused", "benchmarks.bench_ds_fused"),
     ("serve_engine", "benchmarks.bench_serve_engine"),
+    ("train_step", "benchmarks.bench_train_step"),
 ]
 
 # fast, shape-independent claims only — what CI runs on every PR
-SMOKE_BENCHES = {"fig5_bandwidth_model", "ds_fused", "serve_engine"}
+SMOKE_BENCHES = {"fig5_bandwidth_model", "ds_fused", "serve_engine",
+                 "train_step"}
 
 
 def main(argv=None) -> int:

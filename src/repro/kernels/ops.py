@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from . import paged_attn as pa_mod
 from . import qmm as qmm_mod
+from . import quant_adamw as qa_mod
 from . import ssd as ssd_mod
 from . import stoch_quant as sq_mod
 
@@ -122,6 +123,55 @@ def quantized_matmul(x: jax.Array, codes: jax.Array, scale: jax.Array) -> jax.Ar
                     bk=_block_fit(k, 512), bn=_block_fit(n, 256),
                     interpret=INTERPRET)
     return y[:m0, :n0]
+
+
+def quant_adamw_update(master, g, m_codes, m_scale, v_codes, v_scale, rand, *,
+                       qmax: int, b1: float, b2: float, eps: float, wd: float,
+                       lr, b1c, b2c, clip, finite, uclip: float = 0.0):
+    """Fused quantized-moment AdamW leaf update via the two-pass Pallas
+    pipeline (kernels/quant_adamw.py): pass 1 reduces the new-moment column
+    absmaxes (→ new scales), pass 2 decodes/updates/re-encodes per VMEM tile.
+    The fp32 moment tensors never hit HBM.
+
+    master/g: (R, C) f32; codes (R, C) int8; scales (C,) f32; rand (R, C)
+    uint32 (hi/lo 16 bits drive the m and √v draws). lr/b1c/b2c/clip/finite
+    are traced per-step scalars. Returns
+    (new_master, m_codes, m_scale_new, v_codes, v_scale_new), scales (C,).
+    """
+    r0, c0 = master.shape
+
+    def pad2(t):
+        t, _ = _pad_to(t, 128, 0)
+        t, _ = _pad_to(t, 128, 1)
+        return t
+
+    master, g, rand = pad2(master.astype(jnp.float32)), \
+        pad2(g.astype(jnp.float32)), pad2(rand)
+    m_codes, v_codes = pad2(m_codes), pad2(v_codes)
+    ms, _ = _pad_to(jnp.asarray(m_scale, jnp.float32).reshape(1, -1), 128, 1)
+    vs, _ = _pad_to(jnp.asarray(v_scale, jnp.float32).reshape(1, -1), 128, 1)
+    r, c = master.shape
+    block = (_block_fit(r, 256), _block_fit(c, 512))
+    params = jnp.stack([
+        jnp.asarray(clip, jnp.float32),
+        jnp.asarray(finite, jnp.float32),
+        jnp.asarray(lr, jnp.float32),
+        jnp.asarray(b1c, jnp.float32),
+        jnp.asarray(b2c, jnp.float32),
+        jnp.float32(0), jnp.float32(0), jnp.float32(0)])
+    mx, vx = qa_mod.qadamw_absmax(g, m_codes, ms, v_codes, vs, params,
+                                  b1=b1, b2=b2, block=block,
+                                  interpret=INTERPRET)
+    mx = jnp.max(mx, axis=0)
+    vx = jnp.max(vx, axis=0)
+    msn = jnp.where(mx == 0, 1.0, mx / qmax).astype(jnp.float32)
+    vsn = jnp.where(vx == 0, 1.0, vx / qmax).astype(jnp.float32)
+    nm, mc, vc = qa_mod.qadamw_update(
+        master, g, m_codes, ms, v_codes, vs,
+        msn.reshape(1, -1), vsn.reshape(1, -1), rand, params,
+        b1=b1, b2=b2, eps=eps, wd=wd, qmax=qmax, uclip=uclip, block=block,
+        interpret=INTERPRET)
+    return (nm[:r0, :c0], mc[:r0, :c0], msn[:c0], vc[:r0, :c0], vsn[:c0])
 
 
 def kv_bits_of(pages: jax.Array) -> int:

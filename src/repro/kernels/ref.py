@@ -32,6 +32,47 @@ def ds_quant_ref(x, rand, scale, *, s: int):
     return c1, c2
 
 
+def quant_adamw_ref(master, g, m_codes, m_scale, v_codes, v_scale, rand, *,
+                    qmax: int, b1: float, b2: float, eps: float, wd: float,
+                    lr, b1c, b2c, clip, finite, uclip: float = 0.0):
+    """Bit-exact reference for kernels/quant_adamw.py (same 16-bit high/low
+    uniform map as the fused kernel). master/g (R, C) f32; codes int8;
+    scales (C,)/(1, C) f32; rand (R, C) uint32. Returns
+    (new_master, m_codes, m_scale_new, v_codes, v_scale_new) with (C,) scales.
+    """
+    m_scale = jnp.asarray(m_scale, jnp.float32).reshape(1, -1)
+    v_scale = jnp.asarray(v_scale, jnp.float32).reshape(1, -1)
+    g32 = g.astype(jnp.float32) * clip
+    m_prev = m_codes.astype(jnp.float32) * m_scale
+    v_sqrt = v_codes.astype(jnp.float32) * v_scale
+    v_prev = v_sqrt * v_sqrt
+    m = b1 * m_prev + (1 - b1) * g32
+    v = b2 * v_prev + (1 - b2) * g32 * g32
+    ok = finite > 0
+    m_store = jnp.where(ok, m, m_prev)
+    v_store = jnp.where(ok, v, v_prev)
+    update = (m_store / b1c) / (jnp.sqrt(v_store / b2c) + eps)
+    if uclip:
+        update = jnp.clip(update, -uclip, uclip)
+    mst = master.astype(jnp.float32)
+    new_master = jnp.where(ok, mst - lr * (update + wd * mst), mst)
+    mx = jnp.max(jnp.abs(m_store), axis=0)
+    vx = jnp.max(jnp.sqrt(v_store), axis=0)
+    msn = jnp.where(mx == 0, 1.0, mx / qmax).astype(jnp.float32)
+    vsn = jnp.where(vx == 0, 1.0, vx / qmax).astype(jnp.float32)
+    u1 = (rand >> 16).astype(jnp.float32) * (1.0 / (1 << 16))
+    u2 = (rand & 0xFFFF).astype(jnp.float32) * (1.0 / (1 << 16))
+    m_t = m_store / msn
+    lo = jnp.floor(m_t)
+    mc = jnp.clip(lo + (u1 < (m_t - lo)).astype(jnp.float32),
+                  -qmax, qmax).astype(jnp.int8)
+    v_t = jnp.sqrt(v_store) / vsn
+    lo2 = jnp.floor(v_t)
+    vc = jnp.clip(lo2 + (u2 < (v_t - lo2)).astype(jnp.float32),
+                  -qmax, qmax).astype(jnp.int8)
+    return new_master, mc, msn, vc, vsn
+
+
 def qmv_ref(codes, v):
     return jnp.dot(codes.astype(jnp.float32), v.astype(jnp.float32))
 

@@ -82,6 +82,37 @@ class KernelBackend:
             q, k_pages, v_pages, k_scale, v_scale, block_table, seq_lens,
             softmax_scale=softmax_scale)
 
+    def quant_adamw_update(self, p_master, g, m_old, v_old, km, kv, *,
+                           bits: int, b1: float, b2: float, eps: float,
+                           b1c, b2c, lr, clip, finite, wd: float,
+                           uclip: float = 0.0):
+        """One quantized-moment AdamW leaf update: decode int8 m/v QTensors,
+        EMA-update, write the fp32 master, stochastically re-encode.
+        ``uclip`` bounds the per-coordinate |update| (the √v-underflow guard
+        — see AdamWConfig.update_clip).
+
+        The base implementation is the pure-jnp seed numerics (three
+        full-tensor passes); the Pallas backend fuses them into the two-pass
+        VMEM pipeline of kernels/quant_adamw.py. Returns
+        (new_master, new_m: QTensor, new_v: QTensor).
+        """
+        from repro.optim.adamw import decode_moment, encode_moment
+
+        g32 = g.astype(jnp.float32) * clip
+        m_prev = decode_moment(m_old)
+        v_prev = decode_moment(v_old, positive=True)
+        m = b1 * m_prev + (1 - b1) * g32
+        v = b2 * v_prev + (1 - b2) * g32 * g32
+        update = (m / b1c) / (jnp.sqrt(v / b2c) + eps)
+        if uclip:
+            update = jnp.clip(update, -uclip, uclip)
+        new_master = p_master - lr * (update + wd * p_master)
+        new_master = jnp.where(finite, new_master, p_master)
+        m_q = encode_moment(jnp.where(finite, m, m_prev), bits, km)
+        v_q = encode_moment(jnp.where(finite, v, v_prev), bits, kv,
+                            positive=True)
+        return new_master, m_q, v_q
+
     # ------------------------------------------------- tuple-form hot loop --
     def ds_quant_values(self, a, s, key, scale=None):
         raise NotImplementedError
@@ -227,6 +258,41 @@ class _PallasBackend(KernelBackend):
         return ops.paged_attention(
             q, k_pages, v_pages, k_scale, v_scale, block_table, seq_lens,
             softmax_scale=softmax_scale)
+
+    def quant_adamw_update(self, p_master, g, m_old, v_old, km, kv, *,
+                           bits: int, b1: float, b2: float, eps: float,
+                           b1c, b2c, lr, clip, finite, wd: float,
+                           uclip: float = 0.0):
+        """Fused decode→update→re-encode (kernels/quant_adamw.py): the fp32
+        moments never round-trip HBM. 2-D+ leaves only (vectors/scalars fall
+        back to the jnp path — sub-tile shapes aren't worth a kernel launch);
+        rounding bits come from the high/low 16 bits of one uint32 plane
+        drawn from ``km`` (distribution-identical to the ref backend's two
+        key-based draws, pinned by tests/test_quant_adamw.py)."""
+        if p_master.ndim < 2 or bits > 8 or km is None:
+            return KernelBackend.quant_adamw_update(
+                self, p_master, g, m_old, v_old, km, kv, bits=bits, b1=b1,
+                b2=b2, eps=eps, b1c=b1c, b2c=b2c, lr=lr, clip=clip,
+                finite=finite, wd=wd, uclip=uclip)
+        from repro.kernels import ops
+        from repro.optim.adamw import moment_scheme
+        from repro.quant.qtensor import QTensor
+
+        shape = p_master.shape
+        c = shape[-1]
+        rand = jax.random.bits(km, shape, jnp.uint32).reshape(-1, c)
+        nm, mc, msn, vc, vsn = ops.quant_adamw_update(
+            p_master.astype(jnp.float32).reshape(-1, c),
+            g.astype(jnp.float32).reshape(-1, c),
+            m_old.codes.reshape(-1, c), m_old.scale,
+            v_old.codes.reshape(-1, c), v_old.scale, rand,
+            qmax=2 ** (bits - 1) - 1, b1=b1, b2=b2, eps=eps, wd=wd,
+            uclip=uclip, lr=lr, b1c=b1c, b2c=b2c, clip=clip,
+            finite=finite.astype(jnp.float32))
+        scheme = moment_scheme(bits, len(shape))
+        return (nm.reshape(shape),
+                QTensor(mc.reshape(shape), msn, scheme),
+                QTensor(vc.reshape(shape), vsn, scheme))
 
     def qt_dot(self, qt, v):
         """Stream int8 codes through the qmv kernel when the scale factors

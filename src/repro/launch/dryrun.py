@@ -29,7 +29,7 @@ import numpy as np
 from repro import configs
 from repro.launch import sharding as sh
 from repro.launch.mesh import make_production_mesh
-from repro.launch.steps import input_specs, make_prefill_step, make_serve_step, make_train_step
+from repro.launch.steps import input_specs, make_prefill_step, make_serve_step
 from repro.models import transformer as T
 from repro.optim import adamw
 from repro.quant import PrecisionPlan
@@ -145,19 +145,28 @@ TRAIN_ACCUM = {"mixtral-8x7b": 8, "granite-moe-3b-a800m": 2, "gemma-2b": 2,
                "zamba2-2.7b": 2}
 
 
-def build_step(cfg: T.ModelConfig, shape: configs.ShapeSpec, mesh):
-    """Returns (jitted_fn, ordered_args list of spec-trees)."""
-    specs = input_specs(cfg, shape)
+def build_step(cfg: T.ModelConfig, shape: configs.ShapeSpec, mesh,
+               opt_cfg: "adamw.AdamWConfig | None" = None):
+    """Returns (jitted_fn, ordered_args list of spec-trees).
+
+    Train cells compile the channel-composed TrainState step, so the
+    memory_analysis prices the *whole* run state: quantized optimizer
+    moments at their stored width (int8 when ``opt_cfg.moment_bits=8``, not
+    the fp32 the old opt_state spec assumed) and the grad channel's fp32
+    error-feedback residual when the plan sets ``grad_bits``.
+    """
+    from repro.train.step import make_step
+
+    opt_cfg = opt_cfg if opt_cfg is not None else adamw.AdamWConfig()
+    specs = input_specs(cfg, shape, opt_cfg=opt_cfg)
     p_sh = sh.make_param_shardings(mesh, specs["params"])
     if shape.kind == "train":
-        fn = make_train_step(cfg, adamw.AdamWConfig(),
-                             accum_steps=TRAIN_ACCUM.get(cfg.name, 1))
-        o_sh = sh.make_opt_shardings(mesh, specs["opt_state"])
+        fn = make_step(cfg, opt_cfg,
+                       accum_steps=TRAIN_ACCUM.get(cfg.name, 1))
+        st_sh = sh.make_state_shardings(mesh, specs["state"])
         b_sh = sh.train_batch_shardings(mesh, specs["batch"])
-        k_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
-        jfn = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh, k_sh),
-                      donate_argnums=(0, 1))
-        args = (specs["params"], specs["opt_state"], specs["batch"], specs["key"])
+        jfn = jax.jit(fn, in_shardings=(st_sh, b_sh), donate_argnums=(0,))
+        args = (specs["state"], specs["batch"])
     elif shape.kind == "prefill":
         fn = make_prefill_step(cfg)
         b_sh = sh.train_batch_shardings(mesh, specs["batch"])
@@ -174,6 +183,7 @@ def build_step(cfg: T.ModelConfig, shape: configs.ShapeSpec, mesh):
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              precision: "PrecisionPlan | None" = None,
+             opt_cfg: "adamw.AdamWConfig | None" = None,
              verbose: bool = True) -> CellResult:
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "2x16x16" if multi_pod else "16x16"
@@ -191,8 +201,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                      n_devices=int(np.prod(mesh.devices.shape)))
     t0 = time.time()
     try:
-        jfn, args = build_step(cfg, shape, mesh)
-        with jax.sharding.set_mesh(mesh):
+        jfn, args = build_step(cfg, shape, mesh, opt_cfg=opt_cfg)
+        # jax < 0.5 has no sharding.set_mesh; Mesh is its own context manager
+        mesh_ctx = jax.sharding.set_mesh(mesh) \
+            if hasattr(jax.sharding, "set_mesh") else mesh
+        with mesh_ctx:
             lowered = jfn.lower(*args)
             compiled = lowered.compile()
         res.compile_s = time.time() - t0
@@ -204,6 +217,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             alias = float(getattr(ma, "alias_size_in_bytes", 0))
             res.per_device_bytes = res.arg_bytes + res.out_bytes + res.temp_bytes - alias
         ca = compiled.cost_analysis()
+        if isinstance(ca, list):        # jax < 0.5 returns [dict]
+            ca = ca[0] if ca else None
         if ca:
             res.flops_per_device = float(ca.get("flops", 0.0))
             res.hbm_bytes_accessed = float(ca.get("bytes accessed", 0.0))
@@ -247,6 +262,9 @@ def main(argv=None):
     ap.add_argument("--kv-bits", type=int, default=0)
     ap.add_argument("--weight-bits", type=int, default=0)
     ap.add_argument("--grad-bits", type=int, default=0)
+    ap.add_argument("--moment-bits", type=int, default=0,
+                    help="optimizer moment storage width (train cells price "
+                         "int8 moments instead of fp32)")
     ap.add_argument("--weight-storage", default="int",
                     choices=("int", "ship", "fake"))
     args = ap.parse_args(argv)
@@ -256,6 +274,8 @@ def main(argv=None):
         precision = PrecisionPlan(model_bits=args.weight_bits,
                                   model_storage=args.weight_storage,
                                   kv_bits=args.kv_bits, grad_bits=args.grad_bits)
+    opt_cfg = adamw.AdamWConfig(moment_bits=args.moment_bits) \
+        if args.moment_bits else None
 
     if args.all:
         cells = configs.all_cells()
@@ -267,8 +287,8 @@ def main(argv=None):
     results = []
     for arch, shape in cells:
         for mp in meshes:
-            results.append(dataclasses.asdict(run_cell(arch, shape, mp,
-                                                       precision=precision)))
+            results.append(dataclasses.asdict(run_cell(
+                arch, shape, mp, precision=precision, opt_cfg=opt_cfg)))
     if args.out:
         with open(args.out, "w") as f:
             json.dump(results, f, indent=2)

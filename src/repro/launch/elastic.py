@@ -110,6 +110,25 @@ class ElasticController:
             shard_assignment=assignment, evicted_pods=evicted, reason=reason)
 
 
+def stream_sharding(decision: FleetDecision, host_id: int) -> tuple[int, int]:
+    """(n_hosts, shard_id) for one host under a fleet decision — the data-
+    pipeline reshard that accompanies a mesh shrink/grow. Shards are
+    rank-ordered and contiguous, so feeding the pair into
+    ``TokenStreamConfig(n_hosts=, host_id=)`` keeps the determinism contract:
+    batch i of shard s is a pure function of (seed, i, s), independent of
+    which physical hosts survived. ``repro.train.Trainer.apply_fleet_decision``
+    composes this with checkpoint rollback + cursor rewind.
+
+    Raises for a host the decision did not assign (evicted / stale): a
+    defaulted shard would silently consume another host's batch sequence —
+    duplicated gradients — instead of stopping the zombie."""
+    if host_id not in decision.shard_assignment:
+        raise RuntimeError(
+            f"host {host_id} is not in the surviving fleet "
+            f"({sorted(decision.shard_assignment)}) — {decision.reason}")
+    return len(decision.shard_assignment), decision.shard_assignment[host_id]
+
+
 def plan_rollback(checkpoint_steps: Iterable[int], failed_at_step: int,
                   max_rollback: int = 1000) -> int:
     """Pick the restore step: newest committed checkpoint ≤ failure point,

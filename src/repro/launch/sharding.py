@@ -9,7 +9,7 @@ Layout (DESIGN.md §3.1):
   inserts the per-layer all-gathers (ZeRO-3). Multi-pod keeps params
   replicated over 'pod' (the cross-pod gradient all-reduce is the paper's
   gradient channel — the thing ZipML compresses).
-* Optimizer state mirrors param specs (MomentQ scales replicate).
+* Optimizer state mirrors param specs (QTensor moment scales replicate).
 * Small tensors (norms, biases, scalars, per-head vectors) replicate.
 """
 from __future__ import annotations
@@ -80,7 +80,13 @@ def make_param_shardings(mesh, params_tree):
 
 
 def make_opt_shardings(mesh, opt_tree):
-    """Optimizer state: m/v/master mirror the params; step & scales replicate."""
+    """Optimizer state: m/v/master mirror the params; step & scales replicate.
+
+    Quantized moments are QTensor leaves whose children flatten as indexed
+    entries under the param key (0=codes, 1=scale, 2=codes2, 3=levels): the
+    code plane shards exactly like the dense weight it shadows — the param
+    rules apply for free — and scales/level tables replicate.
+    """
 
     def spec(path, leaf):
         ps = _path_str(path)
@@ -88,11 +94,37 @@ def make_opt_shardings(mesh, opt_tree):
         if field == "step" or ps.endswith("/scale") or leaf.ndim == 0:
             return NamedSharding(mesh, P())
         sub = list(path)[1:]  # drop the OptState field (m/v/master)
-        if sub and _path_str(sub[-1:]) == "codes":
-            sub = sub[:-1]  # MomentQ codes share the param's layout
+        last = _path_str(sub[-1:]) if sub else ""
+        if last in ("codes", "0", "2"):
+            sub = sub[:-1]  # moment code planes share the param's layout
+        elif last in ("1", "3"):
+            return NamedSharding(mesh, P(*([None] * leaf.ndim)))
         return NamedSharding(mesh, param_spec(sub, leaf))
 
     return jax.tree_util.tree_map_with_path(spec, opt_tree)
+
+
+def make_state_shardings(mesh, state):
+    """Shardings for a full :class:`repro.train.TrainState` (or its
+    eval_shape template): params/opt per the rules above; channel state
+    trees (the error-feedback residual mirrors the grad/param tree) shard
+    like the params they shadow; scalars (step, rng, epoch) replicate."""
+    from repro.train.state import TrainState
+
+    rep = NamedSharding(mesh, P())
+
+    def ch_spec(path, leaf):
+        sub = list(path)[2:]   # drop (channel name, state key) e.g. grad/ef
+        if not sub or leaf.ndim == 0:
+            return rep
+        return NamedSharding(mesh, param_spec(sub, leaf))
+
+    return TrainState(
+        params=make_param_shardings(mesh, state.params),
+        opt=make_opt_shardings(mesh, state.opt),
+        channels=jax.tree_util.tree_map_with_path(ch_spec, state.channels),
+        step=rep, rng=rep,
+        epoch=rep)
 
 
 # ---------------------------------------------------------------------------

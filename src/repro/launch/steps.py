@@ -1,83 +1,61 @@
 """Step builders: train_step / prefill_step / serve_step as pure jit-able
 functions, plus ShapeDtypeStruct input_specs for the dry-run.
 
-The ZipML channels hook in here:
-* QAT fake-quant (C5) — weights quantized inside the loss when
-  precision.model_bits > 0 and storage == 'fake'.
+The train step itself now lives in :mod:`repro.train.step`, composed from
+the four stateful PrecisionPlan channel objects over a
+:class:`repro.train.TrainState`; ``make_train_step`` here is the legacy
+``(params, opt_state, batch, key)`` surface kept for existing callers
+(the ``grad_transform=`` hook is deprecated — a stateless ``fn(grads, key)``
+cannot thread the error-feedback residual; use
+``repro.train.GradChannel``).
+
+The serving-side channels hook in here directly:
 * int weight storage (C1/C5) — serve/prefill steps accept params whose matmul
   weights are int8 codes (layers.dense dequantizes on the fly).
-* gradient compression (C3) — compressed cross-pod/DP all-reduce of gradients
-  via precision/gradcomp.py when precision.grad_bits > 0.
 * KV-cache quantization — decode caches store int8 when precision.kv_bits > 0.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.launch import sharding as shd
 from repro.models import transformer as T
-from repro.models.layers import shard_hint
 from repro.optim import adamw
-from repro.precision import qat
+from repro.precision import gradcomp
 
 
 def make_train_step(cfg: T.ModelConfig, opt_cfg: adamw.AdamWConfig,
                     grad_transform=None, accum_steps: int = 1):
     """Returns train_step(params, opt_state, batch, key) → (params, opt, metrics).
 
+    Legacy surface over :func:`repro.train.step.make_grads_fn`; the
+    channel-composed TrainState step is :func:`repro.train.make_step`.
+
     ``batch``: {"tokens": (B,S), "targets": (B,S)[, "vision": (B,nv,d)]}.
-    ``grad_transform``: optional fn(grads, key) — the quantized-collective hook.
+    ``grad_transform``: DEPRECATED stateless hook fn(grads, key) — it cannot
+    carry error-feedback state across steps (jit traces it once and freezes
+    whatever it captured). Use a :class:`repro.train.GradChannel`.
     ``accum_steps``: microbatch gradient accumulation — divides activation
     (and MoE dispatch-buffer) memory by A at the cost of re-gathering FSDP
     params per microbatch.
     """
-    plan = cfg.precision
+    from repro.train.channels import ModelChannel
+    from repro.train.step import make_grads_fn
 
-    def grads_of(params, tokens, targets, vision, kq):
-        def loss(p):
-            if plan.model_bits and plan.model_storage == "fake":
-                p = qat.fake_quant_tree(p, plan.model_bits, kq)
-            elif plan.model_bits and plan.model_storage == "ship" \
-                    and not cfg.scan_layers:
-                # per-layer int8 gather; on scanned stacked params the
-                # replication pin would gather every layer at once
-                p = qat.ship_quant_tree(p, plan.model_bits)
-            return T.loss_fn(p, tokens, targets, cfg, vision_tokens=vision)
-        return jax.value_and_grad(loss)(params)
+    if grad_transform is not None:
+        warnings.warn(
+            "make_train_step(grad_transform=...) is deprecated: a stateless "
+            "fn(grads, key) cannot thread error feedback through jit; use "
+            "repro.train.GradChannel (see the README deprecation table)",
+            DeprecationWarning, stacklevel=2)
+    grads_of = make_grads_fn(cfg, ModelChannel(cfg.precision), accum_steps)
 
     def train_step(params, opt_state, batch, key):
         kq, kg, km = jax.random.split(key, 3)
-        if accum_steps == 1:
-            loss_val, grads = grads_of(params, batch["tokens"], batch["targets"],
-                                       batch.get("vision"), kq)
-        else:
-            def resh(t):
-                return t.reshape(accum_steps, t.shape[0] // accum_steps,
-                                 *t.shape[1:])
-            mb = jax.tree.map(resh, dict(batch))
-
-            def constrain(tree):
-                # grad accumulators must live on the param sharding — without
-                # the constraint GSPMD replicates the f32 accumulator tree
-                return jax.tree_util.tree_map_with_path(
-                    lambda path, g: shard_hint(g, shd.param_spec(path, g)), tree)
-
-            def micro(carry, mb_i):
-                g_acc, l_acc = carry
-                lv, g = grads_of(params, mb_i["tokens"], mb_i["targets"],
-                                 mb_i.get("vision"), kq)
-                g_acc = jax.tree.map(
-                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
-                return (constrain(g_acc), l_acc + lv), None
-
-            zeros = constrain(jax.tree.map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params))
-            (g_sum, l_sum), _ = jax.lax.scan(micro, (zeros, jnp.float32(0.0)), mb)
-            grads = jax.tree.map(lambda g: g / accum_steps, g_sum)
-            loss_val = l_sum / accum_steps
+        loss_val, grads = grads_of(params, batch, kq)
         if grad_transform is not None:
             grads = grad_transform(grads, kg)
         mkey = km if opt_cfg.moment_bits else None
@@ -112,10 +90,13 @@ def _sds(shape, dtype):
     return jax.ShapeDtypeStruct(tuple(shape), dtype)
 
 
-def input_specs(cfg: T.ModelConfig, shape: "configs.ShapeSpec") -> dict[str, Any]:
+def input_specs(cfg: T.ModelConfig, shape: "configs.ShapeSpec",
+                opt_cfg: adamw.AdamWConfig | None = None) -> dict[str, Any]:
     """Stand-ins for every model input of the (arch × shape) cell.
 
-    train  → params, opt_state, batch{tokens,targets[,vision]}, key
+    train  → params, state (full TrainState: opt moments at their *stored*
+             width, error-feedback residuals when grad_bits — so dry-run
+             memory prices what actually resides), batch, key
     prefill→ params, batch{tokens[,vision]}
     decode → params, decode_state (cache of seq_len), tokens (B, 1)
     """
@@ -124,14 +105,24 @@ def input_specs(cfg: T.ModelConfig, shape: "configs.ShapeSpec") -> dict[str, Any
     params = T.param_specs(cfg)
     out["params"] = params
     if shape.kind == "train":
+        from repro.train.channels import default_channels
+        from repro.train.state import init_state
+
+        opt_cfg = opt_cfg if opt_cfg is not None else adamw.AdamWConfig()
         batch = {"tokens": _sds((b, s), jnp.int32),
                  "targets": _sds((b, s), jnp.int32)}
         if cfg.family == "vlm":
             batch["vision"] = _sds((b, cfg.n_vis_tokens, cfg.d_model), jnp.float32)
         out["batch"] = batch
         out["opt_state"] = jax.eval_shape(
-            lambda p: adamw.init(p, adamw.AdamWConfig()), params)
+            lambda p: adamw.init(p, opt_cfg), params)
         out["key"] = _sds((2,), jnp.uint32)
+        channels = default_channels(cfg.precision)
+
+        def mk_state(p, o):
+            ch = {name: c.init(p) for name, c in channels.items()}
+            return init_state(p, o, ch, jnp.zeros((2,), jnp.uint32))
+        out["state"] = jax.eval_shape(mk_state, params, out["opt_state"])
     elif shape.kind == "prefill":
         batch = {"tokens": _sds((b, s), jnp.int32)}
         if cfg.family == "vlm":
@@ -142,3 +133,22 @@ def input_specs(cfg: T.ModelConfig, shape: "configs.ShapeSpec") -> dict[str, Any
             lambda: T.init_decode_state(cfg, b, smax=s))
         out["tokens"] = _sds((b, 1), jnp.int32)
     return out
+
+
+def channel_state_bytes(cfg: T.ModelConfig,
+                        opt_cfg: adamw.AdamWConfig | None = None) -> dict:
+    """Logical bytes of the stateful-channel residents per train step: the
+    error-feedback tree (fp32, grad channel) and the optimizer moments at
+    their stored width — the dry-run line items PrecisionPlan changes move."""
+    from repro.quant.qtensor import tree_nbytes
+
+    opt_cfg = opt_cfg if opt_cfg is not None else adamw.AdamWConfig()
+    params = T.param_specs(cfg)
+    opt = jax.eval_shape(lambda p: adamw.init(p, opt_cfg), params)
+    ef = 0
+    if cfg.precision.grad_bits:
+        ef = jax.eval_shape(gradcomp.init_error_feedback, params)
+        ef = tree_nbytes(ef)
+    return {"moments": tree_nbytes((opt.m, opt.v)),
+            "master": tree_nbytes(opt.master),
+            "error_feedback": ef}

@@ -1,10 +1,10 @@
-"""Training driver: supervisor loop with checkpoint/restart, NaN-skip,
-straggler monitoring, and the ZipML precision plan end-to-end.
+"""Training CLI — a thin shell over :class:`repro.train.Trainer`.
 
-Runs anywhere: `--arch gemma-2b --reduced` trains the smoke-scale config on
-this CPU; on a pod the same flags drive the production mesh. The supervisor
-catches step failures, restores the last checkpoint, and resumes — the
-1000-node fault model (DESIGN.md §3.2).
+The supervisor loop, checkpoint/restart, straggler monitoring and the
+stateful precision channels all live in :mod:`repro.train`; this module
+parses flags, builds the Trainer, and keeps the legacy ``train(arch, ...)``
+entry point as a compatibility wrapper (losses are bit-exact with driving
+the Trainer directly — it *is* the Trainer).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --reduced \
@@ -13,54 +13,46 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import collections
-import time
-
-import numpy as np
-import jax
-import jax.numpy as jnp
+import warnings
 
 from repro import configs
-from repro.ckpt.checkpoint import CheckpointManager
 from repro.kernels import registry
-from repro.data.pipeline import Cursor, TokenStream, TokenStreamConfig
-from repro.launch.steps import make_train_step
-from repro.models import transformer as T
+from repro.data.pipeline import TokenStreamConfig
 from repro.quant import PrecisionPlan
 from repro.optim import adamw
-from repro.precision import gradcomp
+from repro.train import StragglerMonitor, Trainer  # noqa: F401  (re-export)
 
 
-class StragglerMonitor:
-    """Per-step timing ring buffer; flags hosts >3σ behind the fleet.
-
-    On a synchronous pjit pod, one slow host gates every collective — the
-    monitor's job is detection + data-shard rebalance advice, not recovery
-    (recovery = evict + elastic restore, exercised in tests/test_checkpoint).
-    """
-
-    def __init__(self, window: int = 50):
-        self.times = collections.deque(maxlen=window)
-        self.flagged = 0
-
-    def record(self, dt: float) -> bool:
-        self.times.append(dt)
-        if len(self.times) < 10:
-            return False
-        mu = float(np.mean(self.times))
-        sd = float(np.std(self.times)) + 1e-9
-        if dt > mu + 3 * sd:
-            self.flagged += 1
-            return True
-        return False
+def make_trainer(arch: str, *, reduced: bool = True, batch: int = 8,
+                 seq: int = 64, steps: int = 50, lr: float = 1e-3,
+                 moment_bits: int = 0, ckpt_dir: str | None = None,
+                 ckpt_every: int = 20, log_every: int = 10,
+                 precision: PrecisionPlan | None = None,
+                 error_feedback: bool = True) -> Trainer:
+    """Build the standard Trainer for an (arch, shape) training run."""
+    if precision is None:
+        precision = PrecisionPlan()
+    get = configs.get_reduced if reduced else configs.get_config
+    cfg = get(arch, precision=precision)
+    opt_cfg = adamw.AdamWConfig(lr=lr, warmup_steps=max(steps // 10, 1),
+                                decay_steps=steps, moment_bits=moment_bits)
+    stream_cfg = TokenStreamConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch)
+    return Trainer(cfg, opt_cfg, stream_cfg=stream_cfg, ckpt_dir=ckpt_dir,
+                   ckpt_every=ckpt_every, log_every=log_every,
+                   error_feedback=error_feedback)
 
 
 def train(arch: str, *, kernel_backend: str | None = None, **kwargs):
-    """Returns (final_params, losses). See ``_train`` for the remaining kwargs.
+    """Returns (final_params, losses). Compatibility wrapper over Trainer.
 
     ``kernel_backend`` pins the quantization kernel backend for this run only
     ('ref'/'pallas'); None keeps the registry default (env var / hardware).
     The previous registry selection is restored when the run finishes.
+
+    The per-channel ``grad_bits=``/``weight_bits=`` kwargs are deprecated —
+    pass a full four-channel ``precision=PrecisionPlan(...)`` instead
+    (``moment_bits`` stays: it is optimizer config, not a plan channel).
     """
     with registry.using(kernel_backend) as backend:
         print(f"[train] kernel backend: {backend.name} "
@@ -73,94 +65,20 @@ def _train(arch: str, *, reduced: bool = True, steps: int = 50, batch: int = 8,
            lr: float = 1e-3, grad_bits: int = 0, weight_bits: int = 0,
            moment_bits: int = 0, fail_at: int | None = None,
            log_every: int = 10, precision: PrecisionPlan | None = None):
-    """Supervisor body; ``fail_at`` injects a fault (testing).
-
-    ``precision``: a full four-channel :class:`repro.quant.PrecisionPlan`;
-    when None one is assembled from the individual ``*_bits`` knobs.
-    """
+    """Supervisor body; ``fail_at`` injects a fault (testing)."""
     if precision is None:
+        if grad_bits or weight_bits:
+            warnings.warn(
+                "train(grad_bits=/weight_bits=) is deprecated; pass a full "
+                "precision=PrecisionPlan(...) (see the README deprecation "
+                "table)", DeprecationWarning, stacklevel=3)
         precision = PrecisionPlan(model_bits=weight_bits, grad_bits=grad_bits)
-    grad_bits = precision.grad_bits
-    get = configs.get_reduced if reduced else configs.get_config
-    cfg = get(arch, precision=precision)
-    opt_cfg = adamw.AdamWConfig(lr=lr, warmup_steps=max(steps // 10, 1),
-                                decay_steps=steps, moment_bits=moment_bits)
-
-    key = jax.random.PRNGKey(0)
-    params = T.init_params(key, cfg)
-    opt_state = adamw.init(params, opt_cfg)
-    stream = TokenStream(TokenStreamConfig(
-        vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch))
-
-    grad_transform = None
-    ef_state = {"err": None}
-    if grad_bits:
-        # C3 gradient-channel compression with error feedback: quantize →
-        # dequantize the update stream (the collective itself is GSPMD-managed
-        # on this host mesh; wire-format accounting in bench_bandwidth_model)
-        def grad_transform(grads, k):  # noqa: F811
-            comp, ef_state["err"] = gradcomp.compress_tree(
-                grads, grad_bits, k, error=ef_state["err"])
-            return gradcomp.decompress_tree(comp)
-
-    step_fn = jax.jit(make_train_step(cfg, opt_cfg, grad_transform=grad_transform))
-    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
-    monitor = StragglerMonitor()
-
-    # resume if a checkpoint exists
-    start_step = 0
-    if mgr and mgr.latest_step() is not None:
-        (params, opt_state), manifest = mgr.restore((params, opt_state))
-        start_step = manifest["step"]
-        stream.skip_to(Cursor.from_dict(manifest["extra"]["cursor"]))
-        print(f"[train] resumed from step {start_step}")
-
-    losses = []
-    step = start_step
-    while step < steps:
-        try:
-            batch_np = stream.next_batch()
-            batch_j = {k: jnp.asarray(v) for k, v in batch_np.items()}
-            if cfg.family == "vlm":
-                batch_j["vision"] = jnp.zeros(
-                    (batch, cfg.n_vis_tokens, cfg.d_model), jnp.float32)
-            if fail_at is not None and step == fail_at:
-                fail_at = None
-                raise RuntimeError("injected fault (test)")
-            t0 = time.time()
-            params, opt_state, metrics = step_fn(
-                params, opt_state, batch_j, jax.random.fold_in(key, step))
-            loss = float(metrics["loss"])
-            dt = time.time() - t0
-            if monitor.record(dt):
-                print(f"[train] step {step}: straggler flagged ({dt:.3f}s)")
-            losses.append(loss)
-            step += 1
-            if step % log_every == 0:
-                print(f"[train] step {step}: loss={loss:.4f} "
-                      f"gnorm={float(metrics['grad_norm']):.3f} "
-                      f"skipped={float(metrics['skipped']):.0f} ({dt:.2f}s)")
-            if mgr and step % ckpt_every == 0:
-                mgr.save(step, (params, opt_state),
-                         extra={"cursor": stream.cursor.to_dict(),
-                                "precision": precision.to_dict()})
-        except (RuntimeError, jax.errors.JaxRuntimeError) as e:
-            print(f"[train] step {step} FAILED ({e}); restoring last checkpoint")
-            if mgr is None or mgr.latest_step() is None:
-                print("[train] no checkpoint — restarting from scratch")
-                params = T.init_params(key, cfg)
-                opt_state = adamw.init(params, opt_cfg)
-                step = 0
-                stream.skip_to(Cursor(0, 0))
-                continue
-            (params, opt_state), manifest = mgr.restore((params, opt_state))
-            step = manifest["step"]
-            stream.skip_to(Cursor.from_dict(manifest["extra"]["cursor"]))
-    if mgr:
-        mgr.save(steps, (params, opt_state),
-                 extra={"cursor": stream.cursor.to_dict(),
-                        "precision": precision.to_dict()}, blocking=True)
-    return params, losses
+    trainer = make_trainer(
+        arch, reduced=reduced, batch=batch, seq=seq, steps=steps, lr=lr,
+        moment_bits=moment_bits, ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+        log_every=log_every, precision=precision)
+    state, losses = trainer.run(steps, fail_at=fail_at)
+    return state.params, losses
 
 
 def main(argv=None):
@@ -173,19 +91,31 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--grad-bits", type=int, default=0)
     ap.add_argument("--weight-bits", type=int, default=0)
+    ap.add_argument("--weight-storage", default="fake",
+                    choices=("fake", "ship", "int"))
     ap.add_argument("--moment-bits", type=int, default=0)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject one fault at this step (supervisor test)")
     ap.add_argument("--kernel-backend", default=None,
                     choices=registry.available(),
                     help="quantization kernel backend (default: "
                          "$ZIPML_KERNEL_BACKEND or per jax.default_backend())")
     args = ap.parse_args(argv)
-    _, losses = train(args.arch, reduced=args.reduced, steps=args.steps,
-                      batch=args.batch, seq=args.seq, lr=args.lr,
-                      ckpt_dir=args.ckpt_dir, grad_bits=args.grad_bits,
-                      weight_bits=args.weight_bits, moment_bits=args.moment_bits,
-                      kernel_backend=args.kernel_backend)
+    precision = PrecisionPlan(model_bits=args.weight_bits,
+                              model_storage=args.weight_storage,
+                              grad_bits=args.grad_bits)
+    with registry.using(args.kernel_backend) as backend:
+        print(f"[train] kernel backend: {backend.name} "
+              f"(available: {', '.join(registry.available())})")
+        trainer = make_trainer(
+            args.arch, reduced=args.reduced, batch=args.batch, seq=args.seq,
+            steps=args.steps, lr=args.lr, moment_bits=args.moment_bits,
+            ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+            precision=precision)
+        _, losses = trainer.run(args.steps, fail_at=args.fail_at)
     print(f"[train] done: first loss {losses[0]:.4f} → last {losses[-1]:.4f}")
 
 

@@ -2,20 +2,37 @@
 
 The optimizer state is the dominant HBM resident at scale (3 fp32 tensors per
 bf16 param). ZipML's model-channel compression (C1+C4) applies directly:
-``moment_bits=8`` stores m/v as int8 codes + per-tensor scales with stochastic
-rounding on update — E[m̂]=m keeps the update unbiased, the same argument as
-the paper's gradient quantization (App. D).
+``moment_bits=8`` stores m/v as :class:`repro.quant.QTensor` leaves (int8
+codes + per-out-feature fp32 scales) with stochastic rounding on update —
+E[m̂]=m keeps the update unbiased, the same argument as the paper's gradient
+quantization (App. D). The second moment is stored in the √v domain: a
+symmetric grid on v itself would zero small entries and 1/√v explodes.
 
 Pure-pytree implementation: state mirrors the param tree, so the launcher's
-param sharding rules apply verbatim to the state.
+param sharding rules apply verbatim — QTensor code planes shard like the
+dense weight they shadow (``launch.sharding.make_opt_shardings``).
+
+The quantized update dispatches through the kernel-backend registry
+(``quant_adamw_update``): the ``ref`` backend runs the pure-jnp
+decode→update→re-encode below (bit-exact with the seed numerics); the
+``pallas`` backend fuses all three into one VMEM pass per tile
+(kernels/quant_adamw.py) so the per-step optimizer sweep stops being three
+full-tree HBM round-trips.
+
+``MomentQ`` — the module's former private codes+scale NamedTuple — is kept
+as a deprecation-warning alias constructing a QTensor.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro import quant
+from repro.quant import QScheme, QTensor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,53 +46,73 @@ class AdamWConfig:
     warmup_steps: int = 100
     decay_steps: int = 10_000
     min_lr_ratio: float = 0.1
-    moment_bits: int = 0        # 0 = fp32 moments; 8 = int8+scale storage
+    moment_bits: int = 0        # 0 = fp32 moments; 8 = int8 QTensor storage
+    update_clip: float = 10.0   # per-coordinate |update| bound on the
+    # quantized-moment path (0 disables). Quantizing √v can round a small
+    # second moment to exactly 0 while m stays nonzero — the update then
+    # degenerates to m/eps and one step can throw a master weight by O(1e3·lr)
+    # (observed on embedding rows of rare tokens under grad_bits=8 +
+    # moment_bits=8). Exact Adam keeps |update| ≈ O(1), so a loose bound
+    # only clips the quantization pathology. fp32 moments are untouched.
 
 
-class MomentQ(NamedTuple):
-    codes: Any
-    scale: Any
+def MomentQ(codes, scale) -> QTensor:
+    """Deprecated: optimizer moments are plain :class:`repro.quant.QTensor`
+    leaves (int8 codes + fp32 scales) since the Trainer refactor."""
+    warnings.warn(
+        "adamw.MomentQ is deprecated; optimizer moments are repro.quant."
+        "QTensor leaves (see the README deprecation table)",
+        DeprecationWarning, stacklevel=2)
+    codes = jnp.asarray(codes)
+    return QTensor(codes, jnp.asarray(scale, jnp.float32),
+                   moment_scheme(8, codes.ndim))
 
 
 class OptState(NamedTuple):
     step: jax.Array
-    m: Any            # fp32 tree, or MomentQ tree when moment_bits > 0
-    v: Any
+    m: Any            # fp32 tree, or QTensor tree when moment_bits > 0
+    v: Any            # (QTensor v stores √v codes — decode_moment squares)
     master: Any       # fp32 master copy of params
 
 
-def _q_moment(x: jax.Array, bits: int, key, positive: bool = False) -> MomentQ:
-    """Per-row (last-axis-block) stochastic quantization of a moment tensor.
+def moment_scheme(bits: int, ndim: int) -> QScheme:
+    """Per-out-feature (last-axis) scales for matrices, one scalar for
+    vectors/scalars — the same reduction the former ``_q_moment`` used."""
+    return QScheme.int_symmetric(
+        bits, scaling="column" if ndim > 1 else "tensor", rounding="stochastic")
 
-    ``positive`` (second moment): quantize √v on the unsigned grid — a
-    symmetric per-tensor scheme zeroes small v entries and 1/√v explodes.
+
+def encode_moment(x: jax.Array, bits: int, key,
+                  positive: bool = False) -> QTensor:
+    """Stochastically quantize a moment tensor to a QTensor.
+
+    ``positive`` (second moment): encode √v on the grid; the QTensor holds
+    √v-domain codes and :func:`decode_moment` squares on the way out.
     """
-    from repro.quant.qtensor import stochastic_round
-
-    qmax = float(2 ** (bits - 1) - 1)
     t0 = jnp.sqrt(x) if positive else x
-    red_axis = tuple(range(x.ndim - 1)) if x.ndim > 1 else None
-    absmax = jnp.max(jnp.abs(t0), axis=red_axis, keepdims=x.ndim > 1)
-    scale = jnp.where(absmax == 0, 1.0, absmax / qmax)
-    codes = stochastic_round(t0 / scale, key)
-    lo_clip = 0.0 if positive else -qmax
-    return MomentQ(jnp.clip(codes, lo_clip, qmax).astype(jnp.int8),
-                   scale.astype(jnp.float32))
+    return quant.encode(t0, moment_scheme(bits, x.ndim), key)
 
 
-def _deq_moment(q: MomentQ, positive: bool = False) -> jax.Array:
-    v = q.codes.astype(jnp.float32) * q.scale
-    return v * v if positive else v
+def decode_moment(q, positive: bool = False) -> jax.Array:
+    if not isinstance(q, QTensor):
+        return q
+    val = q.decode()
+    return val * val if positive else val
 
 
 def init(params, cfg: AdamWConfig) -> OptState:
     master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
     zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
     if cfg.moment_bits:
-        zq = jax.tree.map(
-            lambda p: MomentQ(jnp.zeros(p.shape, jnp.int8),
-                              jnp.ones((), jnp.float32)), params)
-        return OptState(jnp.zeros((), jnp.int32), zq, zq, master)
+        def zq(p):
+            # scales get their steady-state shape up front so the state pytree
+            # is stable across steps (jit caches, checkpoint templates)
+            sshape = p.shape[-1:] if p.ndim > 1 else ()
+            return QTensor(jnp.zeros(p.shape, jnp.int8),
+                           jnp.ones(sshape, jnp.float32),
+                           moment_scheme(cfg.moment_bits, p.ndim))
+        zq_tree = jax.tree.map(zq, params)
+        return OptState(jnp.zeros((), jnp.int32), zq_tree, zq_tree, master)
     return OptState(jnp.zeros((), jnp.int32), zeros, zeros, master)
 
 
@@ -102,6 +139,8 @@ def apply_updates(params, grads, state: OptState, cfg: AdamWConfig,
     NaN/inf gradients skip the update entirely (fault tolerance: a poisoned
     microbatch or a flaky host cannot corrupt the master weights).
     """
+    from repro.kernels import registry
+
     gnorm = global_norm(grads)
     finite = jnp.isfinite(gnorm)
     clip = jnp.where(gnorm > cfg.grad_clip, cfg.grad_clip / (gnorm + 1e-9), 1.0)
@@ -117,36 +156,84 @@ def apply_updates(params, grads, state: OptState, cfg: AdamWConfig,
         keys = {"m": jax.tree.unflatten(treedef, list(ks[: len(flat)])),
                 "v": jax.tree.unflatten(treedef, list(ks[len(flat):]))}
 
+    backend = registry.resolve(None)
+
     def upd(p_master, g, m_old, v_old, km=None, kv=None):
+        if cfg.moment_bits:
+            return backend.quant_adamw_update(
+                p_master, g, m_old, v_old, km, kv, bits=cfg.moment_bits,
+                b1=cfg.b1, b2=cfg.b2, eps=cfg.eps, b1c=b1c, b2c=b2c, lr=lr,
+                clip=clip, finite=finite,
+                wd=cfg.weight_decay if p_master.ndim >= 2 else 0.0,
+                uclip=cfg.update_clip)
         g32 = g.astype(jnp.float32) * clip
-        m_prev = _deq_moment(m_old) if cfg.moment_bits else m_old
-        v_prev = _deq_moment(v_old, positive=True) if cfg.moment_bits else v_old
-        m = cfg.b1 * m_prev + (1 - cfg.b1) * g32
-        v = cfg.b2 * v_prev + (1 - cfg.b2) * g32 * g32
+        m = cfg.b1 * m_old + (1 - cfg.b1) * g32
+        v = cfg.b2 * v_old + (1 - cfg.b2) * g32 * g32
         update = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
         decay = cfg.weight_decay * p_master if p_master.ndim >= 2 else 0.0
         new_master = p_master - lr * (update + decay)
         new_master = jnp.where(finite, new_master, p_master)
-        if cfg.moment_bits:
-            m_store = _q_moment(jnp.where(finite, m, m_prev), cfg.moment_bits, km)
-            v_store = _q_moment(jnp.where(finite, v, v_prev), cfg.moment_bits, kv,
-                                positive=True)
-        else:
-            m_store = jnp.where(finite, m, m_prev)
-            v_store = jnp.where(finite, v, v_prev)
+        m_store = jnp.where(finite, m, m_old)
+        v_store = jnp.where(finite, v, v_old)
         return new_master, m_store, v_store
 
+    is_q = lambda x: isinstance(x, QTensor)
     if cfg.moment_bits and key is not None:
         out = jax.tree.map(upd, state.master, grads, state.m, state.v,
-                           keys["m"], keys["v"],
-                           is_leaf=lambda x: isinstance(x, MomentQ))
+                           keys["m"], keys["v"], is_leaf=is_q)
     else:
         out = jax.tree.map(upd, state.master, grads, state.m, state.v,
-                           is_leaf=lambda x: isinstance(x, MomentQ))
-    is3 = lambda x: isinstance(x, tuple) and len(x) == 3 and not isinstance(x, MomentQ)
+                           is_leaf=is_q)
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3
     new_master = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
     new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
     new_v = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
     new_params = jax.tree.map(lambda mst, p: mst.astype(p.dtype), new_master, params)
     metrics = {"grad_norm": gnorm, "lr": lr, "skipped": 1.0 - finite.astype(jnp.float32)}
     return new_params, OptState(step, new_m, new_v, new_master), metrics
+
+
+# ---------------------------------------------------------------------------
+# Legacy-checkpoint migration
+# ---------------------------------------------------------------------------
+
+def legacy_moment_template(opt_state: OptState) -> OptState:
+    """The pre-QTensor shape of ``opt_state``: every QTensor moment leaf
+    becomes a plain ``(codes, scale)`` pair with the old scalar scale — the
+    flat-leaf layout of checkpoints written before the Trainer refactor.
+    Feed the result to ``CheckpointManager.restore`` as the template, then
+    convert back with :func:`migrate_legacy_moments`.
+    """
+    def to_pair(q):
+        if not isinstance(q, QTensor):
+            return q            # fp32 moments stored as-is in both formats
+        shp = q.codes.shape
+        sshape = (1,) * (len(shp) - 1) + shp[-1:] if len(shp) > 1 else ()
+        return (jax.ShapeDtypeStruct(shp, jnp.int8),
+                jax.ShapeDtypeStruct(sshape, jnp.float32))
+    is_q = lambda x: isinstance(x, QTensor)
+    return OptState(opt_state.step,
+                    jax.tree.map(to_pair, opt_state.m, is_leaf=is_q),
+                    jax.tree.map(to_pair, opt_state.v, is_leaf=is_q),
+                    opt_state.master)
+
+
+def migrate_legacy_moments(opt_state: OptState, bits: int) -> OptState:
+    """Convert a restored legacy opt state — (codes, scale) moment pairs —
+    to QTensor leaves (the load-time shim for old MomentQ checkpoints)."""
+    warnings.warn(
+        "restored a legacy MomentQ checkpoint; converting m/v to QTensor "
+        "leaves (re-save to upgrade the on-disk format)",
+        DeprecationWarning, stacklevel=2)
+
+    def conv(pair):
+        codes, scale = pair
+        sshape = codes.shape[-1:] if codes.ndim > 1 else ()
+        scale = jnp.broadcast_to(jnp.asarray(scale, jnp.float32).reshape(
+            sshape if jnp.size(scale) > 1 else ()), sshape)
+        return QTensor(codes, scale, moment_scheme(bits, codes.ndim))
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2
+    return OptState(opt_state.step,
+                    jax.tree.map(conv, opt_state.m, is_leaf=is_pair),
+                    jax.tree.map(conv, opt_state.v, is_leaf=is_pair),
+                    opt_state.master)

@@ -39,24 +39,28 @@ def CompressedLeaf(codes, scale) -> QTensor:
                    QScheme.int_symmetric(8))
 
 
-def _grad_scheme(bits: int) -> QScheme:
-    return QScheme.int_symmetric(bits, scaling="tensor", rounding="stochastic")
+def _grad_scheme(bits: int, rounding: str = "stochastic") -> QScheme:
+    return QScheme.int_symmetric(bits, scaling="tensor", rounding=rounding)
 
 
 def _is_qtensor(x) -> bool:
     return isinstance(x, QTensor)
 
 
-def compress_tree(grads, bits: int, key, error=None):
+def compress_tree(grads, bits: int, key, error=None,
+                  rounding: str = "stochastic"):
     """Quantize a gradient pytree. Returns (compressed, new_error).
 
     ``error``: error-feedback pytree (same structure, fp32) added before
     quantization; new_error = (g + e) − Q(g + e).
+    ``rounding``: 'stochastic' (unbiased, C1) or 'nearest' (the §5.4 biased
+    straw man — gradients below half a quantization step vanish without
+    error feedback; EF's telescoping restores them).
     """
     leaves, treedef = jax.tree.flatten(grads)
     keys = jax.random.split(key, len(leaves))
     err_leaves = jax.tree.leaves(error) if error is not None else [None] * len(leaves)
-    scheme = _grad_scheme(bits)
+    scheme = _grad_scheme(bits, rounding)
     comp, new_err = [], []
     for g, e, k in zip(leaves, err_leaves, keys):
         g32 = g.astype(jnp.float32)

@@ -176,13 +176,21 @@ def _sq_bwd(bits, spec, _, g):
 ship_quant.defvjp(_sq_fwd, _sq_bwd)
 
 
-def ship_quant_tree(params, bits: int):
+def ship_quant_tree(params, bits: int, min_size: int = 1 << 16):
     """Apply ship_quant to every large matmul weight (specs from the
-    launcher's sharding rules, so the local-quantize pin matches reality)."""
+    launcher's sharding rules, so the local-quantize pin matches reality).
+
+    Works on scanned stacked layer weights too: a (L, d_in, d_out) leaf gets
+    per-layer (L, 1, d_out) channel scales from the channel_axis=-2 scheme —
+    the same broadcast-over-leading-dims layout as the stacked level tables —
+    so each scanned slice dequantizes against its own layer's scales.
+    ``min_size`` skips weights too small to be worth the gather pin (the
+    reduced smoke configs set it to 0 in tests).
+    """
     from repro.launch.sharding import param_spec
 
     def go(path, leaf):
-        if not _is_weight(path) or leaf.ndim < 2 or leaf.size < (1 << 16):
+        if not _is_weight(path) or leaf.ndim < 2 or leaf.size < min_size:
             return leaf
         return ship_quant(leaf, bits, param_spec(path, leaf))
 

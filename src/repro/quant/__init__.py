@@ -21,6 +21,7 @@ from .qtensor import (
     encode,
     pack_int4,
     quantize_to_levels_jnp,
+    tree_nbytes,
     unpack_int4,
 )
 from .scheme import QScheme
@@ -36,5 +37,6 @@ __all__ = [
     "encode",
     "pack_int4",
     "quantize_to_levels_jnp",
+    "tree_nbytes",
     "unpack_int4",
 ]

@@ -236,6 +236,22 @@ class QTensor:
                 f"bits={self.scheme.bits}, scaling={self.scheme.scaling})")
 
 
+def tree_nbytes(tree) -> int:
+    """Logical HBM/wire bytes of a pytree: QTensor leaves contribute their
+    packed ``.nbytes`` (codes + scales + level tables, §2.2 pair accounting),
+    dense array / ShapeDtypeStruct leaves their ``size × itemsize``. The
+    byte model behind the train-step bench and the dry-run channel-state
+    line items."""
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, QTensor)):
+        if isinstance(leaf, QTensor):
+            total += leaf.nbytes
+        else:
+            n = int(np.prod(leaf.shape)) if len(leaf.shape) else 1
+            total += n * np.dtype(leaf.dtype).itemsize
+    return int(total)
+
+
 # ---------------------------------------------------------------------------
 # Pure-jnp encode implementations (what the 'ref' backend runs; the Pallas
 # backend is tested bit-exact/distribution-identical against these).

@@ -1,0 +1,40 @@
+"""repro.train — the unified training subsystem.
+
+* :class:`TrainState` — ONE pytree for the whole run: params, (quantized)
+  optimizer moments, per-channel state (error-feedback residuals), data
+  cursor, RNG lane, step counter (state.py).
+* channel objects — the four PrecisionPlan channels (sample / model / grad /
+  act) as stateful ``init``/``apply`` objects; the grad channel threads its
+  error-feedback residual through the jitted step (channels.py).
+* :func:`make_step` — the channel-composed train step over a TrainState
+  (step.py).
+* :class:`Trainer` — step + supervisor/restart loop + full-state
+  checkpointing + elastic fleet resize in one object; ``launch/train.py``
+  is now a thin CLI over it (trainer.py).
+"""
+from .channels import (
+    ActChannel,
+    Channel,
+    GradChannel,
+    ModelChannel,
+    SampleChannel,
+    default_channels,
+)
+from .state import TrainState, init_state
+from .step import make_grads_fn, make_step
+from .trainer import StragglerMonitor, Trainer
+
+__all__ = [
+    "ActChannel",
+    "Channel",
+    "GradChannel",
+    "ModelChannel",
+    "SampleChannel",
+    "StragglerMonitor",
+    "TrainState",
+    "Trainer",
+    "default_channels",
+    "init_state",
+    "make_grads_fn",
+    "make_step",
+]

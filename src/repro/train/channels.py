@@ -1,0 +1,178 @@
+"""The four PrecisionPlan channels as stateful objects (ZipML §2.2/§3).
+
+Every channel shares one tiny interface::
+
+    state = channel.init(params)            # its slice of TrainState.channels
+    value, state = channel.apply(value, state, key)
+
+``apply`` is pure and jit-safe; whatever state a channel needs across steps
+(the grad channel's error-feedback residual) flows through the jitted train
+step inside ``TrainState.channels[name]`` — replacing the old stateless
+``grad_transform`` closure, whose trace-once capture silently froze the
+residual at None forever.
+
+Channel map (what each transforms, and what state it contributes):
+
+==========  =======================  ====================================
+channel     transforms               state in TrainState.channels
+==========  =======================  ====================================
+sample      the input batch          — (LM tokens are already discrete;
+                                     float sample tensors are DS-encoded
+                                     only in the 'e2e' plan mode)
+model       params inside the loss   — (fake-quant / ship-quant are
+                                     re-drawn per step)
+grad        the gradient tree        {'ef': fp32 residual tree} — the
+                                     telescoping bias cancellation the
+                                     multi-worker all-reduce needs
+act         (inside the model)       — (the Q₂ plane is saved as the VJP
+                                     residual by precision/act_quant)
+==========  =======================  ====================================
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import quant
+from repro.precision import gradcomp, qat
+from repro.quant import PrecisionPlan, QScheme
+
+
+class Channel:
+    """Base: a stateless passthrough. Subclasses override what they need."""
+
+    name = "abstract"
+
+    def __init__(self, plan: PrecisionPlan):
+        self.plan = plan
+
+    def init(self, params) -> dict:
+        """This channel's slice of ``TrainState.channels`` (a dict pytree)."""
+        del params
+        return {}
+
+    def apply(self, value, state: dict, key):
+        del key
+        return value, state
+
+
+class SampleChannel(Channel):
+    """Q_s — the paper's sample channel.
+
+    LM token streams are already discrete (the SampleStore compression
+    happened upstream in data/pipeline.QuantizedSampleStore), so integer
+    batch leaves pass through untouched. Floating-point sample tensors
+    (e.g. pre-computed vision embeddings) are double-sample-encoded at
+    ``sample_bits`` only in the end-to-end plan mode — ``mode='e2e'`` —
+    keeping every other mode bit-identical to the pre-channel numerics.
+    """
+
+    name = "sample"
+
+    def apply(self, batch, state, key):
+        if self.plan.mode != "e2e" or not self.plan.sample_bits:
+            return batch, state
+        scheme = QScheme.int_symmetric(self.plan.sample_bits,
+                                       scaling="tensor", rounding="stochastic")
+        leaves, treedef = jax.tree.flatten(batch)
+        keys = jax.random.split(key, len(leaves))
+        out = [quant.encode(x, scheme, k).decode(x.dtype)
+               if jnp.issubdtype(x.dtype, jnp.floating) else x
+               for x, k in zip(leaves, keys)]
+        return jax.tree.unflatten(treedef, out), state
+
+
+class ModelChannel(Channel):
+    """Q_m — weight quantization inside the loss.
+
+    ``model_storage='fake'``: QAT straight-through fake quantization (weights
+    stay bf16 at rest). ``'ship'``: quantize-on-gather — int8 codes move
+    through the FSDP all-gather, including over scanned stacked layer params
+    (the per-out-channel scheme reduces over d_in only, so stacked (L, d_in,
+    d_out) weights get per-layer (L, 1, d_out) scales that broadcast exactly
+    like PR 2's stacked level tables). ``'int'`` is the at-rest serving
+    format and does not apply inside a train step.
+    """
+
+    name = "model"
+
+    def __init__(self, plan: PrecisionPlan, ship_min_size: int = 1 << 16):
+        super().__init__(plan)
+        self.ship_min_size = ship_min_size
+
+    def apply(self, params, state, key):
+        plan = self.plan
+        if not plan.model_bits:
+            return params, state
+        if plan.model_storage == "fake":
+            return qat.fake_quant_tree(params, plan.model_bits, key), state
+        if plan.model_storage == "ship":
+            return qat.ship_quant_tree(params, plan.model_bits,
+                                       min_size=self.ship_min_size), state
+        if plan.model_storage == "int":
+            # at-rest serving format: a train step runs on the dense masters;
+            # serve/prefill steps are what consume the QTensor storage
+            return params, state
+        raise ValueError(
+            f"unknown model_storage {plan.model_storage!r} "
+            "(have 'fake' | 'ship' | 'int')")
+
+
+class GradChannel(Channel):
+    """Q_g — compressed gradient collective with error feedback.
+
+    The residual e_t = (g_t + e_{t-1}) − Q(g_t + e_{t-1}) carries to the next
+    step through ``TrainState.channels['grad']['ef']``; the sum of applied
+    updates then telescopes to the sum of true gradients (the accumulated
+    bias cancellation the single-worker analysis of App. D does not give a
+    multi-worker all-reduce).
+    """
+
+    name = "grad"
+
+    def __init__(self, plan: PrecisionPlan, error_feedback: bool = True,
+                 rounding: str = "stochastic"):
+        super().__init__(plan)
+        self.error_feedback = error_feedback
+        self.rounding = rounding
+
+    def init(self, params):
+        if self.plan.grad_bits and self.error_feedback:
+            return {"ef": gradcomp.init_error_feedback(params)}
+        return {}
+
+    def apply(self, grads, state, key):
+        bits = self.plan.grad_bits
+        if not bits:
+            return grads, state
+        comp, new_err = gradcomp.compress_tree(
+            grads, bits, key, error=state.get("ef"), rounding=self.rounding)
+        grads = gradcomp.decompress_tree(comp)
+        if self.error_feedback:
+            state = {"ef": new_err}
+        return grads, state
+
+
+class ActChannel(Channel):
+    """Q_a — double-sampled activation quantization (§3.4 beyond-paper).
+
+    The quantization itself happens *inside* the model forward
+    (``precision/act_quant.ds_dense``, enabled by ``plan.act_bits`` through
+    the model config); its per-step state — the saved Q₂ code plane — is the
+    VJP residual, managed by autodiff, not by TrainState. The channel object
+    exists so the four-channel composition is uniform and so step builders
+    have one place to hang act-channel accounting.
+    """
+
+    name = "act"
+
+
+def default_channels(plan: PrecisionPlan, *, error_feedback: bool = True
+                     ) -> dict[str, Channel]:
+    """The standard four-channel composition for a PrecisionPlan."""
+    return {
+        "sample": SampleChannel(plan),
+        "model": ModelChannel(plan),
+        "grad": GradChannel(plan, error_feedback=error_feedback),
+        "act": ActChannel(plan),
+    }

@@ -1,0 +1,86 @@
+"""TrainState — ONE pytree holding everything a training run is.
+
+Before the Trainer refactor the run state was scattered: params and opt
+state flowed through the jitted step, the error-feedback residual lived in a
+Python closure (where jit trace-once semantics silently froze it — the
+residual never actually fed back), and the data cursor / RNG / step counter
+were loose locals of the supervisor loop. TrainState gathers all of it:
+
+* ``params``    — model parameters (bf16/f32 leaves; QTensor leaves for the
+  int-storage serving format).
+* ``opt``       — :class:`repro.optim.adamw.OptState`; with ``moment_bits``
+  the m/v moments are QTensor leaves (int8 codes + fp32 scales).
+* ``channels``  — per-channel state dict keyed by channel name. The grad
+  channel's error-feedback residual tree lives here, which is what lets it
+  thread *through* the jitted step (HALP-style full-precision correction
+  state around a low-precision inner loop).
+* ``step``      — int32 scalar; also the data-cursor position (the stream's
+  determinism contract: batch i is a pure function of (seed, i, host)).
+* ``rng``       — the run's base PRNG key; per-step keys are
+  ``fold_in(rng, step)`` so restore-and-replay is bit-exact.
+* ``epoch``     — int32 scalar, the cursor epoch.
+
+A checkpoint of a TrainState is therefore the *complete* run: restoring it
+resumes bit-exactly, error-feedback residuals and quantized moments
+included (pinned by tests/test_trainer.py).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import Cursor
+
+
+@jax.tree_util.register_pytree_node_class
+class TrainState:
+    """The complete, checkpointable, jit-able state of a training run."""
+
+    __slots__ = ("params", "opt", "channels", "step", "rng", "epoch")
+
+    def __init__(self, params: Any, opt: Any, channels: dict,
+                 step: jax.Array, rng: jax.Array, epoch: jax.Array):
+        self.params = params
+        self.opt = opt
+        self.channels = channels
+        self.step = step
+        self.rng = rng
+        self.epoch = epoch
+
+    # -------------------------------------------------------------- pytree --
+    def tree_flatten(self):
+        return ((self.params, self.opt, self.channels, self.step, self.rng,
+                 self.epoch), None)
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        return cls(*children)
+
+    # ------------------------------------------------------------- helpers --
+    @property
+    def cursor(self) -> Cursor:
+        """The data-pipeline position this state expects to consume next."""
+        return Cursor(int(self.step), int(self.epoch))
+
+    def replace(self, **kw) -> "TrainState":
+        fields = {k: getattr(self, k) for k in self.__slots__}
+        fields.update(kw)
+        return TrainState(**fields)
+
+    def __repr__(self):
+        try:
+            step = int(self.step)
+        except (TypeError, jax.errors.ConcretizationTypeError):
+            step = self.step
+        return (f"TrainState(step={step}, "
+                f"channels={sorted(self.channels)}, "
+                f"n_params={len(jax.tree.leaves(self.params))})")
+
+
+def init_state(params, opt, channels: dict, key: jax.Array,
+               step: int = 0, epoch: int = 0) -> TrainState:
+    return TrainState(params, opt, dict(channels),
+                      jnp.asarray(step, jnp.int32), key,
+                      jnp.asarray(epoch, jnp.int32))

@@ -26,7 +26,7 @@ class TestPublicExports:
         assert set(quant.__all__) == {
             "PrecisionPlan", "QScheme", "QTensor", "compute_scale", "decode",
             "dot", "ds_pair", "encode", "pack_int4", "quantize_to_levels_jnp",
-            "unpack_int4",
+            "tree_nbytes", "unpack_int4",
         }
         for name in quant.__all__:
             assert hasattr(quant, name), name
@@ -75,6 +75,26 @@ class TestDeprecatedAliases:
             q = CompressedLeaf(jnp.zeros((4,), jnp.int8), jnp.float32(1.0))
         assert isinstance(q, QTensor)
 
+    def test_momentq_warns_and_aliases(self):
+        from repro.optim.adamw import MomentQ
+        with pytest.warns(DeprecationWarning):
+            q = MomentQ(jnp.zeros((4,), jnp.int8), jnp.float32(1.0))
+        assert isinstance(q, QTensor)
+
+    def test_grad_transform_hook_warns(self):
+        from repro import configs
+        from repro.launch.steps import make_train_step
+        from repro.optim.adamw import AdamWConfig
+        cfg = configs.get_reduced("musicgen-medium")
+        with pytest.warns(DeprecationWarning, match="grad_transform"):
+            make_train_step(cfg, AdamWConfig(),
+                            grad_transform=lambda g, k: g)
+
+    def test_train_bits_kwargs_warn(self):
+        from repro.launch.train import _train
+        with pytest.warns(DeprecationWarning, match="PrecisionPlan"):
+            _train("musicgen-medium", steps=0, batch=2, seq=8, grad_bits=8)
+
     def test_legacy_plan_kwargs_warn(self):
         with pytest.warns(DeprecationWarning):
             p = PrecisionPlan(weight_bits=8)
@@ -102,9 +122,12 @@ class TestNoSurvivingCopies:
         r"def _quant\(",                      # act_quant's inline copy
         r"def _quantize_leaf\(",              # gradcomp's inline copy
         r"def _int_quantize_weight\(",        # qat's inline copy
+        r"def _q_moment\(",                   # adamw's inline copy (the 5th)
+        r"def _deq_moment\(",
         r"class Quantized\(NamedTuple\)",     # old storage NamedTuples
         r"class IntTensor\(NamedTuple\)",
         r"class CompressedLeaf\(NamedTuple\)",
+        r"class MomentQ\(NamedTuple\)",       # optim's private codes+scale
     ]
     # the single blessed home of the rounding-mode implementations
     ALLOWED_ROUNDING_HOME = os.path.join("quant", "qtensor.py")

@@ -1,0 +1,424 @@
+"""Trainer / TrainState / channel tests: bit-exact parity with the legacy
+driver, error-feedback threading + convergence, full-state checkpoint
+resume, elastic composition, ship-quant over scanned layers, and the
+dry-run specs for stateful-channel leaves."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.data.pipeline import TokenStream, TokenStreamConfig
+from repro.kernels import registry
+from repro.launch import elastic
+from repro.launch.steps import input_specs
+from repro.launch.train import make_trainer, train
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.precision import gradcomp
+from repro.quant import PrecisionPlan, QTensor
+from repro.train import GradChannel, ModelChannel, SampleChannel, Trainer
+
+ARCH = "musicgen-medium"
+KEY = jax.random.PRNGKey(0)
+
+
+def _mk(steps=6, ckpt_dir=None, **kw) -> Trainer:
+    return make_trainer(ARCH, batch=2, seq=16, steps=steps,
+                        ckpt_dir=ckpt_dir, log_every=1000, **kw)
+
+
+class _TrainShape:
+    kind = "train"
+    global_batch = 2
+    seq_len = 16
+
+
+# ---------------------------------------------------------------------------
+# Bit-exact parity: legacy train() wrapper vs driving the Trainer directly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+class TestLegacyParity:
+    def _run_both(self, precision, moment_bits, steps=20):
+        with registry.using("ref"):
+            _, l_legacy = train(ARCH, steps=steps, batch=2, seq=16,
+                                log_every=1000, precision=precision,
+                                moment_bits=moment_bits)
+            tr = _mk(steps=steps, precision=precision,
+                     moment_bits=moment_bits)
+            state, l_new = tr.run(steps)
+        return l_legacy, l_new, state
+
+    def test_bf16_bit_exact(self):
+        l_legacy, l_new, _ = self._run_both(PrecisionPlan(), 0)
+        assert l_legacy == l_new          # float-identical, 20 steps
+
+    def test_grad8_moment8_bit_exact(self):
+        l_legacy, l_new, state = self._run_both(
+            PrecisionPlan(grad_bits=8), 8)
+        assert l_legacy == l_new
+        # the stateful pieces really exist after 20 steps
+        ef = state.channels["grad"]["ef"]
+        assert sum(float(jnp.sum(jnp.abs(e)))
+                   for e in jax.tree.leaves(ef)) > 0
+        m_leaf = jax.tree.leaves(
+            state.opt.m, is_leaf=lambda x: isinstance(x, QTensor))[0]
+        assert isinstance(m_leaf, QTensor)
+        assert m_leaf.codes.dtype == jnp.int8
+
+
+# ---------------------------------------------------------------------------
+# Error feedback: actually threads through jit, and earns its keep
+# ---------------------------------------------------------------------------
+
+class TestErrorFeedback:
+    def test_ef_state_updates_through_jit(self):
+        """The jitted step must carry the residual in and out — the property
+        the old grad_transform closure could not provide (jit traced it once
+        and froze the captured error at None forever)."""
+        ch = GradChannel(PrecisionPlan(grad_bits=4))
+        g = {"w": jnp.linspace(0.0003, 0.01, 16)}   # coarse 4-bit rounding
+        state0 = ch.init(g)
+
+        @jax.jit
+        def step(grads, state, key):
+            return ch.apply(grads, state, key)
+
+        _, s1 = step(g, state0, KEY)
+        _, s2 = step(g, s1, KEY)
+        # residual is nonzero after one step and different after two
+        assert float(jnp.sum(jnp.abs(s1["ef"]["w"]))) > 0
+        assert not np.array_equal(np.asarray(s1["ef"]["w"]),
+                                  np.asarray(s2["ef"]["w"]))
+
+    def test_quadratic_ef_on_beats_ef_off(self):
+        """Ill-conditioned quadratic at 4-bit gradients, nearest rounding
+        (the §5.4 biased straw man — the regime where EF's telescoping
+        identity is load-bearing; unbiased stochastic rounding self-corrects
+        on a full-batch quadratic). The stiff pair sits at lr·λ = 2, so it
+        oscillates forever and pins the per-tensor absmax high; the soft
+        coordinates' gradients stay below half a quantization step and
+        vanish without EF — their loss stalls at init. EF accumulates the
+        dropped mass and releases it, converging to the granularity floor."""
+        lr = 0.3
+        lam = jnp.concatenate([jnp.full((2,), 2.0 / lr), jnp.full((30,), 0.5)])
+        w_star = jnp.concatenate([jnp.full((2,), 2.0),
+                                  jnp.linspace(0.5, 1.0, 30)])
+
+        def loss(w):
+            return 0.5 * jnp.sum(lam * (w - w_star) ** 2)
+
+        def soft_loss(w):
+            return 0.5 * jnp.sum(lam[2:] * (w[2:] - w_star[2:]) ** 2)
+
+        def run(error_feedback):
+            ch = GradChannel(PrecisionPlan(grad_bits=4),
+                             error_feedback=error_feedback,
+                             rounding="nearest")
+            w = jnp.zeros(32)
+            state = ch.init({"w": w})
+            key = jax.random.PRNGKey(0)
+            for i in range(200):
+                g = {"w": jax.grad(loss)(w)}
+                g, state = ch.apply(g, state, jax.random.fold_in(key, i))
+                w = w - lr * g["w"]
+            return float(soft_loss(w))
+
+        on, off = run(True), run(False)
+        assert on < off / 5, (on, off)
+        assert off > 1.0, off     # without EF the soft block truly stalls
+
+
+# ---------------------------------------------------------------------------
+# Full-state checkpoint: restore → resume is bit-exact (EF + QTensor moments)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+class TestCheckpointResume:
+    def test_resume_bit_exact(self, tmp_path):
+        plan = PrecisionPlan(grad_bits=8)
+        with registry.using("ref"):
+            # uninterrupted reference run
+            tr_a = _mk(steps=10, precision=plan, moment_bits=8)
+            state_a, losses_a = tr_a.run(10)
+            # interrupted run: 5 steps, checkpoint, then a *fresh* Trainer
+            # resumes from disk
+            tr_b = _mk(steps=10, ckpt_dir=str(tmp_path), precision=plan,
+                       moment_bits=8)
+            tr_b.ckpt_every = 5
+            _, losses_b1 = tr_b.run(5)
+            tr_c = _mk(steps=10, ckpt_dir=str(tmp_path), precision=plan,
+                       moment_bits=8)
+            state_c, losses_b2 = tr_c.run(10)
+        assert losses_b1 + losses_b2 == losses_a
+        for a, c in zip(jax.tree.leaves(state_a), jax.tree.leaves(state_c)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+    def test_checkpoint_roundtrips_ef_and_moments(self, tmp_path):
+        with registry.using("ref"):
+            tr = _mk(steps=4, ckpt_dir=str(tmp_path),
+                     precision=PrecisionPlan(grad_bits=8), moment_bits=8)
+            state = tr.init_state()
+            tr.stream.skip_to(state.cursor)
+            for _ in range(3):
+                state, _ = tr.step(state, tr.stream.next_batch())
+            tr.save(state, blocking=True)
+            restored, manifest = tr.restore()
+        assert manifest["extra"]["format"] == "trainstate-v1"
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_legacy_momentq_checkpoint_shim(self, tmp_path):
+        """Pre-Trainer checkpoints — (params, opt_state) with (codes, scale)
+        moment splices — restore through the load-time shim with a warning."""
+        with registry.using("ref"):
+            tr = _mk(steps=4, ckpt_dir=str(tmp_path), moment_bits=8)
+            state = tr.init_state()
+            # fabricate the old on-disk layout from the new state
+            def to_pair(q):
+                sshape = (1,) * (q.codes.ndim - 1) + q.codes.shape[-1:] \
+                    if q.codes.ndim > 1 else ()
+                return (jnp.ones(q.codes.shape, jnp.int8),
+                        jnp.full(sshape, 0.5, jnp.float32))
+            is_q = lambda x: isinstance(x, QTensor)
+            legacy_opt = adamw.OptState(
+                state.opt.step,
+                jax.tree.map(to_pair, state.opt.m, is_leaf=is_q),
+                jax.tree.map(to_pair, state.opt.v, is_leaf=is_q),
+                state.opt.master)
+            mgr = CheckpointManager(str(tmp_path))
+            mgr.save(3, (state.params, legacy_opt),
+                     extra={"cursor": {"step": 3, "epoch": 0}}, blocking=True)
+            with pytest.warns(DeprecationWarning, match="legacy MomentQ"):
+                restored, manifest = tr.restore()
+        assert manifest["step"] == 3 and int(restored.step) == 3
+        m_leaf = jax.tree.leaves(
+            restored.opt.m, is_leaf=is_q)[0]
+        assert isinstance(m_leaf, QTensor)
+        np.testing.assert_allclose(np.asarray(m_leaf.decode()), 0.5)
+        # channel state comes back freshly initialized (no grad_bits → empty)
+        assert restored.channels["grad"] == {}
+
+    def test_legacy_fp32_checkpoint_shim(self, tmp_path):
+        """The most common legacy format — fp32 moments, no MomentQ at all —
+        must restore through the shim too (regression: to_pair used to
+        assume every moment leaf had .codes)."""
+        with registry.using("ref"):
+            tr = _mk(steps=4, ckpt_dir=str(tmp_path), moment_bits=0)
+            state = tr.init_state()
+            mgr = CheckpointManager(str(tmp_path))
+            mgr.save(2, (state.params, state.opt),
+                     extra={"cursor": {"step": 2, "epoch": 0}}, blocking=True)
+            restored, manifest = tr.restore()
+        assert manifest["step"] == 2 and int(restored.step) == 2
+        for a, b in zip(jax.tree.leaves(state.opt.m),
+                        jax.tree.leaves(restored.opt.m)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_new_format_mismatch_raises_not_legacy(self, tmp_path):
+        """A trainstate-v1 checkpoint whose leaves mismatch the template
+        (plan drift) must surface its real error, not be retried as a
+        legacy pair."""
+        with registry.using("ref"):
+            tr = _mk(steps=4, ckpt_dir=str(tmp_path),
+                     precision=PrecisionPlan(grad_bits=8))
+            tr.save(tr.init_state(), blocking=True)
+            tr2 = _mk(steps=4, ckpt_dir=str(tmp_path))   # no grad_bits → no EF
+            with pytest.raises(ValueError, match="leaves"):
+                tr2.restore()
+
+
+# ---------------------------------------------------------------------------
+# Elastic composition: kill a pod, shrink, restore, nothing skipped/repeated
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+class TestElasticComposition:
+    def test_shrink_restore_rewind(self, tmp_path, monkeypatch):
+        monkeypatch.setattr(elastic, "HOSTS_PER_POD", 1)
+        ctl = elastic.ElasticController(2, heartbeat_timeout=10,
+                                        rejoin_patience=2)
+        t = 1000.0
+        ctl.heartbeat(0, 0, now=t)
+        ctl.heartbeat(1, 1, now=t)
+
+        plan = PrecisionPlan(grad_bits=8)
+        with registry.using("ref"):
+            tr = _mk(steps=8, ckpt_dir=str(tmp_path), precision=plan,
+                     moment_bits=8)
+            # this process is host 0 of a 2-host fleet
+            tr.stream_cfg = dataclasses.replace(tr.stream_cfg, n_hosts=2,
+                                                host_id=0)
+            tr.stream = TokenStream(tr.stream_cfg)
+            state = tr.init_state()
+            tr.stream.skip_to(state.cursor)
+            for _ in range(4):
+                state, _ = tr.step(state, tr.stream.next_batch())
+            tr.save(state, blocking=True)
+            saved_ef = jax.tree.map(lambda x: np.asarray(x),
+                                    state.channels["grad"]["ef"])
+            saved_m = jax.tree.map(
+                lambda x: np.asarray(x),
+                jax.tree.leaves(state.opt.m,
+                                is_leaf=lambda q: isinstance(q, QTensor))[0].codes)
+            # two more (to-be-lost) steps past the checkpoint
+            for _ in range(2):
+                state, _ = tr.step(state, tr.stream.next_batch())
+
+            # pod 1 dies mid-run → controller shrinks the mesh
+            ctl.report_failure(1)
+            decision = ctl.decide(latest_checkpoint_step=4, now=t + 1)
+            assert decision.evicted_pods == [1]
+            assert decision.restore_step == 4
+            assert elastic.stream_sharding(decision, 0) == (1, 0)
+
+            state = tr.apply_fleet_decision(decision, state, host_id=0)
+            # rolled back to the checkpoint; cursor rewound with it
+            assert int(state.step) == 4
+            assert tr.stream.cursor.step == 4
+            assert tr.stream_cfg.n_hosts == 1
+
+            # EF residuals and quantized moments survive the reshard
+            for a, b in zip(jax.tree.leaves(saved_ef),
+                            jax.tree.leaves(state.channels["grad"]["ef"])):
+                np.testing.assert_array_equal(a, np.asarray(b))
+            m0 = jax.tree.leaves(
+                state.opt.m, is_leaf=lambda q: isinstance(q, QTensor))[0].codes
+            np.testing.assert_array_equal(saved_m, np.asarray(m0))
+
+            # the resumed stream consumes exactly steps 4, 5, … of the
+            # 1-host configuration — nothing skipped, nothing repeated
+            ref_stream = TokenStream(tr.stream_cfg)
+            for i in (4, 5):
+                got = tr.stream.next_batch()
+                want = ref_stream._batch_at(i)
+                np.testing.assert_array_equal(got["tokens"], want["tokens"])
+                state, _ = tr.step(state, got)
+            assert int(state.step) == 6
+
+
+class TestStreamSharding:
+    def test_unassigned_host_raises(self):
+        """An evicted host must not silently fall back to shard 0 (duplicate
+        data); it gets told it is out of the fleet."""
+        d = elastic.FleetDecision(1, (16, 16), 4, {0: 0}, [1], "pod 1 out")
+        assert elastic.stream_sharding(d, 0) == (1, 0)
+        with pytest.raises(RuntimeError, match="not in the surviving fleet"):
+            elastic.stream_sharding(d, 7)
+
+
+# ---------------------------------------------------------------------------
+# Ship-quantized weights over scanned stacked layers (the silent-fp32 fix)
+# ---------------------------------------------------------------------------
+
+class TestShipScanLayers:
+    def _loss(self, scan_layers, plan):
+        cfg = configs.get_reduced(ARCH, precision=plan)
+        cfg = dataclasses.replace(cfg, scan_layers=scan_layers)
+        params = T.init_params(KEY, cfg)
+        from repro.train.step import make_grads_fn
+        # reduced smoke weights are tiny — drop the worth-the-gather floor
+        grads_of = make_grads_fn(cfg, ModelChannel(plan, ship_min_size=0))
+        stream = TokenStream(TokenStreamConfig(cfg.vocab_size, 16, 2))
+        b = stream.next_batch()
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        loss, grads = jax.jit(grads_of)(params, batch, KEY)
+        return float(loss), grads
+
+    def test_ship_applies_under_scan(self):
+        ship = PrecisionPlan(model_bits=4, model_storage="ship")
+        l_ship, _ = self._loss(True, ship)
+        l_full, _ = self._loss(True, PrecisionPlan())
+        # 4-bit shipped weights must actually perturb the loss — the old
+        # `not cfg.scan_layers` gate silently trained at full precision
+        assert l_ship != l_full
+
+    def test_scan_matches_unrolled(self):
+        ship = PrecisionPlan(model_bits=8, model_storage="ship")
+        l_scan, _ = self._loss(True, ship)
+        l_unroll, _ = self._loss(False, ship)
+        assert np.isclose(l_scan, l_unroll, rtol=1e-5), (l_scan, l_unroll)
+
+
+# ---------------------------------------------------------------------------
+# Sample channel: e2e mode quantizes float sample tensors, others pass through
+# ---------------------------------------------------------------------------
+
+class TestSampleChannel:
+    def test_full_mode_is_identity(self):
+        ch = SampleChannel(PrecisionPlan(sample_bits=5))
+        batch = {"tokens": jnp.arange(6).reshape(2, 3),
+                 "vision": jax.random.normal(KEY, (2, 4))}
+        out, _ = ch.apply(batch, {}, KEY)
+        for k in batch:
+            np.testing.assert_array_equal(np.asarray(out[k]),
+                                          np.asarray(batch[k]))
+
+    def test_e2e_mode_quantizes_float_leaves(self):
+        ch = SampleChannel(PrecisionPlan("e2e", sample_bits=4))
+        batch = {"tokens": jnp.arange(6).reshape(2, 3),
+                 "vision": jax.random.normal(KEY, (2, 64))}
+        out, _ = ch.apply(batch, {}, KEY)
+        np.testing.assert_array_equal(np.asarray(out["tokens"]),
+                                      np.asarray(batch["tokens"]))
+        v, vq = np.asarray(batch["vision"]), np.asarray(out["vision"])
+        assert not np.array_equal(v, vq)
+        step = np.abs(v).max() / 7
+        assert np.abs(v - vq).max() <= step + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Dry-run specs price the stateful-channel leaves
+# ---------------------------------------------------------------------------
+
+class TestInputSpecs:
+    def _specs(self, plan, moment_bits):
+        cfg = configs.get_reduced(ARCH, precision=plan)
+        return input_specs(cfg, _TrainShape(),
+                           opt_cfg=adamw.AdamWConfig(moment_bits=moment_bits))
+
+    def test_moments_priced_at_stored_width(self):
+        from repro.quant import tree_nbytes
+        s8 = self._specs(PrecisionPlan(), 8)["state"]
+        s0 = self._specs(PrecisionPlan(), 0)["state"]
+        m8 = jax.tree.leaves(s8.opt.m, is_leaf=lambda x: isinstance(x, QTensor))
+        assert all(q.codes.dtype == jnp.int8 for q in m8)
+        assert tree_nbytes((s8.opt.m, s8.opt.v)) < \
+            tree_nbytes((s0.opt.m, s0.opt.v)) / 3
+    def test_ef_leaves_present_iff_grad_bits(self):
+        s = self._specs(PrecisionPlan(grad_bits=8), 0)["state"]
+        assert "ef" in s.channels["grad"]
+        ef_leaves = jax.tree.leaves(s.channels["grad"]["ef"])
+        assert ef_leaves and all(x.dtype == jnp.float32 for x in ef_leaves)
+        s0 = self._specs(PrecisionPlan(), 0)["state"]
+        assert s0.channels["grad"] == {}
+
+    def test_state_spec_matches_real_state(self):
+        """eval_shape spec tree == the structure the Trainer really builds."""
+        with registry.using("ref"):
+            tr = _mk(steps=2, precision=PrecisionPlan(grad_bits=8),
+                     moment_bits=8)
+            spec = tr.state_template()
+            state = tr.init_state()
+        a = jax.tree.structure(spec)
+        b = jax.tree.structure(state)
+        assert a == b
+        for s, x in zip(jax.tree.leaves(spec), jax.tree.leaves(state)):
+            assert tuple(s.shape) == tuple(x.shape) and s.dtype == x.dtype
+
+
+class TestGradcompStateAPI:
+    def test_compress_tree_error_none_equals_zeros(self):
+        """EF-zeros init is bit-identical to the legacy error=None first
+        step (g + 0 quantizes identically)."""
+        g = {"a": jax.random.normal(KEY, (32,))}
+        c0, e0 = gradcomp.compress_tree(g, 8, KEY)
+        zeros = gradcomp.init_error_feedback(g)
+        c1, e1 = gradcomp.compress_tree(g, 8, KEY, error=zeros)
+        np.testing.assert_array_equal(np.asarray(c0["a"].codes),
+                                      np.asarray(c1["a"].codes))
+        np.testing.assert_array_equal(np.asarray(e0["a"]), np.asarray(e1["a"]))
