@@ -74,6 +74,29 @@ def run(quick: bool = False):
         "int8_halves_kv_bytes": bool(ratio8 >= 1.8),
         "int4_ge_3x_fewer_kv_bytes": bool(ratio4 >= 3.0),
     })
+
+    # -- weight path at int storage: every model matmul streams codes -------
+    from repro.precision.qat import quantize_param_tree
+    from repro.quant import QTensor
+
+    def w_bytes(tree, bf16: bool) -> int:
+        total = 0
+        for leaf in jax.tree.leaves(
+                tree, is_leaf=lambda x: isinstance(x, QTensor)):
+            if isinstance(leaf, QTensor):
+                total += (2 * leaf.size * (2 if leaf.scheme.packed else 1)
+                          if bf16 else leaf.nbytes)
+        return total
+
+    q8 = quantize_param_tree(params, bits=8)
+    q4 = quantize_param_tree(params, bits=4)
+    r8 = w_bytes(q8, False) / w_bytes(q8, True)
+    r4 = w_bytes(q4, False) / w_bytes(q4, True)
+    rows.append({"case": "weight_path",
+                 "int8_ratio_vs_bf16": round(r8, 3),
+                 "int4_ratio_vs_bf16": round(r4, 3),
+                 "weights_int8_le_055x": bool(r8 <= 0.55),
+                 "weights_int4_le_030x": bool(r4 <= 0.30)})
     return rows
 
 

@@ -39,13 +39,90 @@ BENCHES = [
     ("fig9_chebyshev_negative", "benchmarks.bench_chebyshev"),
     ("fig12_refetch", "benchmarks.bench_refetch"),
     ("ds_fused", "benchmarks.bench_ds_fused"),
+    ("qmm", "benchmarks.bench_qmm"),
     ("serve_engine", "benchmarks.bench_serve_engine"),
     ("train_step", "benchmarks.bench_train_step"),
 ]
 
 # fast, shape-independent claims only — what CI runs on every PR
-SMOKE_BENCHES = {"fig5_bandwidth_model", "ds_fused", "serve_engine",
+SMOKE_BENCHES = {"fig5_bandwidth_model", "ds_fused", "qmm", "serve_engine",
                  "train_step"}
+
+# committed per-bench baselines the --smoke regression gate compares against
+BASELINE_DIR = os.path.join(_REPO_ROOT, "benchmarks", "baselines")
+
+
+def regression_gate(payloads: dict) -> list[str]:
+    """Compare this run against the committed baselines: every HBM-byte /
+    parity CHECK that held in the baseline must still hold, and the
+    trainer step wall-clock (normalized by the in-run fp32-matmul
+    calibration, so machine speed cancels) must not regress more than
+    ``ZIPML_BENCH_WALLCLOCK_TOL`` (default 10%). Returns failure strings.
+    """
+    fails = []
+    wall_tol = float(os.environ.get("ZIPML_BENCH_WALLCLOCK_TOL", "0.10"))
+    for name, payload in payloads.items():
+        path = os.path.join(BASELINE_DIR, f"BENCH_{name}.json")
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            base = json.load(f)
+
+        def checks(rows):
+            out = {}
+            for i, row in enumerate(rows):
+                tag = row.get("case", str(i))
+                for k, v in row.items():
+                    if isinstance(v, bool):
+                        out[f"{tag}/{k}"] = v
+            return out
+
+        now_checks = checks(payload["rows"])
+        for key, held in checks(base["rows"]).items():
+            if not held:
+                continue
+            if key not in now_checks:
+                # a renamed/dropped CHECK must be an explicit baseline
+                # update, never a silent gate bypass
+                fails.append(
+                    f"{name}: baseline CHECK {key} missing from this run — "
+                    "regenerate benchmarks/baselines/ if intentional")
+            elif now_checks[key] is False:
+                fails.append(f"{name}: CHECK {key} regressed (was PASS)")
+        # normalized wall-clock: rows carrying both step_ms and calib_ms
+        # (min step time over the run — the stable steady-state estimator)
+        base_rows = {r.get("case"): r for r in base["rows"]}
+        now_cases = {r.get("case") for r in payload["rows"]}
+        for case, b in base_rows.items():
+            if "calib_ms" in b and case not in now_cases:
+                fails.append(
+                    f"{name}: baseline wall-clock case {case!r} missing "
+                    "from this run — regenerate benchmarks/baselines/ if "
+                    "intentional")
+        for row in payload["rows"]:
+            b = base_rows.get(row.get("case"))
+            if not b or "step_ms" not in row or "calib_ms" not in row:
+                continue
+            if not b.get("calib_ms") or not row["calib_ms"]:
+                continue
+            end = row.get("calib_ms_end", row["calib_ms"])
+            jitter = abs(end / row["calib_ms"] - 1)
+            if jitter > 0.15:
+                print(f"{name}/{row['case']}: machine too noisy for the "
+                      f"wall-clock gate (calibration jitter {jitter:.0%}); "
+                      "byte CHECKs still gate")
+                continue
+            calib = min(row["calib_ms"], end)
+            now_norm = row.get("step_ms_min", row["step_ms"]) / calib
+            b_end = b.get("calib_ms_end", b["calib_ms"])
+            base_norm = b.get("step_ms_min", b["step_ms"]) / \
+                min(b["calib_ms"], b_end)
+            if now_norm > base_norm * (1 + wall_tol):
+                fails.append(
+                    f"{name}/{row['case']}: normalized step wall-clock "
+                    f"{now_norm:.1f} > baseline {base_norm:.1f} "
+                    f"(+{wall_tol:.0%} allowed)")
+    return fails
 
 
 def main(argv=None) -> int:
@@ -63,6 +140,7 @@ def main(argv=None) -> int:
     json_dir = args.json_dir or ("." if args.smoke else None)
 
     all_checks = []
+    payloads = {}
     for name, module in BENCHES:
         if args.only and args.only not in name:
             continue
@@ -79,20 +157,28 @@ def main(argv=None) -> int:
                 if isinstance(v, (bool, np.bool_)):
                     all_checks.append((f"{name}/{k}", bool(v)))
         print(f"{name},_timing,seconds={dt:.1f}")
+        payload = {"bench": name, "seconds": round(dt, 2), "quick": quick,
+                   "rows": [{k: (bool(v) if isinstance(v, np.bool_) else v)
+                             for k, v in row.items()} for row in rows]}
+        payloads[name] = payload
         if json_dir:
-            payload = {"bench": name, "seconds": round(dt, 2), "quick": quick,
-                       "rows": [{k: (bool(v) if isinstance(v, np.bool_) else v)
-                                 for k, v in row.items()} for row in rows]}
             path = os.path.join(json_dir, f"BENCH_{name}.json")
             with open(path, "w") as f:
                 json.dump(payload, f, indent=2, default=str)
             print(f"{name},_json,path={path}")
     print()
+    gate_fails = []
+    if args.smoke:
+        gate_fails = regression_gate(payloads)
+        for msg in gate_fails:
+            print(f"REGRESSION FAIL: {msg}")
+        if not gate_fails and os.path.isdir(BASELINE_DIR):
+            print("regression gate: no regressions vs committed baselines")
     n_pass = sum(1 for _, v in all_checks if v)
     for label, v in all_checks:
         print(f"CHECK {'PASS' if v else 'FAIL'}: {label}")
     print(f"\n{n_pass}/{len(all_checks)} paper-claim checks passed")
-    return 0 if n_pass == len(all_checks) else 1
+    return 0 if n_pass == len(all_checks) and not gate_fails else 1
 
 
 if __name__ == "__main__":

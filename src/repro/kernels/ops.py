@@ -1,5 +1,10 @@
-"""jit'd public wrappers around the Pallas kernels (padding, reshaping,
-interpret-mode selection). ``INTERPRET`` flips to False on real TPU backends.
+"""jit'd public wrappers around the Pallas kernels (padding, reshaping).
+
+Interpret-mode selection lives in ONE place — :func:`repro.kernels.registry.
+interpret_default` (real compile on TPU, interpret on CPU/CI or under
+``ZIPML_PALLAS_INTERPRET=1``); every kernel entry point defaults
+``interpret=None`` and resolves there, so no caller can silently pin
+interpret-mode Pallas into a hot loop.
 """
 from __future__ import annotations
 
@@ -12,7 +17,6 @@ from . import quant_adamw as qa_mod
 from . import ssd as ssd_mod
 from . import stoch_quant as sq_mod
 
-INTERPRET = jax.default_backend() != "tpu"
 
 
 def _pad_to(x, mult, axis):
@@ -31,9 +35,9 @@ def quantize_rows(x: jax.Array, s: int, key: jax.Array):
     E[codes/s·scale] = x.
     """
     assert x.ndim == 2
-    scale = sq_mod.row_absmax(x, interpret=INTERPRET)
+    scale = sq_mod.row_absmax(x)
     rand = jax.random.bits(key, x.shape, jnp.uint32)
-    codes = sq_mod.stoch_quant(x, rand, scale, s=s, interpret=INTERPRET)
+    codes = sq_mod.stoch_quant(x, rand, scale, s=s)
     return codes, scale
 
 
@@ -53,7 +57,7 @@ def ds_quantize(x: jax.Array, s: int, key: jax.Array,
     assert x.ndim == 2
     r, c = x.shape
     if scale is None:
-        scale = sq_mod.row_absmax(x, interpret=INTERPRET)
+        scale = sq_mod.row_absmax(x)
         scale_axis = "row"
     elif jnp.shape(scale) == (r, 1):
         scale = jnp.asarray(scale, jnp.float32)
@@ -63,8 +67,7 @@ def ds_quantize(x: jax.Array, s: int, key: jax.Array,
                                  (1, c))
         scale_axis = "col"
     rand = jax.random.bits(key, x.shape, jnp.uint32)
-    c1, c2 = sq_mod.ds_quant(x, rand, scale, s=s, scale_axis=scale_axis,
-                             interpret=INTERPRET)
+    c1, c2 = sq_mod.ds_quant(x, rand, scale, s=s, scale_axis=scale_axis)
     return c1, c2, scale
 
 
@@ -83,8 +86,7 @@ def int8_matvec(codes: jax.Array, v: jax.Array) -> jax.Array:
     codes, _ = _pad_to(codes, 128, 1)
     v2, _ = _pad_to(v.reshape(-1, 1).astype(jnp.float32), 128, 0)
     r, c = codes.shape
-    out = qmm_mod.qmv(codes, v2, br=_block_fit(r, 256), bc=_block_fit(c, 512),
-                      interpret=INTERPRET)
+    out = qmm_mod.qmv(codes, v2, br=_block_fit(r, 256), bc=_block_fit(c, 512))
     return out[:r0, 0]
 
 
@@ -120,9 +122,65 @@ def quantized_matmul(x: jax.Array, codes: jax.Array, scale: jax.Array) -> jax.Ar
     m, k = x.shape
     _, n = codes.shape
     y = qmm_mod.qmm(x, codes, scale, bm=_block_fit(m, 256),
-                    bk=_block_fit(k, 512), bn=_block_fit(n, 256),
-                    interpret=INTERPRET)
+                    bk=_block_fit(k, 512), bn=_block_fit(n, 256))
     return y[:m0, :n0]
+
+
+def quant_dense_apply(x: jax.Array, codes: jax.Array, scale: jax.Array, *,
+                      packed: bool = False,
+                      transpose: bool = False) -> jax.Array:
+    """General y = x · dequant(codes, scale)[ᵀ] for 2-D code planes.
+
+    x: (*lead, K) [or (*lead, N) transposed]; codes (K, N) int8 or
+    (K, N/2) packed-int4 uint8; scale (1, N) f32 (zipml grids pre-divide by
+    s). Leading x dims fold into the GEMM M axis; every dim pads to 128
+    multiples (zero padding is exact: padded x/g entries are 0, padded
+    output rows/cols are sliced off) and packed planes pad bytewise.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m0 = x2.shape[0]
+    k0 = codes.shape[0]
+    n0 = codes.shape[1] * (2 if packed else 1)
+    pdiv = 2 if packed else 1
+    x2, _ = _pad_to(x2, 128, 0)
+    x2, _ = _pad_to(x2, 128, 1)
+    codes, _ = _pad_to(codes, 128, 0)
+    codes, _ = _pad_to(codes, 128 // pdiv, 1)
+    scale, _ = _pad_to(scale, 128, 1)
+    k = codes.shape[0]
+    n = codes.shape[1] * pdiv
+    m = x2.shape[0]
+    if transpose:
+        y = qmm_mod.qmm_t(x2, codes, scale, packed=packed,
+                          bm=_block_fit(m, 256), bk=_block_fit(k, 256),
+                          bn=_block_fit(n, 512))
+        return y[:m0, :k0].reshape(*lead, k0)
+    y = qmm_mod.qmm(x2, codes, scale, packed=packed, bm=_block_fit(m, 256),
+                    bk=_block_fit(k, 512), bn=_block_fit(n, 256))
+    return y[:m0, :n0].reshape(*lead, n0)
+
+
+def quant_dense_out_q(x: jax.Array, codes: jax.Array, scale: jax.Array,
+                      rand: jax.Array, *, qmax: int, packed: bool = False,
+                      out_dtype=jnp.bfloat16):
+    """Fused GEMM + double-sampled row quantization of the output
+    (kernels/qmm.qmm_qout). x: (M, K); codes (K, N[/2]); scale (1, N);
+    rand (M, N) uint32. Returns (codes1, codes2 (M, N) int8, row scales
+    (M, 1) f32); the full-width activation never reaches HBM. Only M/K pad
+    (zero rows are exact); N stays the true output width — the row absmax
+    must not see padding garbage.
+    """
+    m0, _ = x.shape
+    x, _ = _pad_to(x, 128, 0)
+    x, _ = _pad_to(x, 128, 1)
+    codes, _ = _pad_to(codes, 128, 0)
+    rand, _ = _pad_to(rand, 128, 0)
+    m, k = x.shape
+    c1, c2, oscale = qmm_mod.qmm_qout(
+        x, codes, scale, rand, qmax=qmax, packed=packed, out_dtype=out_dtype,
+        bm=_block_fit(m, 256), bk=_block_fit(k, 512))
+    return c1[:m0], c2[:m0], oscale[:m0]
 
 
 def quant_adamw_update(master, g, m_codes, m_scale, v_codes, v_scale, rand, *,
@@ -160,8 +218,7 @@ def quant_adamw_update(master, g, m_codes, m_scale, v_codes, v_scale, rand, *,
         jnp.asarray(b2c, jnp.float32),
         jnp.float32(0), jnp.float32(0), jnp.float32(0)])
     mx, vx = qa_mod.qadamw_absmax(g, m_codes, ms, v_codes, vs, params,
-                                  b1=b1, b2=b2, block=block,
-                                  interpret=INTERPRET)
+                                  b1=b1, b2=b2, block=block)
     mx = jnp.max(mx, axis=0)
     vx = jnp.max(vx, axis=0)
     msn = jnp.where(mx == 0, 1.0, mx / qmax).astype(jnp.float32)
@@ -169,8 +226,7 @@ def quant_adamw_update(master, g, m_codes, m_scale, v_codes, v_scale, rand, *,
     nm, mc, vc = qa_mod.qadamw_update(
         master, g, m_codes, ms, v_codes, vs,
         msn.reshape(1, -1), vsn.reshape(1, -1), rand, params,
-        b1=b1, b2=b2, eps=eps, wd=wd, qmax=qmax, uclip=uclip, block=block,
-        interpret=INTERPRET)
+        b1=b1, b2=b2, eps=eps, wd=wd, qmax=qmax, uclip=uclip, block=block)
     return (nm[:r0, :c0], mc[:r0, :c0], msn[:c0], vc[:r0, :c0], vsn[:c0])
 
 
@@ -196,8 +252,7 @@ def paged_attention(q, k_pages, v_pages, k_scale, v_scale, block_table,
         v_scale = jnp.ones((1, 1, hkv, 1), jnp.float32)
     out = pa_mod.paged_decode_attn(
         q, k_pages, v_pages, k_scale, v_scale, block_table, seq_lens,
-        softmax_scale=float(softmax_scale), kv_bits=kv_bits_of(k_pages),
-        interpret=INTERPRET)
+        softmax_scale=float(softmax_scale), kv_bits=kv_bits_of(k_pages))
     return out.astype(q.dtype)
 
 
@@ -220,5 +275,5 @@ def ssd_chunked_kernel(xh, dt, a_log, b_mat, c_mat, chunk: int = 256):
 
     y, state = ssd_mod.ssd_chunk_scan(
         chunked(xh), chunked(dt), chunked(logdec),
-        chunked(b_mat), chunked(c_mat), interpret=INTERPRET)
+        chunked(b_mat), chunked(c_mat))
     return y.reshape(b, s, h, p), state

@@ -35,6 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import registry
+
 NEG_INF = -2.0 ** 30  # matches models/attention.py: finite, exp() == 0.0 in f32
 
 
@@ -105,7 +107,7 @@ def paged_decode_attn(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                       k_scale: jax.Array, v_scale: jax.Array,
                       block_table: jax.Array, seq_lens: jax.Array, *,
                       softmax_scale: float, kv_bits: int = 0,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool | None = None) -> jax.Array:
     """q (B, H, D) × paged KV pool → (B, H, D) f32.
 
     k/v_pages: (P, page, Hkv, D) bf16/int8 or (P, page, Hkv, D/2) uint8
@@ -151,5 +153,5 @@ def paged_decode_attn(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, d), jnp.float32),
-        interpret=interpret,
+        interpret=registry.resolve_interpret(interpret),
     )(bt, lens, q, k_pages, v_pages, k_scale, v_scale)

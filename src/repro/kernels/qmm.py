@@ -1,16 +1,31 @@
-"""Pallas TPU kernel: fused dequantize-matmul (int8 weights × bf16 acts).
+"""Pallas TPU kernels: fused dequantize-matmul over quantized code planes.
 
-The ZipML weight channel stores W as int8 codes + per-output-channel scales
-(precision/qat.py). This kernel streams the int8 blocks HBM→VMEM (half the
-bytes of bf16 — the memory-roofline win), dequantizes in VMEM, and feeds the
-MXU with fp32 accumulation:
+The ZipML weight channel stores W as integer codes + fp32 scales
+(int8, or nibble-packed int4 — two offset-binary codes per byte). These
+kernels stream the code blocks HBM→VMEM (2×/4× fewer bytes than bf16 — the
+memory-roofline win), dequantize in VMEM, and feed the MXU with fp32
+accumulation. Three shapes cover the whole model path:
 
-    y[M, N] = x[M, K] · (codes[K, N] ⊙ scale[1, N])
+* ``qmm``   — forward  ``y[M, N] = x[M, K] · (codes[K, N] ⊙ scale[1, N])``
+* ``qmm_t`` — transpose ``dx[M, K] = dy[M, N] · (codes[K, N] ⊙ scale)ᵀ`` —
+  the code-domain backward (HALP's point: the bwd must stay low-precision
+  too, or the bandwidth win evaporates). Also the tied-readout forward
+  ``logits = h · tableᵀ``.
+* ``qmm_qout`` — forward with a fused **quantize epilogue**: when the
+  consumer is a quantized activation channel, the §2.2 double-sampling pair
+  (row scales + both int8 code planes) is emitted straight from the fp32
+  accumulator tile in VMEM — the full-width activation never touches HBM
+  (mirrors kernels/stoch_quant.ds_quant, but fused at the matmul output).
 
 Blocking: (bm, bk)×(bk, bn) with bm=bn=256, bk=512 → VMEM working set
-bm·bk·2 + bk·bn·1 + bm·bn·4 ≈ 0.6 MiB; K is the sequential grid axis so the
-fp32 accumulator tile lives across the K loop. All dims padded to multiples
-of 128 by the caller (ops.py) — MXU-aligned.
+bm·bk·2 + bk·bn·1 + bm·bn·4 ≈ 0.6 MiB; the contraction axis is the
+sequential minor grid axis so the fp32 accumulator tile lives across its
+loop. All dims padded to multiples of 128 by the caller (ops.py) —
+MXU-aligned. ``qmm_qout`` holds a (bm, N) accumulator (N unblocked), so its
+VMEM bound is bm·N·(4+4+2·1) bytes — callers cap bm accordingly.
+
+``interpret=None`` resolves through :func:`repro.kernels.registry.
+interpret_default` — the ONE place deciding real-compile vs interpret mode.
 """
 from __future__ import annotations
 
@@ -19,9 +34,32 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import registry
 
 
-def _qmm_kernel(x_ref, w_ref, scale_ref, o_ref):
+def _dequant_block(w, scale, *, packed: bool):
+    """codes block (bk, bn[/2]) + scale (1, bn) → dequantized (bk, bn) f32.
+
+    Dequantizes at full f32 precision in VMEM — the same values as
+    ``QTensor.decode()`` (f32 default), i.e. strictly *more* accurate than
+    the ref backend's bf16 decode-then-einsum, whose decoded weight carries
+    one bf16 rounding. Parity vs ref is therefore bounded by bf16 epsilon;
+    the code-domain gradient matches the f32 decode path to f32-accumulation
+    associativity (≤ 1e-5 rel — the bench CHECK). Packed int4 planes unpack
+    through the canonical :func:`repro.quant.unpack_int4` (pure jnp — traces
+    inside the kernel body)."""
+    if packed:
+        from repro.quant import unpack_int4
+
+        x = unpack_int4(w)
+    else:
+        x = w.astype(jnp.float32)
+    return x * scale.astype(jnp.float32)
+
+
+def _qmm_kernel(x_ref, w_ref, scale_ref, o_ref, *, packed: bool):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -29,9 +67,22 @@ def _qmm_kernel(x_ref, w_ref, scale_ref, o_ref):
         o_ref[...] = jnp.zeros_like(o_ref)
 
     x = x_ref[...]
-    w = (w_ref[...].astype(jnp.float32)
-         * scale_ref[...].astype(jnp.float32)).astype(x.dtype)
-    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+    w = _dequant_block(w_ref[...], scale_ref[...], packed=packed)
+    o_ref[...] += jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+
+
+def _qmm_t_kernel(g_ref, w_ref, scale_ref, o_ref, *, packed: bool):
+    n = pl.program_id(2)
+
+    @pl.when(n == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g = g_ref[...]
+    w = _dequant_block(w_ref[...], scale_ref[...], packed=packed)
+    # dx[bm, bk] += dy[bm, bn] · w[bk, bn]ᵀ — contraction over the N axis
+    o_ref[...] += jax.lax.dot_general(
+        g.astype(jnp.float32), w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
 
 
 def _qmv_kernel(c_ref, v_ref, o_ref):
@@ -47,7 +98,7 @@ def _qmv_kernel(c_ref, v_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("br", "bc", "interpret"))
 def qmv(codes: jax.Array, v: jax.Array, *, br: int = 256, bc: int = 512,
-        interpret: bool = True) -> jax.Array:
+        interpret: bool | None = None) -> jax.Array:
     """int8 codes (R, C) · f32 v (C, 1) → (R, 1) f32, fp32 accumulation.
 
     The double-sampling gradient q₁ᵀ(q₂x − b) reduces to two of these matvecs
@@ -55,6 +106,7 @@ def qmv(codes: jax.Array, v: jax.Array, *, br: int = 256, bc: int = 512,
     int8 — 4× fewer bytes than the dequantized-f32 two-pass path. Dims must be
     block multiples; ops.int8_matvec is the padded entry point.
     """
+    interpret = registry.resolve_interpret(interpret)
     r, c = codes.shape
     br = min(br, r)
     bc = min(bc, c)
@@ -73,31 +125,166 @@ def qmv(codes: jax.Array, v: jax.Array, *, br: int = 256, bc: int = 512,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bm", "bk", "bn", "interpret"))
+                   static_argnames=("packed", "bm", "bk", "bn", "interpret"))
 def qmm(x: jax.Array, codes: jax.Array, scale: jax.Array, *,
-        bm: int = 256, bk: int = 512, bn: int = 256,
-        interpret: bool = True) -> jax.Array:
-    """x: (M, K) bf16/f32 · int8 codes (K, N) with scale (1, N) → (M, N) f32.
+        packed: bool = False, bm: int = 256, bk: int = 512, bn: int = 256,
+        interpret: bool | None = None) -> jax.Array:
+    """x: (M, K) bf16/f32 · codes (K, N) int8 [or (K, N/2) packed-int4 uint8]
+    with scale (1, N) → (M, N) f32.
 
     Dims must be multiples of the block sizes' gcd with 128 — use
-    ops.quantized_matmul for the padded general entry point.
+    ops.quant_dense_apply for the padded general entry point.
     """
+    interpret = registry.resolve_interpret(interpret)
     m, k = x.shape
     k2, n = codes.shape
+    if packed:
+        n *= 2
     assert k == k2, (x.shape, codes.shape)
+    assert scale.shape == (1, n), (scale.shape, n)
     bm = min(bm, m)
     bk = min(bk, k)
     bn = min(bn, n)
+    pdiv = 2 if packed else 1
     grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
     return pl.pallas_call(
-        _qmm_kernel,
+        functools.partial(_qmm_kernel, packed=packed),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn // pdiv), lambda i, j, kk: (kk, j)),
             pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
     )(x, codes, scale)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("packed", "bm", "bk", "bn", "interpret"))
+def qmm_t(g: jax.Array, codes: jax.Array, scale: jax.Array, *,
+          packed: bool = False, bm: int = 256, bk: int = 256, bn: int = 512,
+          interpret: bool | None = None) -> jax.Array:
+    """g: (M, N) · codes (K, N) [or (K, N/2) packed] with scale (1, N)
+    → (M, K) f32: the transpose product ``g · (codes ⊙ scale)ᵀ``.
+
+    This is the code-domain backward of ``qmm`` (dx streams int8 HBM→VMEM
+    instead of re-decoding a bf16 weight) and the tied-unembed forward
+    (logits = h · tableᵀ). Contraction runs over N as the sequential minor
+    grid axis; dims must be block multiples — see ops.quant_dense_dx.
+    """
+    interpret = registry.resolve_interpret(interpret)
+    m, n = g.shape
+    k, n2 = codes.shape
+    if packed:
+        n2 *= 2
+    assert n == n2, (g.shape, codes.shape)
+    assert scale.shape == (1, n), (scale.shape, n)
+    bm = min(bm, m)
+    bk = min(bk, k)
+    bn = min(bn, n)
+    pdiv = 2 if packed else 1
+    grid = (pl.cdiv(m, bm), pl.cdiv(k, bk), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        functools.partial(_qmm_t_kernel, packed=packed),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, nn: (i, nn)),
+            pl.BlockSpec((bk, bn // pdiv), lambda i, j, nn: (j, nn)),
+            pl.BlockSpec((1, bn), lambda i, j, nn: (0, nn)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, nn: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=interpret,
+    )(g, codes, scale)
+
+
+def _qmm_qout_kernel(x_ref, w_ref, scale_ref, rand_ref, c1_ref, c2_ref,
+                     os_ref, acc_ref, *, packed: bool, qmax: int,
+                     out_dtype):
+    """GEMM with fused double-sampling quantize epilogue.
+
+    The (bm, N) fp32 accumulator lives in VMEM scratch across the K loop; at
+    the last K step the row absmax → scale, and both §2.2 stochastic planes
+    are emitted from the high/low 16 bits of one uint32 rand plane — the
+    exact rounding convention of kernels/stoch_quant._ds_quant_kernel, so
+    fused and unfused (qmm → ds row quantize) paths are bit-identical given
+    the same rand bits. The full-width activation never reaches HBM.
+    """
+    kk = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = _dequant_block(w_ref[...], scale_ref[...], packed=packed)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _epilogue():
+        # quantize the dtype-rounded activation (bf16 in the model) so the
+        # fused path matches einsum→astype(x.dtype)→quantize exactly
+        y = acc_ref[...].astype(out_dtype).astype(jnp.float32)
+        absmax = jnp.max(jnp.abs(y), axis=1, keepdims=True)       # (bm, 1)
+        scale = jnp.where(absmax == 0, 1.0, absmax / qmax)
+        t = y / scale
+        base = jnp.floor(t)
+        frac = t - base
+        u = rand_ref[...]
+        u1 = (u >> 16).astype(jnp.float32) * (1.0 / (1 << 16))
+        u2 = (u & 0xFFFF).astype(jnp.float32) * (1.0 / (1 << 16))
+        c1 = jnp.clip(base + (u1 < frac).astype(jnp.float32), -qmax, qmax)
+        c2 = jnp.clip(base + (u2 < frac).astype(jnp.float32), -qmax, qmax)
+        c1_ref[...] = c1.astype(jnp.int8)
+        c2_ref[...] = c2.astype(jnp.int8)
+        os_ref[...] = scale.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "packed", "qmax", "out_dtype", "bm", "bk", "interpret"))
+def qmm_qout(x: jax.Array, codes: jax.Array, scale: jax.Array,
+             rand: jax.Array, *, qmax: int, packed: bool = False,
+             out_dtype=jnp.bfloat16, bm: int = 256, bk: int = 512,
+             interpret: bool | None = None):
+    """Fused ``y = x·dequant(codes)`` + double-sampled row quantization of y.
+
+    x: (M, K); codes (K, N[/2]); scale (1, N); rand (M, N) uint32. Returns
+    (codes1, codes2) int8 (M, N) and row scales (M, 1) f32 — the symmetric
+    int-grid DS pair of y.astype(out_dtype), with y never written to HBM.
+    N is unblocked (full-width accumulator row in VMEM); M and K must be
+    block multiples — ops.quant_dense_out_q is the padded entry point.
+    """
+    interpret = registry.resolve_interpret(interpret)
+    m, k = x.shape
+    k2, n = codes.shape
+    if packed:
+        n *= 2
+    assert k == k2, (x.shape, codes.shape)
+    assert scale.shape == (1, n) and rand.shape == (m, n)
+    bm = min(bm, m)
+    bk = min(bk, k)
+    pdiv = 2 if packed else 1
+    grid = (pl.cdiv(m, bm), pl.cdiv(k, bk))
+    out_block = pl.BlockSpec((bm, n), lambda i, kk: (i, 0))
+    c1, c2, oscale = pl.pallas_call(
+        functools.partial(_qmm_qout_kernel, packed=packed, qmax=qmax,
+                          out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, kk: (i, kk)),
+            pl.BlockSpec((bk, n // pdiv), lambda i, kk: (kk, 0)),
+            pl.BlockSpec((1, n), lambda i, kk: (0, 0)),
+            pl.BlockSpec((bm, n), lambda i, kk: (i, 0)),
+        ],
+        out_specs=[out_block, out_block,
+                   pl.BlockSpec((bm, 1), lambda i, kk: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((m, n), jnp.int8),
+                   jax.ShapeDtypeStruct((m, n), jnp.int8),
+                   jax.ShapeDtypeStruct((m, 1), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm, n), jnp.float32)],
+        interpret=interpret,
+    )(x, codes, scale, rand)
+    return c1, c2, oscale

@@ -37,6 +37,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import registry
+
 
 DEFAULT_BLOCK = (256, 512)
 
@@ -114,7 +116,7 @@ def _specs(br, bc):
                    static_argnames=("b1", "b2", "block", "interpret"))
 def qadamw_absmax(g, m_codes, m_scale, v_codes, v_scale, params, *,
                   b1: float, b2: float, block=DEFAULT_BLOCK,
-                  interpret: bool = True):
+                  interpret: bool | None = None):
     """g (R, C) f32; codes (R, C) int8; scales (1, C) f32; params (8,) f32.
     Returns per-row-block column absmaxes: (R/br, C) for new-m and new-√v."""
     r, c = g.shape
@@ -130,7 +132,7 @@ def qadamw_absmax(g, m_codes, m_scale, v_codes, v_scale, params, *,
         out_specs=[out_spec, out_spec],
         out_shape=[jax.ShapeDtypeStruct((grid[0], c), jnp.float32),
                    jax.ShapeDtypeStruct((grid[0], c), jnp.float32)],
-        interpret=interpret,
+        interpret=registry.resolve_interpret(interpret),
     )(g, m_codes, m_scale, v_codes, v_scale, params)
 
 
@@ -141,7 +143,7 @@ def qadamw_update(master, g, m_codes, m_scale, v_codes, v_scale,
                   m_scale_new, v_scale_new, rand, params, *,
                   b1: float, b2: float, eps: float, wd: float, qmax: int,
                   uclip: float = 0.0, block=DEFAULT_BLOCK,
-                  interpret: bool = True):
+                  interpret: bool | None = None):
     """The pass-2 fused update. master/g (R, C) f32; codes (R, C) int8;
     old/new scales (1, C) f32; rand (R, C) uint32; params (8,) f32.
     Returns (new_master f32, new_m_codes int8, new_v_codes int8)."""
@@ -160,6 +162,6 @@ def qadamw_update(master, g, m_codes, m_scale, v_codes, v_scale,
         out_shape=[jax.ShapeDtypeStruct((r, c), jnp.float32),
                    jax.ShapeDtypeStruct((r, c), jnp.int8),
                    jax.ShapeDtypeStruct((r, c), jnp.int8)],
-        interpret=interpret,
+        interpret=registry.resolve_interpret(interpret),
     )(master, g, m_codes, m_scale, v_codes, v_scale,
       m_scale_new, v_scale_new, rand, params)

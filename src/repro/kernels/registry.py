@@ -30,6 +30,43 @@ _BACKENDS: dict[str, "KernelBackend"] = {}
 _ACTIVE: str | None = None
 
 ENV_VAR = "ZIPML_KERNEL_BACKEND"
+INTERPRET_ENV = "ZIPML_PALLAS_INTERPRET"
+
+
+def interpret_default() -> bool:
+    """THE one place deciding Pallas interpret mode: real compile on TPU,
+    interpret elsewhere (CPU CI) or when ``ZIPML_PALLAS_INTERPRET=1`` forces
+    it. Kernel entry points default ``interpret=None`` and resolve here —
+    a caller can no longer silently run interpret-mode Pallas in a hot loop
+    because a default said ``True``."""
+    env = os.environ.get(INTERPRET_ENV)
+    if env is not None:
+        return env.lower() not in ("0", "false", "")
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` → :func:`interpret_default`; kernels call this at entry."""
+    return interpret_default() if interpret is None else interpret
+
+
+def matmul_eq(x_ndim: int, w_ndim: int, transpose: bool = False) -> str:
+    """The einsum equation of the ``quant_dense`` op family.
+
+    w: (*stack, K, N); x: (*lead, *stack, M, K) — the stack dims (e.g. the
+    MoE expert axis) ride on both operands, extra leading x dims broadcast.
+    ``transpose`` contracts against Wᵀ: x (*lead, *stack, M, N) → (..., K)
+    (the code-domain backward, and the tied-unembed forward).
+    """
+    s = w_ndim - 2
+    stack = "abcdefg"[:s]
+    if s and x_ndim < s + 2:
+        raise ValueError(f"x needs ≥ {s + 2} dims for {s} stack dims")
+    if s == 0:
+        return "...k,nk->...n" if transpose else "...k,kn->...n"
+    x_lbl = f"...{stack}mn" if transpose else f"...{stack}mk"
+    out = f"...{stack}mk" if transpose else f"...{stack}mn"
+    return f"{x_lbl},{stack}kn->{out}"
 
 
 class KernelBackend:
@@ -68,6 +105,37 @@ class KernelBackend:
     def qt_dot(self, qt, v):
         """decode(qt) @ v; backends may stream codes instead."""
         return qt.decode() @ v
+
+    def quant_dense(self, x, qt, *, transpose: bool = False):
+        """The quantized-matmul op family: y = x · decode(qt) (or · ᵀ) with
+        fp32 accumulation, f32 result (callers cast). The base implementation
+        is decode-then-einsum at bf16 — bit-exact with the pre-op model
+        numerics of ``layers.dense`` / ``moe`` — and handles every grid
+        (int / zipml / levels / packed int4) and stacked (*S, K, N) weights.
+        Backends may stream the codes instead of materializing the weight."""
+        w = qt.decode(jnp.bfloat16)
+        return jnp.einsum(matmul_eq(jnp.ndim(x), w.ndim, transpose), x, w,
+                          preferred_element_type=jnp.float32)
+
+    def quant_dense_out_q(self, x, qt, key, *, bits: int = 8,
+                          out_dtype=None):
+        """``quant_dense`` with a fused quantize epilogue: returns the §2.2
+        double-sampled row-scaled int-grid pair of the output activation as a
+        QTensor (codes + codes2 + (…, 1) row scales) instead of the dense y —
+        what a quantized activation consumer (precision/act_quant) stores.
+
+        Base implementation: einsum → cast to the activation dtype → the
+        reference ds_pair draw. The Pallas backend emits both code planes
+        straight from the fp32 accumulator tile in VMEM, so the full-width
+        activation never reaches HBM (kernels/qmm.qmm_qout)."""
+        from repro.quant.qtensor import ds_pair_jnp
+        from repro.quant.scheme import QScheme
+
+        dtype = out_dtype or (x.dtype if jnp.issubdtype(x.dtype, jnp.floating)
+                              else jnp.float32)
+        y = self.quant_dense(x, qt).astype(dtype)
+        scheme = QScheme.int_symmetric(bits, scaling="row", rounding="ds")
+        return ds_pair_jnp(y, scheme, key)
 
     def paged_attention(self, q, k_pages, v_pages, k_scale, v_scale,
                         block_table, seq_lens, *, softmax_scale):
@@ -293,6 +361,84 @@ class _PallasBackend(KernelBackend):
         return (nm.reshape(shape),
                 QTensor(mc.reshape(shape), msn, scheme),
                 QTensor(vc.reshape(shape), vsn, scheme))
+
+    # ------------------------------------------------- quant_dense family --
+    def _qd_plan(self, qt):
+        """Kernel-ready (codes, scale (*S, 1, N), packed) for the fused GEMM,
+        or None when the storage needs the decode fallback (level tables,
+        wide codes, per-row weight scales)."""
+        sch = qt.scheme
+        if sch.grid == "levels":
+            return None
+        packed = bool(sch.packed)
+        codes = qt.codes
+        if codes.dtype != (jnp.uint8 if packed else jnp.int8):
+            return None
+        stack = codes.shape[:-2]
+        n = codes.shape[-1] * (2 if packed else 1)
+        scale = jnp.asarray(qt.scale, jnp.float32)
+        shp = scale.shape
+        if shp in ((), (1,), (1, 1)):
+            scale = jnp.broadcast_to(scale.reshape((1,) * (len(stack) + 2)),
+                                     (*stack, 1, n))
+        elif shp == (n,):
+            scale = jnp.broadcast_to(scale.reshape(1, n), (*stack, 1, n))
+        elif shp != (*stack, 1, n):
+            return None
+        if sch.grid == "zipml":
+            scale = scale / sch.s
+        return codes, scale, packed
+
+    def quant_dense(self, x, qt, *, transpose: bool = False):
+        """Stream the code plane through the fused dequant-GEMM kernels
+        (kernels/qmm.qmm / qmm_t): int8 moves ~2× fewer HBM bytes than the
+        bf16 decode path, packed int4 ~4×. Stacked (S, K, N) weights (the MoE
+        expert axis) run one kernel launch per slice — S is small and
+        static."""
+        plan = self._qd_plan(qt)
+        if plan is None or qt.ndim > 3:
+            return KernelBackend.quant_dense(self, x, qt, transpose=transpose)
+        codes, scale, packed = plan
+        from repro.kernels import ops
+
+        if qt.ndim == 2:
+            return ops.quant_dense_apply(x, codes, scale, packed=packed,
+                                         transpose=transpose)
+        xs = jnp.moveaxis(x, x.ndim - 3, 0)       # stack dim sits at -3
+        outs = [ops.quant_dense_apply(xs[i], codes[i], scale[i],
+                                      packed=packed, transpose=transpose)
+                for i in range(codes.shape[0])]
+        return jnp.moveaxis(jnp.stack(outs), 0, x.ndim - 3)
+
+    def quant_dense_out_q(self, x, qt, key, *, bits: int = 8,
+                          out_dtype=None):
+        """Fused quantize epilogue (kernels/qmm.qmm_qout): the §2.2 DS pair
+        of the output is emitted from the fp32 accumulator tile in VMEM —
+        rounding bits from the hi/lo 16 bits of one uint32 plane, exactly
+        the kernels/stoch_quant.ds_quant convention (distribution-identical
+        to the ref backend's split-key draws, pinned by tests)."""
+        plan = self._qd_plan(qt)
+        if plan is None or qt.ndim != 2 or bits > 8:
+            return KernelBackend.quant_dense_out_q(self, x, qt, key,
+                                                   bits=bits,
+                                                   out_dtype=out_dtype)
+        codes, scale, packed = plan
+        from repro.kernels import ops
+        from repro.quant.qtensor import QTensor
+        from repro.quant.scheme import QScheme
+
+        dtype = out_dtype or (x.dtype if jnp.issubdtype(x.dtype, jnp.floating)
+                              else jnp.float32)
+        lead = x.shape[:-1]
+        n = codes.shape[-1] * (2 if packed else 1)
+        x2 = x.reshape(-1, x.shape[-1])
+        rand = jax.random.bits(key, (x2.shape[0], n), jnp.uint32)
+        c1, c2, oscale = ops.quant_dense_out_q(
+            x2, codes, scale, rand, qmax=2 ** (bits - 1) - 1, packed=packed,
+            out_dtype=dtype)
+        scheme = QScheme.int_symmetric(bits, scaling="row", rounding="ds")
+        return QTensor(c1.reshape(*lead, n), oscale.reshape(*lead, 1),
+                       scheme, codes2=c2.reshape(*lead, n))
 
     def qt_dot(self, qt, v):
         """Stream int8 codes through the qmv kernel when the scale factors

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import registry
+
 
 def _ssd_kernel(x_ref, dt_ref, ld_ref, b_ref, c_ref, y_ref, state_ref):
     c_idx = pl.program_id(1)
@@ -54,7 +56,7 @@ def _ssd_kernel(x_ref, dt_ref, ld_ref, b_ref, c_ref, y_ref, state_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def ssd_chunk_scan(xh, dt, logdec, bmat, cmat, *, interpret: bool = True):
+def ssd_chunk_scan(xh, dt, logdec, bmat, cmat, *, interpret: bool | None = None):
     """Chunked SSD over pre-chunked inputs.
 
     xh: (B, NC, L, H, P); dt/logdec: (B, NC, L, H); b/c: (B, NC, L, N).
@@ -82,6 +84,6 @@ def ssd_chunk_scan(xh, dt, logdec, bmat, cmat, *, interpret: bool = True):
             jax.ShapeDtypeStruct((b, nc, L, h, p), xh.dtype),
             jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=registry.resolve_interpret(interpret),
     )(xh, dt, logdec, bmat, cmat)
     return y, state

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import registry
+
 
 DEFAULT_BLOCK = (256, 512)
 
@@ -41,7 +43,7 @@ def _sq_kernel(x_ref, rand_ref, scale_ref, codes_ref, *, s: int):
 
 @functools.partial(jax.jit, static_argnames=("s", "block", "interpret"))
 def stoch_quant(x: jax.Array, rand: jax.Array, scale: jax.Array, *, s: int,
-                block=DEFAULT_BLOCK, interpret: bool = True):
+                block=DEFAULT_BLOCK, interpret: bool | None = None):
     """x: (R, C) f32/bf16; rand: (R, C) uint32; scale: (R, 1) f32 row scales.
     Returns int8 codes in [-s, s]. (interpret=True on CPU; False on real TPU.)
     """
@@ -59,7 +61,7 @@ def stoch_quant(x: jax.Array, rand: jax.Array, scale: jax.Array, *, s: int,
         ],
         out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((r, c), jnp.int8),
-        interpret=interpret,
+        interpret=registry.resolve_interpret(interpret),
     )(x, rand, scale)
 
 
@@ -87,7 +89,7 @@ def _ds_quant_kernel(x_ref, rand_ref, scale_ref, c1_ref, c2_ref, *, s: int):
 
 @functools.partial(jax.jit, static_argnames=("s", "scale_axis", "block", "interpret"))
 def ds_quant(x: jax.Array, rand: jax.Array, scale: jax.Array, *, s: int,
-             scale_axis: str = "row", block=DEFAULT_BLOCK, interpret: bool = True):
+             scale_axis: str = "row", block=DEFAULT_BLOCK, interpret: bool | None = None):
     """Fused double-sampling quantization (the ZipML §2.2 hot path).
 
     x: (R, C) f32/bf16; rand: (R, C) uint32 (one plane feeds both draws);
@@ -119,7 +121,7 @@ def ds_quant(x: jax.Array, rand: jax.Array, scale: jax.Array, *, s: int,
         out_specs=[out_spec, out_spec],
         out_shape=[jax.ShapeDtypeStruct((r, c), jnp.int8),
                    jax.ShapeDtypeStruct((r, c), jnp.int8)],
-        interpret=interpret,
+        interpret=registry.resolve_interpret(interpret),
     )(x, rand, scale)
 
 
@@ -132,7 +134,7 @@ def _absmax_kernel(x_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def row_absmax(x: jax.Array, *, block=DEFAULT_BLOCK, interpret: bool = True):
+def row_absmax(x: jax.Array, *, block=DEFAULT_BLOCK, interpret: bool | None = None):
     """(R, C) → (R, 1) f32 row scales M(v) = max|v| (the paper's linf row
     scaling; grid dim 1 iterates sequentially so the max accumulates)."""
     r, c = x.shape
@@ -150,6 +152,6 @@ def row_absmax(x: jax.Array, *, block=DEFAULT_BLOCK, interpret: bool = True):
         in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((br, 1), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((r, ncb), jnp.float32),
-        interpret=interpret,
+        interpret=registry.resolve_interpret(interpret),
     )(x)
     return jnp.max(per_block, axis=1, keepdims=True)

@@ -62,7 +62,7 @@ def param_spec(path, leaf) -> P:
 
     if name == "table":                       # (V, d): vocab-parallel
         return P("model", None)
-    if name in ("w", "w_q"):
+    if name == "w":
         if ndim < 2 or np.prod(leaf.shape) < MIN_SHARD_ELEMS or parent in _REPLICATE:
             return P(*([None] * ndim))
         if parent in _OUT_PROJ:

@@ -108,9 +108,15 @@ def chunked_attention(q, k, v, spec: AttnSpec, *, positions=None,
     b, s, h, d = q.shape
     kf, vf = k, v
     cq = min(spec.q_chunk, s)
-    if s % cq:
-        cq = s  # fall back to single block for odd lengths (smoke tests)
-    n_blocks = s // cq
+    # pad the query tail to a block multiple instead of collapsing to one
+    # block — the old `cq = s` fallback silently disabled chunking (and its
+    # O(S·W) memory bound) for ANY length not divisible by q_chunk. Padded
+    # query rows attend causally to real keys only (their positions are
+    # ≥ every real k_pos, so no mask row is empty) and are sliced off.
+    s_pad = -(-s // cq) * cq
+    if s_pad != s:
+        q = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    n_blocks = s_pad // cq
     windowed = causal and spec.window > 0 and spec.window < s
     kv_span = min(spec.window + cq, s) if windowed else s
 
@@ -150,7 +156,8 @@ def chunked_attention(q, k, v, spec: AttnSpec, *, positions=None,
                           for i in range(n_blocks)])
     else:
         _, outs = jax.lax.scan(body, None, xs)
-    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s_pad, h, d)
+    return out[:, :s] if s_pad != s else out
 
 
 def decode_attention(q, k_cache, v_cache, spec: AttnSpec, *, kv_len) -> jax.Array:

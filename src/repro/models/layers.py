@@ -12,9 +12,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.quant import QTensor
+from repro.quant import QTensor, ShipWeight, quant_dense
 
 Params = dict
+
+_SPLICE_ERROR = (
+    "the spliced weight formats (w_q+w_scale / w_lvl_codes+w_levels) were "
+    "removed after their one-release compatibility window; run the param "
+    "tree through repro.precision.qat.migrate_spliced_weights(params) once "
+    "(decode-identical QTensor at the 'w' key), or re-quantize the bf16 "
+    "masters with precision.qat.quantize_param_tree")
 
 
 def _as_dtype(x, dtype):
@@ -36,27 +43,26 @@ def init_dense(key, d_in: int, d_out: int, *, bias: bool = False,
 
 
 def dense(p: Params, x: jax.Array) -> jax.Array:
-    """Matmul supporting two weight storages:
+    """Matmul supporting three weight storages:
 
-    * ``w``: bf16/fp32 dense weight.
-    * ``w``: a :class:`repro.quant.QTensor` (ZipML C1/C5 storage: int8 codes
-      + per-output-channel fp32 scale, or C4 level-table codes) — dequantized
-      on the fly; XLA fuses the dequant into the matmul operand read, so HBM
-      traffic is the code bytes (``QTensor.nbytes``).
-
-    The pre-QTensor spliced forms (``w_q``+``w_scale`` / ``w_lvl_codes``+
-    ``w_levels``) are still read for one release.
+    * ``w``: bf16/fp32 dense weight — the plain einsum path, untouched.
+    * ``w``: a :class:`repro.quant.QTensor` (ZipML C1/C5 storage: int8 or
+      packed-int4 codes + fp32 scales, or C4 level-table codes) — routed
+      through the ``quant_dense`` registry op: the ref backend is the exact
+      decode-then-einsum numerics, the Pallas backend streams the code bytes
+      HBM→VMEM (``QTensor.nbytes`` of traffic) and keeps the backward in the
+      code domain.
+    * ``w``: a :class:`repro.quant.ShipWeight` (quantize-on-gather training
+      form) — same streaming matmul, straight-through gradient to the master.
     """
-    if "w_q" in p:          # deprecated splice format
-        w = (p["w_q"].astype(jnp.bfloat16) * p["w_scale"].astype(jnp.bfloat16))
-    elif "w_lvl_codes" in p:  # deprecated splice format
-        w = jnp.take(p["w_levels"], p["w_lvl_codes"].astype(jnp.int32)).astype(jnp.bfloat16)
+    if "w_q" in p or "w_lvl_codes" in p:
+        raise ValueError(_SPLICE_ERROR)
+    w = p["w"]
+    if isinstance(w, (QTensor, ShipWeight)):
+        y = quant_dense(x, w).astype(x.dtype)
     else:
-        w = p["w"]
-        if isinstance(w, QTensor):
-            w = w.decode(jnp.bfloat16)
-    y = jnp.einsum("...i,io->...o", x, w,
-                   preferred_element_type=jnp.float32).astype(x.dtype)
+        y = jnp.einsum("...i,io->...o", x, w,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y
@@ -69,12 +75,33 @@ def init_embedding(key, vocab: int, d_model: int, dtype=jnp.bfloat16) -> Params:
 
 
 def embed(p: Params, ids: jax.Array) -> jax.Array:
-    return jnp.take(p["table"], ids, axis=0)
+    table = p["table"]
+    if isinstance(table, QTensor):
+        # gather the CODE rows first, decode only the gathered handful —
+        # decoding the whole (V, d) table per step would materialize a full
+        # bf16 vocab table just to read a few rows. Falls back to a full
+        # decode only when the scale/level tables themselves carry the
+        # vocab dim (no such scheme is produced by quantize_param_tree).
+        vdim = table.shape[0]
+        scale_rowed = jnp.ndim(table.scale) > 0 and \
+            table.scale.shape[0] == vdim
+        levels_rowed = table.levels is not None and table.levels.ndim > 1
+        if scale_rowed or levels_rowed:
+            return jnp.take(table.decode(jnp.bfloat16), ids, axis=0)
+        rows = QTensor(jnp.take(table.codes, ids, axis=0), table.scale,
+                       table.scheme, levels=table.levels)
+        return rows.decode(jnp.bfloat16)
+    return jnp.take(table, ids, axis=0)
 
 
 def unembed(p: Params, x: jax.Array) -> jax.Array:
-    """Tied readout: logits = x @ tableᵀ (vocab-parallel under TP)."""
-    return jnp.einsum("...d,vd->...v", x, p["table"],
+    """Tied readout: logits = x @ tableᵀ (vocab-parallel under TP). A
+    QTensor table streams its codes through the transpose kernel of the
+    ``quant_dense`` op family."""
+    table = p["table"]
+    if isinstance(table, (QTensor, ShipWeight)):
+        return quant_dense(x, table, transpose=True)
+    return jnp.einsum("...d,vd->...v", x, table,
                       preferred_element_type=jnp.float32)
 
 

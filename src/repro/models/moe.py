@@ -28,7 +28,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .layers import Params, init_dense, shard_hint
+from repro.quant import QTensor, ShipWeight, quant_dense
+
+from .layers import _SPLICE_ERROR, Params, init_dense, shard_hint
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -65,19 +67,32 @@ def _ge_bwd(eq, res, g):
 _gexpert_einsum.defvjp(_ge_fwd, _ge_bwd)
 
 
-def _wmat(sub: Params) -> jax.Array:
-    """Expert weight matrix supporting ZipML QTensor storage (int8 codes +
-    scales, or C4 level tables); the pre-QTensor splice format (w_q+w_scale)
-    stays readable for one release."""
-    from repro.quant import QTensor
-
-    if "w_q" in sub:          # deprecated splice format
-        return (sub["w_q"].astype(jnp.bfloat16)
-                * sub["w_scale"].astype(jnp.bfloat16))
+def _qeinsum(eq: str, x: jax.Array, sub: Params) -> jax.Array:
+    """Expert/router matmul dispatching on the weight storage: QTensor /
+    ShipWeight route through the ``quant_dense`` registry op (ref backend =
+    exact decode-then-einsum numerics; Pallas streams int8 / packed-int4
+    codes with the code-domain backward), dense weights keep the plain
+    einsum. All MoE contractions are of quant_dense's canonical form
+    (x (*lead, *stack, M, K) · w (*stack, K, N)), so ``eq`` only drives the
+    dense path."""
+    if "w_q" in sub or "w_lvl_codes" in sub:
+        raise ValueError(_SPLICE_ERROR)
     w = sub["w"]
-    if isinstance(w, QTensor):
-        return w.decode(jnp.bfloat16)
-    return w
+    if isinstance(w, (QTensor, ShipWeight)):
+        return quant_dense(x, w)
+    return jnp.einsum(eq, x, w, preferred_element_type=jnp.float32)
+
+
+def _gq_einsum(eq: str, x: jax.Array, sub: Params) -> jax.Array:
+    """The grouped-dispatch variant of :func:`_qeinsum`: the dense-weight
+    path keeps ``_gexpert_einsum``'s custom VJP (bf16 dW emission on the
+    cross-device all-reduce); quantized storages go through quant_dense."""
+    if "w_q" in sub or "w_lvl_codes" in sub:
+        raise ValueError(_SPLICE_ERROR)
+    w = sub["w"]
+    if isinstance(w, (QTensor, ShipWeight)):
+        return quant_dense(x, w)
+    return _gexpert_einsum(eq, x, w)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,9 +124,13 @@ def init_moe(key, spec: MoESpec, dtype=jnp.bfloat16) -> Params:
 def _router_probs(p: Params, x: jax.Array, spec: MoESpec):
     # bf16 operands + f32 accumulation: an x.astype(f32) here would materialize
     # a full-token fp32 copy (and its cotangent) per MoE layer
-    logits = jnp.einsum("...d,de->...e", x,
-                        _wmat(p["router"]).astype(x.dtype),
-                        preferred_element_type=jnp.float32)
+    if isinstance(p["router"].get("w"), (QTensor, ShipWeight)) \
+            or "w_q" in p["router"] or "w_lvl_codes" in p["router"]:
+        logits = _qeinsum("...d,de->...e", x, p["router"])
+    else:
+        logits = jnp.einsum("...d,de->...e", x,
+                            p["router"]["w"].astype(x.dtype),
+                            preferred_element_type=jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
     top_p, top_i = jax.lax.top_k(probs, spec.top_k)
     top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
@@ -120,13 +139,10 @@ def _router_probs(p: Params, x: jax.Array, spec: MoESpec):
 
 def _expert_ffn(p: Params, h: jax.Array, spec: MoESpec) -> jax.Array:
     """h: (E, C, d) → (E, C, d). Batched gated MLP over the expert dim."""
-    g = jnp.einsum("ecd,edf->ecf", h, _wmat(p["gate"]),
-                   preferred_element_type=jnp.float32).astype(h.dtype)
-    u = jnp.einsum("ecd,edf->ecf", h, _wmat(p["up"]),
-                   preferred_element_type=jnp.float32).astype(h.dtype)
+    g = _qeinsum("ecd,edf->ecf", h, p["gate"]).astype(h.dtype)
+    u = _qeinsum("ecd,edf->ecf", h, p["up"]).astype(h.dtype)
     a = jax.nn.silu(g) if spec.act == "silu" else jax.nn.gelu(g, approximate=True)
-    return jnp.einsum("ecf,efd->ecd", a * u, _wmat(p["down"]),
-                      preferred_element_type=jnp.float32).astype(h.dtype)
+    return _qeinsum("ecf,efd->ecd", a * u, p["down"]).astype(h.dtype)
 
 
 def moe_dense(p: Params, x: jax.Array, spec: MoESpec) -> jax.Array:
@@ -193,13 +209,10 @@ def moe_dispatch_grouped(p: Params, xg: jax.Array, spec: MoESpec) -> jax.Array:
     # cotangents of these (G, E, cap, ·) tensors are the MoE's peak residents
     expert_in = hint(buf[:, : e * cap].reshape(g, e, cap, d), None, "model", None)
     # batched gated MLP over (G, E): d_ff stays TP-sharded over 'model'
-    up = _gexpert_einsum("gecd,edf->gecf", expert_in,
-                         _wmat(p["up"])).astype(xg.dtype)
-    gate = _gexpert_einsum("gecd,edf->gecf", expert_in,
-                           _wmat(p["gate"])).astype(xg.dtype)
+    up = _gq_einsum("gecd,edf->gecf", expert_in, p["up"]).astype(xg.dtype)
+    gate = _gq_einsum("gecd,edf->gecf", expert_in, p["gate"]).astype(xg.dtype)
     act = jax.nn.silu(gate) if spec.act == "silu" else jax.nn.gelu(gate, approximate=True)
-    out = _gexpert_einsum("gecf,efd->gecd", act * up,
-                          _wmat(p["down"])).astype(xg.dtype)
+    out = _gq_einsum("gecf,efd->gecd", act * up, p["down"]).astype(xg.dtype)
     out = hint(out, None, "model", None)
     out_flat = jnp.concatenate(
         [out.reshape(g, e * cap, d), jnp.zeros((g, 1, d), xg.dtype)], axis=1)
@@ -213,7 +226,10 @@ def moe_dispatch_grouped(p: Params, xg: jax.Array, spec: MoESpec) -> jax.Array:
 
 
 def _mesh_axis_sizes(axes: tuple) -> int | None:
-    am = jax.sharding.get_abstract_mesh()
+    try:
+        am = jax.sharding.get_abstract_mesh()   # jax>=0.4.35 only
+    except AttributeError:
+        return None
     if am is None or not am.shape:
         return None
     sizes = dict(am.shape)

@@ -84,3 +84,31 @@ def ds_mlp(p, x, key, act: str = "silu", bits: int = 8):
     hu = ds_dense(x, p["up"]["w"], k2, bits)
     a = jax.nn.silu(hg) if act == "silu" else jax.nn.gelu(hg, approximate=True)
     return ds_dense(a * hu, p["down"]["w"], k3, bits)
+
+
+def ds_project(x, w, key, bits: int = 8, backend: str | None = None):
+    """Projection with the fused quantize epilogue: y = x·W is emitted
+    directly as its §2.2 double-sampled row-quantized pair — one QTensor
+    holding both int8 code planes + (…, 1) row scales — instead of a dense
+    activation. This is the matmul-output mirror of the PR-1 ds_quant
+    fusion: on the Pallas backend the codes come straight off the fp32
+    accumulator tile in VMEM (kernels/qmm.qmm_qout), so the full-width
+    activation write *and* its quantize-pass re-read both disappear; the
+    ref backend is einsum → cast → ds_pair, the exact unfused numerics.
+
+    ``w`` may be a dense array, a QTensor (int storage: the forward also
+    streams weight codes), or a ShipWeight. Forward-only — the consumer of
+    the pair owns the backward (e.g. ``ds_dense``'s VJP contracts the Q₂
+    plane). Decode Q₁ via ``.decode(dtype)``, Q₂ via ``.decode2(dtype)``.
+
+    Integration status: this is the exposed consumer of the epilogue (plus
+    ``benchmarks/bench_qmm.py``, which pins the byte saving from the op
+    I/O signatures). ``ds_mlp``'s own matmul outputs pass through
+    silu/multiply before the next quantize, so the gated-MLP block has no
+    direct matmul→quantize edge to fuse — wiring the epilogue into a model
+    block needs an architecture with back-to-back quantized projections
+    (or a fused gate+up+act kernel), which is future work.
+    """
+    from repro.quant import quant_dense_q
+
+    return quant_dense_q(x, w, key, bits=bits, backend=backend)

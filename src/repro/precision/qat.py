@@ -21,15 +21,13 @@ the former inline ``_int_quantize_weight`` copy is gone.
 """
 from __future__ import annotations
 
-import functools
-
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro import quant
 from repro.core import optimal as opt_mod
-from repro.quant import QScheme, QTensor
+from repro.quant import QScheme, QTensor, ShipWeight
 
 
 def _is_weight(path: tuple) -> bool:
@@ -39,11 +37,22 @@ def _is_weight(path: tuple) -> bool:
     # would dominate; tables are a small share of weight bytes here)
 
 
-def _weight_scheme(bits: int, rounding: str = "nearest") -> QScheme:
+def _weight_scheme(bits: int, rounding: str = "nearest",
+                   packed: bool = False) -> QScheme:
     """Per-out-channel symmetric int grid: w is (..., d_in, d_out) → the
-    absmax reduces over d_in (axis -2)."""
+    absmax reduces over d_in (axis -2). ``packed`` nibble-packs 4-bit codes
+    (two per byte — same values, half the storage/HBM bytes)."""
     return QScheme.int_symmetric(bits, scaling="channel", rounding=rounding,
-                                 channel_axis=-2)
+                                 channel_axis=-2, packed=packed)
+
+
+def _auto_packed(bits: int, w: jax.Array, packed: bool | None) -> bool:
+    """int4 codes pack by default whenever the out-channel dim is even —
+    value-identical to the unpacked grid (offset-binary nibbles round-trip
+    exactly), so decode numerics are unchanged; only the bytes halve."""
+    if packed is not None:
+        return packed
+    return bits == 4 and w.shape[-1] % 2 == 0
 
 
 def _optimal_quantize_weight(w: jax.Array, bits: int, sample: int = 65536) -> QTensor:
@@ -74,15 +83,61 @@ def _optimal_quantize_weight(w: jax.Array, bits: int, sample: int = 65536) -> QT
     return QTensor(qt.codes.astype(jnp.int16), scale, qt.scheme, levels=levels)
 
 
-def quantize_param_tree(params, bits: int = 8, optimal: bool = False):
-    """Convert every matmul weight to QTensor storage (see layers.dense)."""
+def migrate_spliced_weights(params, bits: int = 8):
+    """One-shot migration of the REMOVED pre-QTensor spliced weight dicts
+    (``w_q``+``w_scale`` int splices, ``w_lvl_codes``+``w_levels`` level
+    splices) to a :class:`repro.quant.QTensor` at the ``"w"`` key — the
+    storage ``layers.dense``/``moe`` consume. Decode numerics are identical
+    (codes ⊙ scale / table lookup); dim-less level tables next to stacked
+    codes get the PR-2 broadcast-per-layer layout so ``lax.scan`` accepts
+    them. ``bits`` only labels the int scheme for byte accounting.
+
+    Splice keys are consumed via ``dict.pop`` — model code reading them is
+    banned by the api-surface grep; this migration shim is the one legal
+    consumer."""
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return node
+        node = {k: fix(v) for k, v in node.items()}
+        if "w_q" in node:
+            codes = node.pop("w_q")
+            scale = jnp.asarray(node.pop("w_scale"), jnp.float32)
+            node["w"] = QTensor(codes, scale, _weight_scheme(bits))
+        elif "w_lvl_codes" in node:
+            codes = node.pop("w_lvl_codes")
+            levels = jnp.asarray(node.pop("w_levels"), jnp.float32)
+            lead = codes.shape[:-2]
+            if lead and levels.ndim == 1:
+                levels = jnp.broadcast_to(levels, (*lead, levels.shape[0]))
+            node["w"] = QTensor(codes, jnp.ones(lead, jnp.float32),
+                                QScheme.levels(int(levels.shape[-1])),
+                                levels=levels)
+        return node
+
+    return fix(params)
+
+
+def quantize_param_tree(params, bits: int = 8, optimal: bool = False,
+                        packed: bool | None = None,
+                        include_embedding: bool = False):
+    """Convert every matmul weight to QTensor storage (see layers.dense).
+
+    ``packed=None`` auto-packs 4-bit codes (two nibbles per byte) whenever
+    the out-channel dim is even — decode values are identical, HBM bytes
+    halve again. ``include_embedding`` also quantizes embedding tables
+    (``table`` leaves) — the tied unembed then streams codes through the
+    transpose kernel; ``embed``'s gather decodes row-wise."""
 
     def convert(path, leaf):
-        if not _is_weight(path) or leaf.ndim < 2:
+        last = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        is_table = include_embedding and last == "table"
+        if not (_is_weight(path) or is_table) or leaf.ndim < 2:
             return leaf
-        if optimal:
+        if optimal and not is_table:
             return _optimal_quantize_weight(leaf, bits)
-        return quant.encode(leaf, _weight_scheme(bits))
+        return quant.encode(
+            leaf, _weight_scheme(bits, packed=_auto_packed(bits, leaf, packed)))
 
     return jax.tree_util.tree_map_with_path(convert, params)
 
@@ -138,42 +193,30 @@ def fake_quant_tree(params, bits: int, key=None):
 # C3 Q_m — "ship quantized": int8 codes through the FSDP all-gather
 # ---------------------------------------------------------------------------
 
-def _ship_quant_impl(w, bits: int, spec):
+def ship_quant(w, bits: int, spec=None, packed: bool | None = None) -> ShipWeight:
     """Quantize per-shard, force the codes replicated (→ the all-gather moves
-    int8), dequantize locally. The wire format of the model channel drops
+    int8/packed-int4), and return a :class:`repro.quant.ShipWeight` — the
+    codes feed the ``quant_dense`` streaming matmul (no local dequantized
+    full-width weight exists), the master rides along for the
+    straight-through gradient. The wire format of the model channel drops
     4×/8× vs f32/bf16 — the paper's Q_m applied to the FSDP weight gather.
 
     Both sides of the reshard are pinned: codes constrained to the weight's
     own sharding first (compute stays local), then to replicated (the gather
-    happens on the int8 tensor, not on the f32-legalized weight).
+    happens on the int tensor, not on the f32-legalized weight).
     """
     from jax.sharding import PartitionSpec as P
     from repro.models.layers import shard_hint
-    qt = quant.encode(w, _weight_scheme(bits))
+    scheme = _weight_scheme(bits, packed=_auto_packed(bits, w, packed))
+    qt = quant.encode(jax.lax.stop_gradient(w), scheme)
     codes, scale = qt.codes, qt.scale
     if spec is not None:
         codes = shard_hint(codes, spec)               # pin: local quantize
     codes = jax.lax.optimization_barrier(codes)
     rep = P(*([None] * w.ndim))
-    codes = shard_hint(codes, rep)                    # pin: int8 all-gather
+    codes = shard_hint(codes, rep)                    # pin: int all-gather
     scale = shard_hint(scale, rep)
-    return (codes.astype(jnp.bfloat16) * scale.astype(jnp.bfloat16)).astype(w.dtype)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
-def ship_quant(w, bits: int, spec=None):
-    return _ship_quant_impl(w, bits, spec)
-
-
-def _sq_fwd(w, bits, spec):
-    return _ship_quant_impl(w, bits, spec), None
-
-
-def _sq_bwd(bits, spec, _, g):
-    return (g,)   # STE: the master weight sees the full gradient
-
-
-ship_quant.defvjp(_sq_fwd, _sq_bwd)
+    return ShipWeight(w, QTensor(codes, scale, scheme))
 
 
 def ship_quant_tree(params, bits: int, min_size: int = 1 << 16):

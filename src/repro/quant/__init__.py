@@ -24,18 +24,22 @@ from .qtensor import (
     tree_nbytes,
     unpack_int4,
 )
+from .quant_dense import ShipWeight, quant_dense, quant_dense_q
 from .scheme import QScheme
 
 __all__ = [
     "PrecisionPlan",
     "QScheme",
     "QTensor",
+    "ShipWeight",
     "compute_scale",
     "decode",
     "dot",
     "ds_pair",
     "encode",
     "pack_int4",
+    "quant_dense",
+    "quant_dense_q",
     "quantize_to_levels_jnp",
     "tree_nbytes",
     "unpack_int4",

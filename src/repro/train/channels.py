@@ -86,12 +86,14 @@ class ModelChannel(Channel):
     """Q_m — weight quantization inside the loss.
 
     ``model_storage='fake'``: QAT straight-through fake quantization (weights
-    stay bf16 at rest). ``'ship'``: quantize-on-gather — int8 codes move
-    through the FSDP all-gather, including over scanned stacked layer params
-    (the per-out-channel scheme reduces over d_in only, so stacked (L, d_in,
-    d_out) weights get per-layer (L, 1, d_out) scales that broadcast exactly
-    like PR 2's stacked level tables). ``'int'`` is the at-rest serving
-    format and does not apply inside a train step.
+    stay bf16 at rest). ``'ship'``: quantize-on-gather — int8 (or packed
+    int4) codes move through the FSDP all-gather as
+    :class:`repro.quant.ShipWeight` leaves, the model matmuls stream the
+    codes through the ``quant_dense`` registry op (no local full-width
+    dequantized weight exists), and the straight-through gradient flows to
+    the master; works over scanned stacked layer params (per-layer
+    (L, 1, d_out) channel scales). ``'int'`` is the at-rest serving format
+    and does not apply inside a train step.
     """
 
     name = "model"

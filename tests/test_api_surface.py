@@ -24,9 +24,10 @@ SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src", "repro")
 class TestPublicExports:
     def test_quant_all(self):
         assert set(quant.__all__) == {
-            "PrecisionPlan", "QScheme", "QTensor", "compute_scale", "decode",
-            "dot", "ds_pair", "encode", "pack_int4", "quantize_to_levels_jnp",
-            "tree_nbytes", "unpack_int4",
+            "PrecisionPlan", "QScheme", "QTensor", "ShipWeight",
+            "compute_scale", "decode", "dot", "ds_pair", "encode",
+            "pack_int4", "quant_dense", "quant_dense_q",
+            "quantize_to_levels_jnp", "tree_nbytes", "unpack_int4",
         }
         for name in quant.__all__:
             assert hasattr(quant, name), name
@@ -128,6 +129,13 @@ class TestNoSurvivingCopies:
         r"class IntTensor\(NamedTuple\)",
         r"class CompressedLeaf\(NamedTuple\)",
         r"class MomentQ\(NamedTuple\)",       # optim's private codes+scale
+        # the spliced weight dict formats are gone (error raised on sight);
+        # nothing may read or write the keys except the error-path checks
+        r"""\[(['"])w_q\1\]\s*=""",
+        r"""\[(['"])w_lvl_codes\1\]""",
+        r"""\[(['"])w_scale\1\]""",
+        r"""\[(['"])w_levels\1\]""",
+        r"""\.astype\(jnp\.bfloat16\)\s*\*\s*\w+\[(['"])w_scale""",
     ]
     # the single blessed home of the rounding-mode implementations
     ALLOWED_ROUNDING_HOME = os.path.join("quant", "qtensor.py")

@@ -79,6 +79,36 @@ class TestQTensorSharding:
             np.asarray((qt.decode() + qt.decode2()) / 2), rtol=1e-6)
 
 
+class TestPackedQuantDense:
+    def test_packed_int4_code_plane_shards_and_matmuls(self):
+        """A nibble-packed int4 weight plane shards 8-way over its (even)
+        packed out-channel dim; quant_dense over the sharded QTensor equals
+        the single-device f32 decode path (both backends)."""
+        from repro.quant import quant_dense
+
+        mesh = _mesh("model")
+        w = jax.random.normal(KEY, (32, 128)) * 0.1
+        qt = quant.encode(w, QScheme.int_symmetric(
+            4, scaling="channel", channel_axis=-2, rounding="nearest",
+            packed=True))
+        assert qt.codes.dtype == jnp.uint8 and qt.codes.shape == (32, 64)
+        spec = jax.tree.unflatten(
+            jax.tree.structure(qt), [P(None, "model"), P(None, "model")])
+        qs = jax.device_put(qt, jax.tree.map(
+            lambda s: NamedSharding(mesh, s), spec,
+            is_leaf=lambda s: isinstance(s, P)))
+        assert len({s.device for s in qs.codes.addressable_shards}) == 8
+        x = jax.random.normal(KEY, (16, 32)).astype(jnp.bfloat16)
+        want = jnp.einsum("mk,kn->mn", x.astype(jnp.float32), qt.decode())
+        with mesh:
+            for be in ("ref", "pallas"):
+                got = jax.jit(
+                    lambda x, q: quant_dense(x, q, backend=be))(x, qs)
+                np.testing.assert_allclose(
+                    np.asarray(got), np.asarray(want), atol=1e-4,
+                    rtol=5e-3 if be == "ref" else 1e-5)
+
+
 class TestCompressedPsum:
     def test_mean_of_quantized_members_8way(self):
         """The C3 compressed all-reduce over a real 8-member axis equals the
