@@ -175,9 +175,30 @@ def run(quick: bool = False):
         quant_dense(x, qt8, backend="pallas")), reps)
     t_p4 = _time(lambda: jax.block_until_ready(
         quant_dense(x, qt4, backend="pallas")), reps)
-    rows.append({"case": "wallclock", "ms_ref_decode": round(t_ref, 2),
-                 "ms_pallas_int8": round(t_p8, 2),
-                 "ms_pallas_int4": round(t_p4, 2)})
+    wall = {"case": "wallclock", "ms_ref_decode": round(t_ref, 2),
+            "ms_pallas_int8": round(t_p8, 2),
+            "ms_pallas_int4": round(t_p4, 2)}
+    rows.append(wall)
+
+    # -- roofline: measured peaks + per-(op, dtype, bucket) autotune rows ---
+    # peaks come from the ERT-style probe (repro/perf/probe.py), cached per
+    # hardware fingerprint; tune() sweeps block shapes for every Pallas
+    # kernel, persists winners to the autotune cache, and annotates each row
+    # with bytes-moved / achieved GB/s / fraction-of-roofline. The
+    # `autotune_no_worse` booleans become CHECKs: the hand-picked default is
+    # always candidate 0 of the same sweep, so the winner can't lose to it.
+    from repro import perf
+    peaks = perf.get_peaks(smoke=quick)
+    # int8 forward stream: x (bf16) + codes + scales in, f32 y out
+    perf.annotate_row(wall, bytes_moved=2 * m * k + k * n + 4 * n + 4 * m * n,
+                      ms=t_p8, peaks=peaks)
+    rows.append({"case": "roofline_peaks", "fingerprint": peaks["key"],
+                 "peak_gbps": peaks["peak_gbps"],
+                 "peak_gflops": peaks["peak_gflops"],
+                 # a string, not a bool: probe mode must never become a
+                 # gated CHECK (a cached full probe would flip it)
+                 "probe_mode": "smoke" if peaks["smoke"] else "full"})
+    rows.extend(perf.tune(smoke=quick, peaks=peaks))
     return rows
 
 

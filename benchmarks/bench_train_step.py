@@ -176,11 +176,17 @@ def run(quick: bool = False):
     t_fused = _time(lambda: jax.block_until_ready(
         registry.get("pallas").quant_adamw_update(
             master, g, m_q, m_q, km, kv, **kw)[0]), reps)
-    rows.append({"case": "opt_sweep", "bits": 8, "n_params": n,
-                 "fused_bytes": fused_b, "unfused_bytes": unfused_b,
-                 "bytes_saved_ratio": round(unfused_b / fused_b, 2),
-                 "ms_jnp": round(t_ref, 2), "ms_fused_interpret": round(t_fused, 2),
-                 "fused_bytes_lt_unfused": bool(fused_b < unfused_b)})
+    opt_row = {"case": "opt_sweep", "bits": 8, "n_params": n,
+               "fused_bytes": fused_b, "unfused_bytes": unfused_b,
+               "bytes_saved_ratio": round(unfused_b / fused_b, 2),
+               "ms_jnp": round(t_ref, 2), "ms_fused_interpret": round(t_fused, 2),
+               "fused_bytes_lt_unfused": bool(fused_b < unfused_b)}
+    # roofline annotation: HBM bytes of the timed fused call (the (r, c)
+    # sweep, not the n-param model above) over the measured machine peak
+    from repro import perf
+    perf.annotate_row(opt_row, bytes_moved=opt_sweep_bytes(r * c, 8, fused=True),
+                      ms=t_fused)
+    rows.append(opt_row)
     # fp32-vs-int8 resident moments (the dry-run line item)
     rows.append({"case": "moment_resident", "n_params": n,
                  "int8_bytes": 2 * n, "fp32_bytes": 8 * n,

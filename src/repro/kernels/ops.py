@@ -71,22 +71,18 @@ def ds_quantize(x: jax.Array, s: int, key: jax.Array,
     return c1, c2, scale
 
 
-def _block_fit(dim: int, want: int) -> int:
-    """Largest of (want, 128) that divides a 128-multiple ``dim`` exactly —
-    partial blocks on a *contraction* axis read out of bounds and fold garbage
-    into valid outputs, so every grid axis must tile its dim exactly."""
-    return want if dim % want == 0 else 128
-
-
 def int8_matvec(codes: jax.Array, v: jax.Array) -> jax.Array:
     """General r = codes · v for int8 (R, C) codes and f32 (C,) v; pads both
-    dims to block multiples (zero padding is exact for the dot) and slices."""
+    dims to 128 multiples (zero padding is exact for the dot) and slices.
+    Block shapes resolve inside the kernel (registry.resolve_block: autotune
+    cache → hand-picked default, fitted so every grid axis tiles exactly —
+    partial blocks on a contraction axis would fold garbage into outputs).
+    """
     r0, c0 = codes.shape
     codes, _ = _pad_to(codes, 128, 0)
     codes, _ = _pad_to(codes, 128, 1)
     v2, _ = _pad_to(v.reshape(-1, 1).astype(jnp.float32), 128, 0)
-    r, c = codes.shape
-    out = qmm_mod.qmv(codes, v2, br=_block_fit(r, 256), bc=_block_fit(c, 512))
+    out = qmm_mod.qmv(codes, v2)
     return out[:r0, 0]
 
 
@@ -119,10 +115,7 @@ def quantized_matmul(x: jax.Array, codes: jax.Array, scale: jax.Array) -> jax.Ar
     codes, _ = _pad_to(codes, 128, 0)
     codes, _ = _pad_to(codes, 128, 1)
     scale, _ = _pad_to(scale, 128, 1)
-    m, k = x.shape
-    _, n = codes.shape
-    y = qmm_mod.qmm(x, codes, scale, bm=_block_fit(m, 256),
-                    bk=_block_fit(k, 512), bn=_block_fit(n, 256))
+    y = qmm_mod.qmm(x, codes, scale)
     return y[:m0, :n0]
 
 
@@ -148,16 +141,10 @@ def quant_dense_apply(x: jax.Array, codes: jax.Array, scale: jax.Array, *,
     codes, _ = _pad_to(codes, 128, 0)
     codes, _ = _pad_to(codes, 128 // pdiv, 1)
     scale, _ = _pad_to(scale, 128, 1)
-    k = codes.shape[0]
-    n = codes.shape[1] * pdiv
-    m = x2.shape[0]
     if transpose:
-        y = qmm_mod.qmm_t(x2, codes, scale, packed=packed,
-                          bm=_block_fit(m, 256), bk=_block_fit(k, 256),
-                          bn=_block_fit(n, 512))
+        y = qmm_mod.qmm_t(x2, codes, scale, packed=packed)
         return y[:m0, :k0].reshape(*lead, k0)
-    y = qmm_mod.qmm(x2, codes, scale, packed=packed, bm=_block_fit(m, 256),
-                    bk=_block_fit(k, 512), bn=_block_fit(n, 256))
+    y = qmm_mod.qmm(x2, codes, scale, packed=packed)
     return y[:m0, :n0].reshape(*lead, n0)
 
 
@@ -176,10 +163,8 @@ def quant_dense_out_q(x: jax.Array, codes: jax.Array, scale: jax.Array,
     x, _ = _pad_to(x, 128, 1)
     codes, _ = _pad_to(codes, 128, 0)
     rand, _ = _pad_to(rand, 128, 0)
-    m, k = x.shape
     c1, c2, oscale = qmm_mod.qmm_qout(
-        x, codes, scale, rand, qmax=qmax, packed=packed, out_dtype=out_dtype,
-        bm=_block_fit(m, 256), bk=_block_fit(k, 512))
+        x, codes, scale, rand, qmax=qmax, packed=packed, out_dtype=out_dtype)
     return c1[:m0], c2[:m0], oscale[:m0]
 
 
@@ -208,8 +193,6 @@ def quant_adamw_update(master, g, m_codes, m_scale, v_codes, v_scale, rand, *,
     m_codes, v_codes = pad2(m_codes), pad2(v_codes)
     ms, _ = _pad_to(jnp.asarray(m_scale, jnp.float32).reshape(1, -1), 128, 1)
     vs, _ = _pad_to(jnp.asarray(v_scale, jnp.float32).reshape(1, -1), 128, 1)
-    r, c = master.shape
-    block = (_block_fit(r, 256), _block_fit(c, 512))
     params = jnp.stack([
         jnp.asarray(clip, jnp.float32),
         jnp.asarray(finite, jnp.float32),
@@ -218,7 +201,7 @@ def quant_adamw_update(master, g, m_codes, m_scale, v_codes, v_scale, rand, *,
         jnp.asarray(b2c, jnp.float32),
         jnp.float32(0), jnp.float32(0), jnp.float32(0)])
     mx, vx = qa_mod.qadamw_absmax(g, m_codes, ms, v_codes, vs, params,
-                                  b1=b1, b2=b2, block=block)
+                                  b1=b1, b2=b2)
     mx = jnp.max(mx, axis=0)
     vx = jnp.max(vx, axis=0)
     msn = jnp.where(mx == 0, 1.0, mx / qmax).astype(jnp.float32)
@@ -226,7 +209,7 @@ def quant_adamw_update(master, g, m_codes, m_scale, v_codes, v_scale, rand, *,
     nm, mc, vc = qa_mod.qadamw_update(
         master, g, m_codes, ms, v_codes, vs,
         msn.reshape(1, -1), vsn.reshape(1, -1), rand, params,
-        b1=b1, b2=b2, eps=eps, wd=wd, qmax=qmax, uclip=uclip, block=block)
+        b1=b1, b2=b2, eps=eps, wd=wd, qmax=qmax, uclip=uclip)
     return (nm[:r0, :c0], mc[:r0, :c0], msn[:c0], vc[:r0, :c0], vsn[:c0])
 
 

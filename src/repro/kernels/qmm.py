@@ -17,12 +17,16 @@ accumulation. Three shapes cover the whole model path:
   accumulator tile in VMEM — the full-width activation never touches HBM
   (mirrors kernels/stoch_quant.ds_quant, but fused at the matmul output).
 
-Blocking: (bm, bk)×(bk, bn) with bm=bn=256, bk=512 → VMEM working set
-bm·bk·2 + bk·bn·1 + bm·bn·4 ≈ 0.6 MiB; the contraction axis is the
-sequential minor grid axis so the fp32 accumulator tile lives across its
-loop. All dims padded to multiples of 128 by the caller (ops.py) —
-MXU-aligned. ``qmm_qout`` holds a (bm, N) accumulator (N unblocked), so its
-VMEM bound is bm·N·(4+4+2·1) bytes — callers cap bm accordingly.
+Blocking: (bm, bk)×(bk, bn); ``bm/bk/bn=None`` resolve through
+``registry.resolve_block`` — autotune-cache winner per (op, dtype,
+shape-bucket) when repro.perf.autotune has tuned this hardware, else the
+hand-picked defaults (bm=bn=256, bk=512 → VMEM working set bm·bk·2 +
+bk·bn·1 + bm·bn·4 ≈ 0.6 MiB). The contraction axis is the sequential minor
+grid axis so the fp32 accumulator tile lives across its loop. All dims
+padded to multiples of 128 by the caller (ops.py) — MXU-aligned; resolved
+blocks are fitted so every grid axis tiles its dim exactly. ``qmm_qout``
+holds a (bm, N) accumulator (N unblocked), so its VMEM bound is
+bm·N·(4+4+2·1) bytes — callers cap bm accordingly.
 
 ``interpret=None`` resolves through :func:`repro.kernels.registry.
 interpret_default` — the ONE place deciding real-compile vs interpret mode.
@@ -97,19 +101,21 @@ def _qmv_kernel(c_ref, v_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("br", "bc", "interpret"))
-def qmv(codes: jax.Array, v: jax.Array, *, br: int = 256, bc: int = 512,
-        interpret: bool | None = None) -> jax.Array:
+def qmv(codes: jax.Array, v: jax.Array, *, br: int | None = None,
+        bc: int | None = None, interpret: bool | None = None) -> jax.Array:
     """int8 codes (R, C) · f32 v (C, 1) → (R, 1) f32, fp32 accumulation.
 
     The double-sampling gradient q₁ᵀ(q₂x − b) reduces to two of these matvecs
     on raw code planes (scales factor out), so the samples stream HBM→VMEM as
-    int8 — 4× fewer bytes than the dequantized-f32 two-pass path. Dims must be
-    block multiples; ops.int8_matvec is the padded entry point.
+    int8 — 4× fewer bytes than the dequantized-f32 two-pass path.
+    ``br/bc=None`` resolve through registry.resolve_block (autotune cache →
+    hand-picked default, fitted to the dims); ops.int8_matvec is the padded
+    entry point.
     """
     interpret = registry.resolve_interpret(interpret)
     r, c = codes.shape
-    br = min(br, r)
-    bc = min(bc, c)
+    br, bc = registry.resolve_block("qmv", {"br": r, "bc": c}, dtype="int8",
+                                   explicit={"br": br, "bc": bc})
     grid = (pl.cdiv(r, br), pl.cdiv(c, bc))
     return pl.pallas_call(
         _qmv_kernel,
@@ -127,13 +133,14 @@ def qmv(codes: jax.Array, v: jax.Array, *, br: int = 256, bc: int = 512,
 @functools.partial(jax.jit,
                    static_argnames=("packed", "bm", "bk", "bn", "interpret"))
 def qmm(x: jax.Array, codes: jax.Array, scale: jax.Array, *,
-        packed: bool = False, bm: int = 256, bk: int = 512, bn: int = 256,
-        interpret: bool | None = None) -> jax.Array:
+        packed: bool = False, bm: int | None = None, bk: int | None = None,
+        bn: int | None = None, interpret: bool | None = None) -> jax.Array:
     """x: (M, K) bf16/f32 · codes (K, N) int8 [or (K, N/2) packed-int4 uint8]
     with scale (1, N) → (M, N) f32.
 
-    Dims must be multiples of the block sizes' gcd with 128 — use
-    ops.quant_dense_apply for the padded general entry point.
+    ``bm/bk/bn=None`` resolve through registry.resolve_block (autotune cache
+    → hand-picked default), fitted so every grid axis tiles its dim exactly —
+    use ops.quant_dense_apply for the padded general entry point.
     """
     interpret = registry.resolve_interpret(interpret)
     m, k = x.shape
@@ -142,9 +149,10 @@ def qmm(x: jax.Array, codes: jax.Array, scale: jax.Array, *,
         n *= 2
     assert k == k2, (x.shape, codes.shape)
     assert scale.shape == (1, n), (scale.shape, n)
-    bm = min(bm, m)
-    bk = min(bk, k)
-    bn = min(bn, n)
+    bm, bk, bn = registry.resolve_block(
+        "qmm", {"bm": m, "bk": k, "bn": n},
+        dtype="int4" if packed else "int8",
+        explicit={"bm": bm, "bk": bk, "bn": bn})
     pdiv = 2 if packed else 1
     grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
     return pl.pallas_call(
@@ -164,15 +172,16 @@ def qmm(x: jax.Array, codes: jax.Array, scale: jax.Array, *,
 @functools.partial(jax.jit,
                    static_argnames=("packed", "bm", "bk", "bn", "interpret"))
 def qmm_t(g: jax.Array, codes: jax.Array, scale: jax.Array, *,
-          packed: bool = False, bm: int = 256, bk: int = 256, bn: int = 512,
-          interpret: bool | None = None) -> jax.Array:
+          packed: bool = False, bm: int | None = None, bk: int | None = None,
+          bn: int | None = None, interpret: bool | None = None) -> jax.Array:
     """g: (M, N) · codes (K, N) [or (K, N/2) packed] with scale (1, N)
     → (M, K) f32: the transpose product ``g · (codes ⊙ scale)ᵀ``.
 
     This is the code-domain backward of ``qmm`` (dx streams int8 HBM→VMEM
     instead of re-decoding a bf16 weight) and the tied-unembed forward
     (logits = h · tableᵀ). Contraction runs over N as the sequential minor
-    grid axis; dims must be block multiples — see ops.quant_dense_dx.
+    grid axis; ``bm/bk/bn=None`` resolve through registry.resolve_block —
+    see ops.quant_dense_apply for the padded entry point.
     """
     interpret = registry.resolve_interpret(interpret)
     m, n = g.shape
@@ -181,9 +190,10 @@ def qmm_t(g: jax.Array, codes: jax.Array, scale: jax.Array, *,
         n2 *= 2
     assert n == n2, (g.shape, codes.shape)
     assert scale.shape == (1, n), (scale.shape, n)
-    bm = min(bm, m)
-    bk = min(bk, k)
-    bn = min(bn, n)
+    bm, bk, bn = registry.resolve_block(
+        "qmm_t", {"bm": m, "bk": k, "bn": n},
+        dtype="int4" if packed else "int8",
+        explicit={"bm": bm, "bk": bk, "bn": bn})
     pdiv = 2 if packed else 1
     grid = (pl.cdiv(m, bm), pl.cdiv(k, bk), pl.cdiv(n, bn))
     return pl.pallas_call(
@@ -247,15 +257,16 @@ def _qmm_qout_kernel(x_ref, w_ref, scale_ref, rand_ref, c1_ref, c2_ref,
     "packed", "qmax", "out_dtype", "bm", "bk", "interpret"))
 def qmm_qout(x: jax.Array, codes: jax.Array, scale: jax.Array,
              rand: jax.Array, *, qmax: int, packed: bool = False,
-             out_dtype=jnp.bfloat16, bm: int = 256, bk: int = 512,
-             interpret: bool | None = None):
+             out_dtype=jnp.bfloat16, bm: int | None = None,
+             bk: int | None = None, interpret: bool | None = None):
     """Fused ``y = x·dequant(codes)`` + double-sampled row quantization of y.
 
     x: (M, K); codes (K, N[/2]); scale (1, N); rand (M, N) uint32. Returns
     (codes1, codes2) int8 (M, N) and row scales (M, 1) f32 — the symmetric
     int-grid DS pair of y.astype(out_dtype), with y never written to HBM.
-    N is unblocked (full-width accumulator row in VMEM); M and K must be
-    block multiples — ops.quant_dense_out_q is the padded entry point.
+    N is unblocked (full-width accumulator row in VMEM); ``bm/bk=None``
+    resolve through registry.resolve_block — ops.quant_dense_out_q is the
+    padded entry point.
     """
     interpret = registry.resolve_interpret(interpret)
     m, k = x.shape
@@ -264,8 +275,9 @@ def qmm_qout(x: jax.Array, codes: jax.Array, scale: jax.Array,
         n *= 2
     assert k == k2, (x.shape, codes.shape)
     assert scale.shape == (1, n) and rand.shape == (m, n)
-    bm = min(bm, m)
-    bk = min(bk, k)
+    bm, bk = registry.resolve_block(
+        "qmm_qout", {"bm": m, "bk": k},
+        dtype="int4" if packed else "int8", explicit={"bm": bm, "bk": bk})
     pdiv = 2 if packed else 1
     grid = (pl.cdiv(m, bm), pl.cdiv(k, bk))
     out_block = pl.BlockSpec((bm, n), lambda i, kk: (i, 0))

@@ -46,6 +46,17 @@ DEFAULT_BLOCK = (256, 512)
 P_CLIP, P_FINITE, P_LR, P_B1C, P_B2C = 0, 1, 2, 3, 4
 
 
+def _resolve(block, r: int, c: int):
+    """``block=None`` → registry.resolve_block("quant_adamw", …): autotune
+    winner per shape-bucket when tuned, else DEFAULT_BLOCK, fitted so both
+    grid axes tile exactly. Both passes resolve independently — pass 1's
+    per-row-block absmax output is reduced on the host, so the passes don't
+    need matching blocks."""
+    explicit = {"br": block[0], "bc": block[1]} if block is not None else {}
+    return registry.resolve_block("quant_adamw", {"br": r, "bc": c},
+                                  dtype="f32", explicit=explicit)
+
+
 def _moments(g, m_codes, m_scale, v_codes, v_scale, clip, finite,
              *, b1: float, b2: float):
     """Shared tile math: decode old moments, apply the EMA update, select
@@ -115,13 +126,12 @@ def _specs(br, bc):
 @functools.partial(jax.jit,
                    static_argnames=("b1", "b2", "block", "interpret"))
 def qadamw_absmax(g, m_codes, m_scale, v_codes, v_scale, params, *,
-                  b1: float, b2: float, block=DEFAULT_BLOCK,
+                  b1: float, b2: float, block=None,
                   interpret: bool | None = None):
     """g (R, C) f32; codes (R, C) int8; scales (1, C) f32; params (8,) f32.
     Returns per-row-block column absmaxes: (R/br, C) for new-m and new-√v."""
     r, c = g.shape
-    br = min(block[0], r)
-    bc = min(block[1], c)
+    br, bc = _resolve(block, r, c)
     grid = (pl.cdiv(r, br), pl.cdiv(c, bc))
     tile, colrow, smem = _specs(br, bc)
     out_spec = pl.BlockSpec((1, bc), lambda i, j: (i, j))
@@ -142,14 +152,13 @@ def qadamw_absmax(g, m_codes, m_scale, v_codes, v_scale, params, *,
 def qadamw_update(master, g, m_codes, m_scale, v_codes, v_scale,
                   m_scale_new, v_scale_new, rand, params, *,
                   b1: float, b2: float, eps: float, wd: float, qmax: int,
-                  uclip: float = 0.0, block=DEFAULT_BLOCK,
+                  uclip: float = 0.0, block=None,
                   interpret: bool | None = None):
     """The pass-2 fused update. master/g (R, C) f32; codes (R, C) int8;
     old/new scales (1, C) f32; rand (R, C) uint32; params (8,) f32.
     Returns (new_master f32, new_m_codes int8, new_v_codes int8)."""
     r, c = master.shape
-    br = min(block[0], r)
-    bc = min(block[1], c)
+    br, bc = _resolve(block, r, c)
     grid = (pl.cdiv(r, br), pl.cdiv(c, bc))
     tile, colrow, smem = _specs(br, bc)
     return pl.pallas_call(

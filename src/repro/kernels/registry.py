@@ -50,6 +50,65 @@ def resolve_interpret(interpret: bool | None) -> bool:
     return interpret_default() if interpret is None else interpret
 
 
+# hand-picked block defaults per kernel op — the end of the
+# ``block=None → autotune-cache lookup → default`` resolution chain
+BLOCK_DEFAULTS = {
+    "qmm": {"bm": 256, "bk": 512, "bn": 256},
+    "qmm_t": {"bm": 256, "bk": 256, "bn": 512},
+    "qmm_qout": {"bm": 256, "bk": 512},
+    "qmv": {"br": 256, "bc": 512},
+    "ds_quant": {"br": 256, "bc": 512},
+    "quant_adamw": {"br": 256, "bc": 512},
+}
+
+
+def dtype_key(dt) -> str:
+    """Canonical short dtype tag for autotune-cache keys (f32/bf16/int8/…)."""
+    name = jnp.dtype(dt).name
+    return {"float32": "f32", "bfloat16": "bf16", "float16": "f16"}.get(
+        name, name)
+
+
+def fit_block(want: int, dim: int) -> int:
+    """Clamp a wanted block size to one that tiles ``dim`` exactly.
+
+    Partial blocks on a *contraction* grid axis read out of bounds and fold
+    garbage into valid outputs, so every resolved block must divide its dim:
+    min(want, dim) when that divides; else 128 (every ops.py entry point
+    pads to 128 multiples); else the dim itself (one exact block).
+    """
+    b = min(want, dim)
+    if dim % b == 0:
+        return b
+    return 128 if dim % 128 == 0 else dim
+
+
+def resolve_block(op: str, dims: dict[str, int], *, dtype: str = "f32",
+                  explicit: dict | None = None) -> tuple[int, ...]:
+    """THE block-shape resolution path every Pallas kernel entry runs.
+
+    ``dims`` maps block-arg names to the actual tensor dims (``{"bm": m,
+    "bk": k, "bn": n}``). Per axis: an explicitly-passed value wins; else
+    the autotune cache (repro.perf.autotune — keyed by hardware fingerprint
+    and the power-of-two shape bucket); else the hand-picked default from
+    :data:`BLOCK_DEFAULTS`. Everything is then fitted via :func:`fit_block`.
+    Resolution happens at trace time, so the choice is static under jit —
+    re-tuning requires ``jax.clear_caches()`` to take effect on shapes
+    already traced with ``block=None``.
+    """
+    want = dict(BLOCK_DEFAULTS[op])
+    explicit = {k: v for k, v in (explicit or {}).items() if v is not None}
+    if len(explicit) < len(want):        # any axis left to resolve?
+        from repro.perf import autotune
+
+        hit = autotune.lookup(op, dtype,
+                              {k.lstrip("b"): v for k, v in dims.items()})
+        if hit:
+            want.update({k: int(v) for k, v in hit.items() if k in want})
+    want.update(explicit)
+    return tuple(fit_block(want[k], dims[k]) for k in dims)
+
+
 def matmul_eq(x_ndim: int, w_ndim: int, transpose: bool = False) -> str:
     """The einsum equation of the ``quant_dense`` op family.
 

@@ -26,6 +26,16 @@ from repro.kernels import registry
 DEFAULT_BLOCK = (256, 512)
 
 
+def _resolve(block, r: int, c: int, dtype: str):
+    """``block=None`` → registry.resolve_block("ds_quant", …): the autotune
+    cache winner for this (dtype, shape-bucket) when one exists, else
+    DEFAULT_BLOCK — always fitted so both grid axes tile exactly."""
+    explicit = {"br": block[0], "bc": block[1]} if block is not None else {}
+    return registry.resolve_block("ds_quant", {"br": r, "bc": c},
+                                  dtype=registry.dtype_key(dtype),
+                                  explicit=explicit)
+
+
 def _sq_kernel(x_ref, rand_ref, scale_ref, codes_ref, *, s: int):
     """One (br, bc) block: codes = sign ⊙ stochastic_round(|x|/scale · s)."""
     x = x_ref[...].astype(jnp.float32)
@@ -43,13 +53,13 @@ def _sq_kernel(x_ref, rand_ref, scale_ref, codes_ref, *, s: int):
 
 @functools.partial(jax.jit, static_argnames=("s", "block", "interpret"))
 def stoch_quant(x: jax.Array, rand: jax.Array, scale: jax.Array, *, s: int,
-                block=DEFAULT_BLOCK, interpret: bool | None = None):
+                block=None, interpret: bool | None = None):
     """x: (R, C) f32/bf16; rand: (R, C) uint32; scale: (R, 1) f32 row scales.
-    Returns int8 codes in [-s, s]. (interpret=True on CPU; False on real TPU.)
+    Returns int8 codes in [-s, s]. ``block=None`` resolves through the
+    autotune cache → DEFAULT_BLOCK. (interpret=True on CPU; False on TPU.)
     """
     r, c = x.shape
-    br = min(block[0], r)
-    bc = min(block[1], c)
+    br, bc = _resolve(block, r, c, x.dtype)
     grid = (pl.cdiv(r, br), pl.cdiv(c, bc))
     return pl.pallas_call(
         functools.partial(_sq_kernel, s=s),
@@ -89,19 +99,20 @@ def _ds_quant_kernel(x_ref, rand_ref, scale_ref, c1_ref, c2_ref, *, s: int):
 
 @functools.partial(jax.jit, static_argnames=("s", "scale_axis", "block", "interpret"))
 def ds_quant(x: jax.Array, rand: jax.Array, scale: jax.Array, *, s: int,
-             scale_axis: str = "row", block=DEFAULT_BLOCK, interpret: bool | None = None):
+             scale_axis: str = "row", block=None, interpret: bool | None = None):
     """Fused double-sampling quantization (the ZipML §2.2 hot path).
 
     x: (R, C) f32/bf16; rand: (R, C) uint32 (one plane feeds both draws);
     scale: (R, 1) row scales or (1, C) column scales per ``scale_axis``.
     Returns (codes1, codes2) int8 in [-s, s] — both emitted from a single
     streaming pass over x, vs two full passes for the naive two-call path.
+    ``block=None`` resolves through the autotune cache → DEFAULT_BLOCK;
+    block choice never changes the emitted codes (elementwise kernel).
     """
     if s > 127:
         raise ValueError(f"int8 code planes need s <= 127, got {s}")
     r, c = x.shape
-    br = min(block[0], r)
-    bc = min(block[1], c)
+    br, bc = _resolve(block, r, c, x.dtype)
     grid = (pl.cdiv(r, br), pl.cdiv(c, bc))
     if scale_axis == "row":
         scale_spec = pl.BlockSpec((br, 1), lambda i, j: (i, 0))
@@ -134,12 +145,11 @@ def _absmax_kernel(x_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def row_absmax(x: jax.Array, *, block=DEFAULT_BLOCK, interpret: bool | None = None):
+def row_absmax(x: jax.Array, *, block=None, interpret: bool | None = None):
     """(R, C) → (R, 1) f32 row scales M(v) = max|v| (the paper's linf row
     scaling; grid dim 1 iterates sequentially so the max accumulates)."""
     r, c = x.shape
-    br = min(block[0], r)
-    bc = min(block[1], c)
+    br, bc = _resolve(block, r, c, x.dtype)
     # pad columns: out-of-bounds reads are undefined (on TPU and in interpret
     # mode) and would fold garbage into the max
     if c % bc:

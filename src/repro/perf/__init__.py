@@ -1,0 +1,26 @@
+"""repro.perf — empirical roofline probe, kernel autotuner, perf reporting.
+
+Three layers (see each module's docstring):
+
+* :mod:`repro.perf.probe` — ERT-style measured peak HBM GB/s + FLOP/s per
+  backend, cached per hardware fingerprint.
+* :mod:`repro.perf.autotune` — block-shape sweeps per (op, dtype,
+  shape-bucket) for the six Pallas kernels, winners persisted to a JSON
+  cache the kernel entry points resolve ``block=None`` through
+  (:func:`repro.kernels.registry.resolve_block`).
+* :mod:`repro.perf.report` — bytes-moved → achieved GB/s →
+  fraction-of-roofline annotation for every BENCH_*.json row; the smoke
+  gate compares the fraction, which is machine-portable.
+
+``python -m repro.perf {probe,autotune,gate}`` is the CI entry point.
+"""
+from repro.perf.autotune import lookup, tune
+from repro.perf.fingerprint import fingerprint_key, hardware_fingerprint
+from repro.perf.probe import analytic_peaks, get_peaks, measure_peaks
+from repro.perf.report import achieved_gbps, annotate_row, markdown_table
+
+__all__ = [
+    "achieved_gbps", "analytic_peaks", "annotate_row", "fingerprint_key",
+    "get_peaks", "hardware_fingerprint", "lookup", "markdown_table",
+    "measure_peaks", "tune",
+]

@@ -1,0 +1,5 @@
+import sys
+
+from repro.perf.cli import main
+
+sys.exit(main())

@@ -1,0 +1,120 @@
+"""CLI for the perf harness — what the ``perf-roofline`` CI lane drives.
+
+Subcommands:
+
+* ``probe``    — run/load the ERT roofline probe, write the JSON artifact.
+* ``autotune`` — sweep kernel block shapes, persist winners, write the cache
+  artifact + a per-kernel table (stdout and $GITHUB_STEP_SUMMARY).
+* ``gate``     — compare a BENCH_qmm.json run against the committed baseline:
+  every ``autotune_no_worse`` CHECK must hold, and each per-kernel
+  ``roofline_fraction`` must stay within ``--tol`` of the baseline's.
+
+Usage: PYTHONPATH=src python -m repro.perf <subcommand> [options]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+from repro.perf import autotune, probe, report
+
+
+def _cmd_probe(args) -> int:
+    peaks = probe.get_peaks(smoke=args.smoke, refresh=args.refresh)
+    print(f"peak_gbps={peaks['peak_gbps']} peak_gflops={peaks['peak_gflops']} "
+          f"key={peaks['key']}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(peaks, f, indent=2)
+        print(f"wrote {args.out}")
+    return 0
+
+
+def _cmd_autotune(args) -> int:
+    rows = autotune.tune(ops=args.ops or None, smoke=args.smoke)
+    table = report.markdown_table(rows)
+    print(table)
+    report.write_step_summary("## Kernel autotune (roofline)\n\n" + table)
+    if args.out:
+        shutil.copyfile(autotune.cache_path(), args.out)
+        print(f"wrote {args.out}")
+    bad = [r for r in rows if not r["autotune_no_worse"]]
+    for r in bad:
+        print(f"AUTOTUNE FAIL: {r['case']} best {r['best_ms']}ms > "
+              f"default {r['default_ms']}ms")
+    return 1 if bad else 0
+
+
+def _rf_rows(payload: dict) -> dict[str, dict]:
+    return {r.get("case", str(i)): r
+            for i, r in enumerate(payload.get("rows", []))
+            if "roofline_fraction" in r}
+
+
+def _cmd_gate(args) -> int:
+    with open(args.bench) as f:
+        now = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    now_rf, base_rf = _rf_rows(now), _rf_rows(base)
+    fails, table_rows = [], []
+    for case, b in base_rf.items():
+        r = now_rf.get(case)
+        if r is None:
+            fails.append(f"{case}: baseline roofline row missing from this "
+                         "run — regenerate baselines if intentional")
+            continue
+        if b.get("autotune_no_worse") and not r.get("autotune_no_worse", True):
+            fails.append(f"{case}: autotune_no_worse regressed (was PASS)")
+        floor = b["roofline_fraction"] * (1 - args.tol)
+        if r["roofline_fraction"] < floor:
+            fails.append(
+                f"{case}: roofline_fraction {r['roofline_fraction']:.4g} < "
+                f"{floor:.4g} (baseline {b['roofline_fraction']:.4g} "
+                f"− {args.tol:.0%})")
+        table_rows.append({**r, "baseline_fraction": b["roofline_fraction"]})
+    table = report.markdown_table(table_rows)
+    print(table)
+    verdict = "**FAIL**\n" + "\n".join(f"- {m}" for m in fails) if fails \
+        else "PASS — every kernel within tolerance of the committed baseline"
+    print(verdict)
+    report.write_step_summary(
+        "## Roofline fraction-of-peak gate\n\n" + table + "\n\n" + verdict)
+    for m in fails:
+        print(f"::error::perf-roofline gate: {m}")
+    return 1 if fails else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.perf", description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("probe", help="ERT roofline probe")
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--refresh", action="store_true",
+                   help="re-measure even with a fresh cache")
+    p.add_argument("--out", default=None)
+    p.set_defaults(fn=_cmd_probe)
+
+    p = sub.add_parser("autotune", help="sweep kernel block shapes")
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--ops", nargs="*", choices=autotune.OPS)
+    p.add_argument("--out", default=None)
+    p.set_defaults(fn=_cmd_autotune)
+
+    p = sub.add_parser("gate", help="fraction-of-peak gate vs baseline")
+    p.add_argument("--bench", required=True)
+    p.add_argument("--baseline", required=True)
+    p.add_argument("--tol", type=float, default=0.75,
+                   help="allowed relative drop in roofline_fraction "
+                        "(interpret-mode CPU lanes are noisy; tighten on TPU)")
+    p.set_defaults(fn=_cmd_gate)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,50 @@
+"""Hardware fingerprint — the cache key for measured-peak and autotune data.
+
+A roofline number or a tuned block shape is only meaningful on the hardware
+it was measured on, so every perf cache file (probe results, autotune
+winners) is keyed by a fingerprint of the accelerator: backend kind, device
+model, device count, and host architecture. The key is a short stable hash
+of that dict — same machine + same jax topology → same key across processes
+(pinned by tests/test_perf.py), different machine → guaranteed cache miss
+and fallback to the hand-picked defaults.
+
+Deliberately NOT in the fingerprint: jax/jaxlib versions (a pip upgrade
+shouldn't orphan a week of tuning data; re-tune explicitly when kernels
+change) and clock speed (the probe measures it instead).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import platform
+
+import jax
+
+
+def hardware_fingerprint() -> dict:
+    """The identity of the accelerator this process sees."""
+    devs = jax.devices()
+    return {
+        "backend": jax.default_backend(),
+        "device_kind": devs[0].device_kind if devs else "none",
+        "n_devices": len(devs),
+        "machine": platform.machine(),
+        "cpu_count": os.cpu_count() or 1,
+    }
+
+
+def fingerprint_key(fp: dict | None = None) -> str:
+    """Short stable hash of a fingerprint dict (sorted-JSON sha256/12)."""
+    fp = fp if fp is not None else hardware_fingerprint()
+    blob = json.dumps(fp, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:12]
+
+
+def cache_dir() -> str:
+    """Where perf caches live: ``ZIPML_PERF_CACHE_DIR`` or ~/.cache/zipml."""
+    d = os.environ.get("ZIPML_PERF_CACHE_DIR")
+    if not d:
+        d = os.path.join(os.path.expanduser("~"), ".cache", "zipml")
+    os.makedirs(d, exist_ok=True)
+    return d

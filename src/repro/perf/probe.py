@@ -1,0 +1,139 @@
+"""Empirical roofline probe — measured peak HBM GB/s and FLOP/s per backend.
+
+Berkeley-ERT methodology (the SNIPPETS.md reference): instead of trusting a
+datasheet constant, run a sweep of microkernels that are *constructed* to sit
+at the two extremes of arithmetic intensity and report the best sustained
+rate each achieves:
+
+* **streaming** — ``y = a·x + b`` over working sets from ~1 MiB up past any
+  cache (ERT's working-set sweep); 8 bytes moved per f32 element, ~0 useful
+  reuse. The max across sizes is the measured peak memory bandwidth.
+* **FMA chain** — ``x ← a·x + b`` iterated in-register/in-cache on a small
+  buffer via ``lax.fori_loop``; 2 FLOP per element per iteration, ~0 bytes
+  per FLOP. The max is the measured peak FLOP rate.
+
+Results are cached per :func:`~repro.perf.fingerprint.hardware_fingerprint`
+(``roofline_<key>.json`` under the perf cache dir), so the probe runs once
+per machine, not once per bench. ``analytic_peaks()`` exposes the TPU-v5e
+datasheet model from launch/hlostats for comparison — the composition the
+roofline report prints is measured-peak for the denominator, analytic model
+for the per-op expectation.
+
+The probe measures whatever backend jax resolves — on the CPU CI lane that
+is honest host memory bandwidth, and the kernels it normalizes run in
+interpret mode there, so CPU fractions are trend numbers; on TPU both sides
+are the real hardware claim.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.perf import fingerprint as fpr
+
+# f32 elements per streaming working set: ~1 MiB → 64 MiB (smoke stops at
+# 4 MiB — past L2 on every machine we run, cheap enough for CI)
+STREAM_SIZES = tuple(1 << p for p in (18, 20, 22, 24))
+STREAM_SIZES_SMOKE = tuple(1 << p for p in (18, 20))
+FMA_SHAPE = (256, 256)          # in-cache buffer for the FLOP probe
+FMA_ITERS = (512, 2048)
+FMA_ITERS_SMOKE = (256,)
+
+PROBE_VERSION = 1
+
+
+def _best_ms(fn, reps: int) -> float:
+    fn()                                    # compile + warm
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts)) * 1e3
+
+
+def _stream_gbps(n: int, reps: int) -> float:
+    x = jnp.arange(n, dtype=jnp.float32)    # data-dependent: nothing folds
+    a = jnp.float32(1.0009)
+    b = jnp.float32(0.1)
+    f = jax.jit(lambda x: a * x + b)
+    ms = _best_ms(lambda: f(x).block_until_ready(), reps)
+    return (8.0 * n) / (ms * 1e-3) / 1e9    # read 4n + write 4n bytes
+
+
+def _fma_gflops(iters: int, reps: int) -> float:
+    x = jnp.ones(FMA_SHAPE, jnp.float32) * 0.5
+    a = jnp.float32(0.999)
+    b = jnp.float32(1e-3)
+
+    @jax.jit
+    def chain(x):
+        return jax.lax.fori_loop(0, iters, lambda _, v: a * v + b, x)
+
+    ms = _best_ms(lambda: chain(x).block_until_ready(), reps)
+    flops = 2.0 * x.size * iters
+    return flops / (ms * 1e-3) / 1e9
+
+
+def measure_peaks(smoke: bool = False) -> dict:
+    """Run the ERT sweep now; returns the peak dict (no cache involved)."""
+    reps = 3 if smoke else 7
+    sizes = STREAM_SIZES_SMOKE if smoke else STREAM_SIZES
+    iters = FMA_ITERS_SMOKE if smoke else FMA_ITERS
+    stream = {str(n): round(_stream_gbps(n, reps), 3) for n in sizes}
+    fma = {str(i): round(_fma_gflops(i, reps), 3) for i in iters}
+    return {
+        "version": PROBE_VERSION,
+        "fingerprint": fpr.hardware_fingerprint(),
+        "key": fpr.fingerprint_key(),
+        "smoke": smoke,
+        "peak_gbps": max(stream.values()),
+        "peak_gflops": max(fma.values()),
+        "stream_sweep_gbps": stream,
+        "fma_sweep_gflops": fma,
+    }
+
+
+def _cache_path() -> str:
+    return os.path.join(fpr.cache_dir(), f"roofline_{fpr.fingerprint_key()}.json")
+
+
+def get_peaks(smoke: bool = True, refresh: bool = False) -> dict:
+    """Measured peaks for THIS machine, from cache when fresh.
+
+    A cached result from a different fingerprint, a corrupt file, or an older
+    probe version is discarded and re-measured. A full (non-smoke) cached
+    result satisfies a smoke request; the reverse re-measures only on
+    explicit ``refresh``.
+    """
+    path = _cache_path()
+    if not refresh and os.path.exists(path):
+        try:
+            with open(path) as f:
+                cached = json.load(f)
+            if (cached.get("version") == PROBE_VERSION
+                    and cached.get("key") == fpr.fingerprint_key()
+                    and cached.get("peak_gbps", 0) > 0):
+                return cached
+        except (json.JSONDecodeError, OSError, TypeError):
+            pass                             # corrupt → re-measure below
+    peaks = measure_peaks(smoke=smoke)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(peaks, f, indent=2)
+    os.replace(tmp, path)
+    return peaks
+
+
+def analytic_peaks() -> dict:
+    """The TPU-v5e datasheet model (launch/hlostats) in the same units —
+    what the compositional bench_roofline terms divide by."""
+    from repro.launch import hlostats as H
+
+    return {"peak_gbps": H.HBM_BW / 1e9, "peak_gflops": H.PEAK_FLOPS / 1e9,
+            "source": "hlostats (TPU v5e datasheet)"}

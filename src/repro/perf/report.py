@@ -1,0 +1,54 @@
+"""Roofline reporting — bytes-moved / achieved GB/s / fraction-of-peak.
+
+The one place that turns (bytes, milliseconds) into the numbers every
+BENCH_*.json row carries. Fraction-of-peak is the machine-portable perf
+metric the smoke gate compares: wall-clock divides out the machine via the
+measured peak, so a committed baseline from one box transfers to another —
+what raw step-ms never did.
+"""
+from __future__ import annotations
+
+import os
+
+
+def achieved_gbps(bytes_moved: float, ms: float) -> float:
+    return bytes_moved / (ms * 1e-3) / 1e9 if ms > 0 else 0.0
+
+
+def annotate_row(row: dict, *, bytes_moved: float, ms: float,
+                 peaks: dict | None = None) -> dict:
+    """Attach the roofline triple to a bench row, in place."""
+    if peaks is None:
+        from repro.perf import probe
+
+        peaks = probe.get_peaks(smoke=True)
+    gbps = achieved_gbps(bytes_moved, ms)
+    peak = float(peaks["peak_gbps"])
+    row["bytes_moved"] = int(bytes_moved)
+    row["achieved_gbps"] = round(gbps, 4)
+    row["peak_gbps"] = round(peak, 3)
+    row["roofline_fraction"] = round(gbps / peak, 6) if peak else 0.0
+    return row
+
+
+def markdown_table(rows: list[dict]) -> str:
+    """Per-kernel roofline table (the $GITHUB_STEP_SUMMARY payload)."""
+    cols = ("case", "dtype", "bucket", "block", "best_ms", "default_ms",
+            "achieved_gbps", "peak_gbps", "roofline_fraction",
+            "autotune_no_worse")
+    keep = [c for c in cols if any(c in r for r in rows)]
+    lines = ["| " + " | ".join(keep) + " |",
+             "|" + "---|" * len(keep)]
+    for r in rows:
+        lines.append("| " + " | ".join(str(r.get(c, "")) for c in keep) + " |")
+    return "\n".join(lines)
+
+
+def write_step_summary(text: str) -> bool:
+    """Append to $GITHUB_STEP_SUMMARY when running under Actions."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return False
+    with open(path, "a") as f:
+        f.write(text + "\n")
+    return True

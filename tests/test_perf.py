@@ -1,0 +1,230 @@
+"""repro.perf contracts: fingerprint/key stability, probe cache behavior,
+and the autotune cache the kernel entry points resolve ``block=None``
+through — a miss (or a corrupt/foreign cache) must fall back to the
+hand-picked defaults bit-exactly, and a hit must not change elementwise
+kernel outputs (block shape is a schedule, not semantics)."""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import registry
+from repro.kernels import stoch_quant as sq_mod
+from repro.perf import autotune, fingerprint, probe, report
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def tuned_env(tmp_path, monkeypatch):
+    """Isolated perf-cache env: lookups enabled, cache under tmp_path."""
+    monkeypatch.setenv("ZIPML_PERF_CACHE_DIR", str(tmp_path))
+    monkeypatch.setenv(autotune.CACHE_ENV, str(tmp_path / "autotune.json"))
+    monkeypatch.setenv(autotune.DISABLE_ENV, "1")
+    autotune.reload()
+    yield tmp_path
+    autotune.reload()
+    jax.clear_caches()
+
+
+class TestFingerprint:
+    def test_key_stable_in_process(self):
+        assert fingerprint.fingerprint_key() == fingerprint.fingerprint_key()
+        assert len(fingerprint.fingerprint_key()) == 12
+
+    def test_key_is_pure_function_of_dict(self):
+        fp = {"backend": "cpu", "device_kind": "x", "n_devices": 1,
+              "machine": "m", "cpu_count": 4}
+        # insertion order must not matter (sorted-JSON hash)
+        assert fingerprint.fingerprint_key(fp) == \
+            fingerprint.fingerprint_key(dict(reversed(list(fp.items()))))
+        fp2 = dict(fp, n_devices=2)
+        assert fingerprint.fingerprint_key(fp) != fingerprint.fingerprint_key(fp2)
+
+    @pytest.mark.slow
+    def test_key_stable_across_processes(self):
+        out = subprocess.run(
+            [sys.executable, "-c",
+             "from repro.perf import fingerprint; "
+             "print(fingerprint.fingerprint_key())"],
+            capture_output=True, text=True, check=True)
+        assert out.stdout.strip() == fingerprint.fingerprint_key()
+
+
+class TestProbeCache:
+    def _fake_peaks(self, **over):
+        peaks = {"version": probe.PROBE_VERSION,
+                 "fingerprint": fingerprint.hardware_fingerprint(),
+                 "key": fingerprint.fingerprint_key(), "smoke": True,
+                 "peak_gbps": 42.0, "peak_gflops": 7.0,
+                 "stream_sweep_gbps": {}, "fma_sweep_gflops": {}}
+        peaks.update(over)
+        return peaks
+
+    def test_roundtrip_and_no_remeasure_on_hit(self, tuned_env, monkeypatch):
+        calls = []
+        monkeypatch.setattr(probe, "measure_peaks",
+                            lambda smoke=False: calls.append(1) or
+                            self._fake_peaks())
+        p1 = probe.get_peaks(smoke=True)
+        p2 = probe.get_peaks(smoke=True)
+        assert p1["peak_gbps"] == p2["peak_gbps"] == 42.0
+        assert calls == [1]                      # second call served from disk
+        assert probe.get_peaks(refresh=True)["peak_gbps"] == 42.0
+        assert calls == [1, 1]
+
+    def test_corrupt_and_foreign_cache_remeasure(self, tuned_env, monkeypatch):
+        monkeypatch.setattr(probe, "measure_peaks",
+                            lambda smoke=False: self._fake_peaks())
+        path = probe._cache_path()
+        with open(path, "w") as f:
+            f.write("{not json")
+        assert probe.get_peaks()["peak_gbps"] == 42.0   # corrupt → re-measure
+        with open(path, "w") as f:
+            json.dump(self._fake_peaks(key="deadbeef0000", peak_gbps=9.0), f)
+        assert probe.get_peaks()["peak_gbps"] == 42.0   # foreign → re-measure
+
+    def test_report_annotation(self):
+        row = report.annotate_row({"case": "x"}, bytes_moved=1e9, ms=100.0,
+                                  peaks={"peak_gbps": 20.0})
+        assert row["achieved_gbps"] == pytest.approx(10.0)
+        assert row["roofline_fraction"] == pytest.approx(0.5)
+        assert "roofline_fraction" in report.markdown_table([row])
+
+
+class TestAutotuneCache:
+    ENTRY = {"qmm/int8/k512_m300_n256": {
+        "op": "qmm", "dtype": "int8", "bucket": "k512_m256_n256",
+        "block": {"bm": 128, "bk": 256, "bn": 128}, "ms": 1.0}}
+
+    def test_bucketing(self):
+        assert autotune.bucket_dim(300) == 256
+        assert autotune.bucket_dim(256) == 256
+        assert autotune.bucket_dim(1) == 1
+        # every dim in a bucket maps to the same entry key
+        k1 = autotune.entry_key("qmm", "int8", {"m": 300, "k": 512, "n": 256})
+        k2 = autotune.entry_key("qmm", "int8", {"m": 511, "k": 700, "n": 300})
+        assert k1 == k2 == "qmm/int8/k512_m256_n256"
+
+    def test_save_lookup_roundtrip(self, tuned_env):
+        entries = {autotune.entry_key("qmm", "int8",
+                                      {"m": 300, "k": 512, "n": 256}):
+                   dict(self.ENTRY["qmm/int8/k512_m300_n256"])}
+        path = autotune.save(entries)
+        assert path == autotune.cache_path()
+        hit = autotune.lookup("qmm", "int8", {"m": 260, "k": 700, "n": 300})
+        assert hit == {"bm": 128, "bk": 256, "bn": 128}
+        # merge keeps prior entries
+        autotune.save({"ds_quant/f32/c512_r256": {"block": {"br": 128,
+                                                            "bc": 256}}})
+        assert autotune.lookup("qmm", "int8",
+                               {"m": 260, "k": 700, "n": 300}) is not None
+        assert autotune.lookup("ds_quant", "f32",
+                               {"r": 256, "c": 512}) == {"br": 128, "bc": 256}
+
+    def test_disabled_env_always_misses(self, tuned_env, monkeypatch):
+        autotune.save({autotune.entry_key("ds_quant", "f32",
+                                          {"r": 256, "c": 512}):
+                       {"block": {"br": 128, "bc": 256}}})
+        monkeypatch.setenv(autotune.DISABLE_ENV, "0")
+        assert autotune.lookup("ds_quant", "f32",
+                               {"r": 256, "c": 512}) is None
+
+    def test_corrupt_cache_warns_and_defaults(self, tuned_env):
+        with open(autotune.cache_path(), "w") as f:
+            f.write("{broken")
+        autotune.reload()
+        with pytest.warns(UserWarning, match="unreadable"):
+            hit = autotune.lookup("qmm", "int8", {"m": 256, "k": 512, "n": 256})
+        assert hit is None
+
+    def test_foreign_hardware_cache_warns_and_defaults(self, tuned_env):
+        with open(autotune.cache_path(), "w") as f:
+            json.dump({"version": autotune.CACHE_VERSION, "key": "ffff00001111",
+                       "entries": dict(self.ENTRY)}, f)
+        autotune.reload()
+        with pytest.warns(UserWarning, match="different hardware"):
+            hit = autotune.lookup("qmm", "int8", {"m": 300, "k": 512, "n": 256})
+        assert hit is None
+
+    def test_version_mismatch_defaults(self, tuned_env):
+        with open(autotune.cache_path(), "w") as f:
+            json.dump({"version": autotune.CACHE_VERSION + 1,
+                       "key": fingerprint.fingerprint_key(),
+                       "entries": dict(self.ENTRY)}, f)
+        autotune.reload()
+        with pytest.warns(UserWarning, match="version"):
+            assert autotune.lookup("qmm", "int8",
+                                   {"m": 300, "k": 512, "n": 256}) is None
+
+
+class TestBlockResolution:
+    def test_fit_block_exact_tiling(self):
+        assert registry.fit_block(256, 1024) == 256
+        assert registry.fit_block(256, 300) == 300     # no 128-divisor → full
+        assert registry.fit_block(256, 384) == 128     # fall to lane multiple
+        assert registry.fit_block(512, 256) == 256     # clamp to dim
+
+    def test_explicit_beats_cache(self, tuned_env):
+        autotune.save({autotune.entry_key("ds_quant", "f32",
+                                          {"r": 256, "c": 512}):
+                       {"block": {"br": 128, "bc": 256}}})
+        got = registry.resolve_block("ds_quant", {"br": 256, "bc": 512},
+                                     dtype="f32",
+                                     explicit={"br": 256, "bc": 512})
+        assert got == (256, 512)
+        got = registry.resolve_block("ds_quant", {"br": 256, "bc": 512},
+                                     dtype="f32")
+        assert got == (128, 256)
+
+    def test_cache_miss_falls_back_to_defaults(self, tuned_env):
+        got = registry.resolve_block("qmm", {"bm": 512, "bk": 2048, "bn": 512},
+                                     dtype="int8")
+        d = registry.BLOCK_DEFAULTS["qmm"]
+        assert got == (d["bm"], d["bk"], d["bn"])
+
+    def test_kernel_bit_exact_across_cache_states(self, tuned_env):
+        """ds_quant emits identical codes on a cache miss (defaults), with an
+        explicit default block, and with a forced alternate tuned block —
+        blocking is a schedule choice, never a semantics choice."""
+        x = jax.random.normal(KEY, (256, 512), jnp.float32)
+        rand = jax.random.bits(jax.random.fold_in(KEY, 1), (256, 512),
+                               jnp.uint32)
+        scale = sq_mod.row_absmax(x, interpret=True)
+
+        def codes():
+            c1, c2 = sq_mod.ds_quant(x, rand, scale, s=127, interpret=True)
+            return np.asarray(c1), np.asarray(c2)
+
+        miss = codes()                                   # empty cache
+        explicit = sq_mod.ds_quant(x, rand, scale, s=127,
+                                   block=sq_mod.DEFAULT_BLOCK, interpret=True)
+        np.testing.assert_array_equal(miss[0], np.asarray(explicit[0]))
+        np.testing.assert_array_equal(miss[1], np.asarray(explicit[1]))
+
+        autotune.save({autotune.entry_key("ds_quant", "f32",
+                                          {"r": 256, "c": 512}):
+                       {"block": {"br": 128, "bc": 256}}})
+        jax.clear_caches()          # block resolution happens at trace time
+        hit = codes()
+        np.testing.assert_array_equal(miss[0], hit[0])
+        np.testing.assert_array_equal(miss[1], hit[1])
+
+
+@pytest.mark.slow
+class TestTune:
+    def test_winner_no_worse_and_persisted(self, tuned_env):
+        peaks = {"peak_gbps": 20.0, "peak_gflops": 5.0}
+        rows = autotune.tune(ops=["ds_quant"], smoke=True, peaks=peaks)
+        assert len(rows) == 1
+        row = rows[0]
+        assert row["autotune_no_worse"]           # exact by construction
+        assert row["best_ms"] <= row["default_ms"]
+        assert 0 < row["roofline_fraction"]
+        # winners landed in the cache file and are visible to lookup()
+        hit = autotune.lookup("ds_quant", "f32", {"r": 256, "c": 512})
+        assert hit is not None and set(hit) == {"br", "bc"}
