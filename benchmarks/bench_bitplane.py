@@ -1,0 +1,138 @@
+"""Bit-plane storage benchmark: bytes-vs-bits linearity, slice identity, and
+a bursty-trace replay of the precision autoscaler.
+
+Three claims, all deterministic (no wall-clock in any CHECK — CI runs this
+on CPU where timing is interpret-mode noise):
+
+* **bytes streamed are linear in served bits** — ``slice_planes(k)`` is a
+  view of the top-k magnitude planes, so a k-bit decode streams exactly
+  ``(k+1)/(B+1)`` of the stored code bytes (sign plane + k magnitude
+  planes; MLWeaving's any-precision claim). Checked exactly from
+  ``QTensor.nbytes`` across k = 1..8.
+* **slicing is lossless re-quantization** — the top-k planes of an 8-bit
+  encode are bit-for-bit the direct k-bit encode (truncation nests), so the
+  runtime dial serves the *same* model a k-bit ship artifact would.
+* **the autoscaler holds an admission SLO a fixed precision can't** — a
+  bursty request trace replayed on a virtual clock through the real
+  :class:`repro.serve.PrecisionAutoscaler`, with per-step service time
+  proportional to the planes streamed (the byte model above: d(k) =
+  base + β·(k+1)). Fixed 8-bit serving blows the admission-latency SLO on
+  the burst; the governor sheds bits, holds the SLO, and restores full
+  precision once the burst passes.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import quant
+from repro.quant import QScheme
+from repro.serve import AutoscalerConfig, PrecisionAutoscaler
+
+STORE_BITS = 8
+
+# virtual-clock service-time model: decode streams (k+1) planes, and decode
+# is weight-bandwidth-bound, so step time is affine in planes streamed
+BASE_MS, PER_PLANE_MS = 0.5, 0.5
+
+
+def _service_ms(bits: int) -> float:
+    return BASE_MS + PER_PLANE_MS * (bits + 1)
+
+
+def _replay(arrivals_s, *, autoscaler=None, fixed_bits: int = STORE_BITS):
+    """Single-server replay on a virtual clock: admit → observe → serve one.
+
+    Returns (admission waits in ms, bits used per step). With ``autoscaler``
+    the governor is ticked once per step with the head-of-line wait and
+    queue depth — the same signals ``ServeEngine.step`` feeds it.
+    """
+    t, i = 0.0, 0
+    queue: deque[float] = deque()
+    waits_ms, bits_trace = [], []
+    while i < len(arrivals_s) or queue:
+        while i < len(arrivals_s) and arrivals_s[i] <= t:
+            queue.append(arrivals_s[i])
+            i += 1
+        if not queue:
+            t = arrivals_s[i]
+            continue
+        wait_ms = (t - queue[0]) * 1e3
+        if autoscaler is not None:
+            bits = autoscaler.observe(admit_wait_ms=wait_ms,
+                                      queue_depth=len(queue), now=t)
+        else:
+            bits = fixed_bits
+        waits_ms.append((t - queue.popleft()) * 1e3)
+        bits_trace.append(bits)
+        t += _service_ms(bits) * 1e-3
+    return waits_ms, bits_trace
+
+
+def run(quick: bool = False):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (128, 256) if quick else (512, 1024)) * 0.1
+    q8 = quant.encode(w, QScheme.bitplane(STORE_BITS))
+
+    # -- bytes streamed vs served bits: exact (k+1)-plane linearity ---------
+    per_plane = q8.codes.size * 4 // (STORE_BITS + 1)
+    scale_b = q8.nbytes - q8.codes.size * 4
+    linear = True
+    for k in range(1, STORE_BITS + 1):
+        qk = q8.slice_planes(k)
+        linear &= qk.nbytes == (k + 1) * per_plane + scale_b
+    rows.append({
+        "case": "bytes_vs_bits",
+        "plane_bytes": per_plane,
+        "bytes_1bit": q8.slice_planes(1).nbytes,
+        "bytes_8bit": q8.nbytes,
+        "bytes_linear_in_planes": bool(linear),
+    })
+
+    # -- slice identity: top-k planes ≡ direct k-bit encode -----------------
+    ident = True
+    for k in (1, 2, 4):
+        qk, direct = q8.slice_planes(k), quant.encode(w, QScheme.bitplane(k))
+        ident &= bool(jnp.array_equal(qk.codes, direct.codes))
+        ident &= bool(jnp.array_equal(qk.decode(), direct.decode()))
+    rows.append({"case": "slice_identity",
+                 "slice_equals_direct_encode": bool(ident)})
+
+    # -- bursty-trace replay: governor vs fixed 8-bit on a virtual clock ----
+    # 40 requests land at t=0 (the burst), then a quiet tail of 20 at 10 ms
+    # spacing — long enough for the restore walk (3 rungs × patience 4) to
+    # climb all the way back
+    burst, tail = 40, 20
+    arrivals = [0.0] * burst + [0.3 + 0.01 * j for j in range(tail)]
+    slo_ms = 80.0
+    cfg = AutoscalerConfig(slo_admit_ms=slo_ms, queue_high=8,
+                           breach_patience=2, restore_patience=4)
+
+    fixed_waits, _ = _replay(arrivals, fixed_bits=STORE_BITS)
+    gov = PrecisionAutoscaler(cfg)
+    auto_waits, bits_trace = _replay(arrivals, autoscaler=gov)
+
+    rows.append({
+        "case": "burst_replay",
+        "requests": len(arrivals),
+        "slo_admit_ms": slo_ms,
+        "fixed8_max_wait_ms": round(max(fixed_waits), 1),
+        "auto_max_wait_ms": round(max(auto_waits), 1),
+        "min_bits": min(bits_trace),
+        "final_bits": gov.bits,
+        "rung_moves": len(gov.decisions),
+        "fixed8_violates_slo": bool(max(fixed_waits) > slo_ms),
+        "autoscaler_holds_slo": bool(max(auto_waits) <= slo_ms),
+        "bits_restored_after_burst": bool(gov.bits == STORE_BITS
+                                          and min(bits_trace) < STORE_BITS),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

@@ -1,0 +1,175 @@
+"""Ship-weight artifact: ONE bit-plane file serves every precision.
+
+``weights-bitplane-v1`` replaces the per-bit-width ship formats (a separate
+int8 artifact, a separate packed-int4 artifact, ...): the weights are stored
+bit-serially (``repro.quant`` ``layout='bitplane'``, sign plane + magnitude
+planes MSB-first), so one artifact on disk serves any precision
+1..``bits`` — the loader takes the top-k planes via
+``QTensor.slice_planes(k)`` and never touches the rest. Legacy spliced
+weight dicts keep loading through
+:func:`repro.precision.qat.migrate_spliced_weights`; this module is the
+forward path.
+
+Layout (the :class:`repro.ckpt.CheckpointManager` idiom — atomic tmp →
+rename, ``.complete`` commit marker written last):
+
+    <dir>/
+      manifest.json   format, stored bits, per-leaf path/kind/scheme/dtype
+      arrays.npz      leaf_i_codes + leaf_i_scale (QTensor) or leaf_i (array)
+      .complete       readers ignore directories without it
+
+Non-weight leaves (norm gains, embedding tables, ...) ride along unchanged;
+bf16 is stored viewed as uint16 with the dtype recorded per leaf (npz has no
+portable bf16). The tree structure is serialized as per-leaf key paths
+(nested dicts/lists), so loading needs no template.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import numpy as np
+import jax
+
+from repro.quant import QScheme, QTensor
+
+FORMAT = "weights-bitplane-v1"
+
+
+def _path_keys(path) -> list:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(p.key)
+        elif hasattr(p, "idx"):
+            out.append(int(p.idx))
+        else:
+            raise TypeError(f"unsupported tree path entry {p!r}")
+    return out
+
+
+def _host(a) -> tuple[np.ndarray, str]:
+    """Device→host with the bf16-as-uint16 npz workaround."""
+    a = np.asarray(a)
+    dt = str(a.dtype)
+    if a.dtype.itemsize == 2 and "float" in dt:
+        a = a.view(np.uint16)
+    return a, dt
+
+
+def _unhost(a: np.ndarray, dtype: str) -> np.ndarray:
+    if a.dtype == np.uint16 and "float" in dtype:
+        import ml_dtypes  # ships with jax
+        return a.view(np.dtype(getattr(ml_dtypes, dtype, dtype)))
+    return a
+
+
+def save_ship_weights(directory: str, params: Any, *,
+                      extra: dict | None = None) -> str:
+    """Write ``params`` (bitplane-quantized tree) as one any-precision
+    artifact. Requires at least one ``layout='bitplane'`` QTensor leaf —
+    use ``quantize_param_tree(..., layout='bitplane')`` first."""
+    leaves = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, QTensor))[0]
+    manifest_leaves, arrays = [], {}
+    bits = 0
+    for i, (path, leaf) in enumerate(leaves):
+        entry: dict = {"path": _path_keys(path)}
+        if isinstance(leaf, QTensor):
+            if leaf.scheme.layout != "bitplane":
+                raise ValueError(
+                    f"{FORMAT} stores bitplane QTensors only; leaf "
+                    f"{entry['path']} has layout={leaf.scheme.layout!r} — "
+                    "quantize with quantize_param_tree(..., layout='bitplane')")
+            entry["kind"] = "qtensor"
+            entry["scheme"] = dataclasses.asdict(leaf.scheme)
+            arrays[f"leaf_{i}_codes"], _ = _host(leaf.codes)
+            arrays[f"leaf_{i}_scale"], entry["scale_dtype"] = _host(leaf.scale)
+            bits = max(bits, leaf.scheme.bits)
+        else:
+            entry["kind"] = "array"
+            arrays[f"leaf_{i}"], entry["dtype"] = _host(leaf)
+        manifest_leaves.append(entry)
+    if bits == 0:
+        raise ValueError(
+            f"{FORMAT} needs at least one bitplane QTensor leaf — got none")
+    manifest = {"format": FORMAT, "bits": bits, "n_leaves": len(leaves),
+                "leaves": manifest_leaves, "extra": extra or {}}
+    os.makedirs(directory, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=os.path.dirname(os.path.abspath(directory))
+                           or ".", prefix=".tmp_ship_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        open(os.path.join(tmp, ".complete"), "w").close()
+        if os.path.exists(directory):
+            shutil.rmtree(directory)
+        os.rename(tmp, directory)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return directory
+
+
+def _insert(tree: dict, keys: list, value) -> None:
+    node = tree
+    for k in keys[:-1]:
+        node = node.setdefault(k, {})
+    node[keys[-1]] = value
+
+
+def _listify(node):
+    """Dicts whose keys are exactly 0..n-1 were list levels — restore them."""
+    if not isinstance(node, dict):
+        return node
+    node = {k: _listify(v) for k, v in node.items()}
+    if node and all(isinstance(k, int) for k in node):
+        if sorted(node) == list(range(len(node))):
+            return [node[i] for i in range(len(node))]
+    return node
+
+
+def load_ship_weights(directory: str, bits: int | None = None) -> Any:
+    """Rebuild the param tree from a ``weights-bitplane-v1`` artifact.
+
+    ``bits=k`` serves the top-k planes (``slice_planes`` on every bitplane
+    leaf — same values as quantizing directly at k bits); ``None`` loads the
+    full stored precision. Either way only one artifact exists on disk."""
+    if not os.path.exists(os.path.join(directory, ".complete")):
+        raise FileNotFoundError(
+            f"{directory} is not a committed ship artifact (.complete missing)")
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    if manifest.get("format") != FORMAT:
+        raise ValueError(
+            f"{directory} has format {manifest.get('format')!r}, expected "
+            f"{FORMAT!r} (legacy spliced dicts load via "
+            "repro.precision.qat.migrate_spliced_weights)")
+    if bits is not None and not 1 <= bits <= manifest["bits"]:
+        raise ValueError(
+            f"bits={bits} not servable by a {manifest['bits']}-bit artifact")
+    data = np.load(os.path.join(directory, "arrays.npz"))
+    tree: dict = {}
+    for i, entry in enumerate(manifest["leaves"]):
+        if entry["kind"] == "qtensor":
+            scheme = QScheme(**entry["scheme"])
+            qt = QTensor(
+                jax.numpy.asarray(data[f"leaf_{i}_codes"]),
+                jax.numpy.asarray(
+                    _unhost(data[f"leaf_{i}_scale"], entry["scale_dtype"])),
+                scheme)
+            if bits is not None and bits < scheme.bits:
+                qt = qt.slice_planes(bits)
+            leaf = qt
+        else:
+            leaf = jax.numpy.asarray(_unhost(data[f"leaf_{i}"], entry["dtype"]))
+        _insert(tree, entry["path"], leaf)
+    return _listify(tree)
+
+
+__all__ = ["FORMAT", "load_ship_weights", "save_ship_weights"]

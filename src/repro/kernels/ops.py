@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from . import paged_attn as pa_mod
 from . import qmm as qmm_mod
+from . import qmm_bitplane as qbp_mod
 from . import quant_adamw as qa_mod
 from . import ssd as ssd_mod
 from . import stoch_quant as sq_mod
@@ -146,6 +147,28 @@ def quant_dense_apply(x: jax.Array, codes: jax.Array, scale: jax.Array, *,
         return y[:m0, :k0].reshape(*lead, k0)
     y = qmm_mod.qmm(x2, codes, scale, packed=packed)
     return y[:m0, :n0].reshape(*lead, n0)
+
+
+def quant_dense_bitplane(x: jax.Array, codes: jax.Array, scale: jax.Array,
+                         n_out: int) -> jax.Array:
+    """y = x · decode(bitplane codes) for a 2-D logical weight.
+
+    x: (*lead, K); codes (P, K, W) uint32 with W = ⌈n_out/32⌉ (plane 0 =
+    sign, then magnitude MSB-first); scale (1, n_out) f32. Leading x dims
+    fold into the GEMM M axis; M/K pad to 128 multiples and the word axis
+    to 4-word (128-column) multiples — zero words decode to +0·scale, and
+    the padded output columns are sliced off.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m0 = x2.shape[0]
+    x2, _ = _pad_to(x2, 128, 0)
+    x2, _ = _pad_to(x2, 128, 1)
+    codes, _ = _pad_to(codes, 128, 1)
+    codes, _ = _pad_to(codes, 4, 2)
+    scale, _ = _pad_to(scale, 128, 1)
+    y = qbp_mod.qmm_bitplane(x2, codes, scale)
+    return y[:m0, :n_out].reshape(*lead, n_out)
 
 
 def quant_dense_out_q(x: jax.Array, codes: jax.Array, scale: jax.Array,

@@ -6,7 +6,12 @@ sequence by a block table. This kernel is the decode hot loop of that
 layout: one query token per sequence attends to its pages, and the int8/int4
 codes are **dequantized in VMEM**, so HBM traffic is the code bytes (2×/4×
 fewer than bf16 — the ZipML Fig. 2 data-movement claim applied to serving;
-MLWeaving's any-precision layout is the same idea in silicon).
+MLWeaving's any-precision layout is the same idea in silicon). int4 pages
+dequantize by **split nibbles fused into the flash inner loop**: scores and
+the value accumulator work on the even/odd D-halves directly (both are
+half-sum-decomposable), so the per-page stride interleave the old
+unpack-then-attend path paid — the int4-slower-than-int8 regression — is
+gone; the output interleaves once at the end.
 
 Mechanics:
 * grid = (B, MAXP); the page axis is the sequential minor axis, so the f32
@@ -41,17 +46,28 @@ NEG_INF = -2.0 ** 30  # matches models/attention.py: finite, exp() == 0.0 in f32
 
 
 def _dequant(codes, scale, kv_bits: int):
-    """(page, Hkv, Dk) codes + (page|1, Hkv, 1) scale → (page, Hkv, D) f32."""
-    if kv_bits == 4:
-        # the canonical nibble unpack (pure jnp — traces fine inside the
-        # kernel body); one implementation repo-wide
-        from repro.quant import unpack_int4
+    """(page, Hkv, D) codes + (page|1, Hkv, 1) scale → (page, Hkv, D) f32.
 
-        return unpack_int4(codes) * scale.astype(jnp.float32)
+    bf16/int8 only: the int4 path never materializes interleaved codes —
+    see the split-nibble branch in the kernel body."""
     x = codes.astype(jnp.float32)
     if kv_bits:
         x = x * scale.astype(jnp.float32)
     return x
+
+
+def _nibble_halves(codes, scale):
+    """(page, Hkv, D/2) packed uint8 → (lo, hi) f32 halves, each
+    (page, Hkv, D/2): lo = even D-elements, hi = odd (pack_int4's layout).
+
+    The shift+mask runs on the packed words in place — no interleave, no
+    (page, Hkv, D) stride scatter. The caller keeps the two halves apart
+    through the whole page loop; scores and the value accumulator are
+    half-sum-decomposable, so only the final output interleaves (once)."""
+    s = scale.astype(jnp.float32)
+    lo = ((codes & 0xF).astype(jnp.float32) - 8.0) * s
+    hi = (((codes >> 4) & 0xF).astype(jnp.float32) - 8.0) * s
+    return lo, hi
 
 
 def _paged_attn_kernel(bt_ref, len_ref, q_ref, kp_ref, vp_ref, ks_ref, vs_ref,
@@ -67,14 +83,28 @@ def _paged_attn_kernel(bt_ref, len_ref, q_ref, kp_ref, vp_ref, ks_ref, vs_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[0].astype(jnp.float32)                    # (H, D)
-    k = _dequant(kp_ref[0], ks_ref[0], kv_bits)         # (page, G, D)
-    v = _dequant(vp_ref[0], vs_ref[0], kv_bits)
     h, d = q.shape
-    g = k.shape[1]
-    r = h // g
-    qg = q.reshape(g, r, d)
-    s = jnp.einsum("grd,tgd->grt", qg, k,
-                   preferred_element_type=jnp.float32) * softmax_scale
+    if kv_bits == 4:
+        # fused in-register nibble dequant: scores split over the even/odd
+        # D-halves (the D-sum is permutation-invariant), V accumulated
+        # de-interleaved — the interleave happens once, in _finish
+        k_lo, k_hi = _nibble_halves(kp_ref[0], ks_ref[0])   # (page, G, D/2)
+        v_lo, v_hi = _nibble_halves(vp_ref[0], vs_ref[0])
+        g = k_lo.shape[1]
+        r = h // g
+        qr = q.reshape(g, r, d // 2, 2)
+        s = (jnp.einsum("grd,tgd->grt", qr[..., 0], k_lo,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("grd,tgd->grt", qr[..., 1], k_hi,
+                          preferred_element_type=jnp.float32)) * softmax_scale
+    else:
+        k = _dequant(kp_ref[0], ks_ref[0], kv_bits)     # (page, G, D)
+        v = _dequant(vp_ref[0], vs_ref[0], kv_bits)
+        g = k.shape[1]
+        r = h // g
+        qg = q.reshape(g, r, d)
+        s = jnp.einsum("grd,tgd->grt", qg, k,
+                       preferred_element_type=jnp.float32) * softmax_scale
     pos = p * page + jax.lax.broadcasted_iota(jnp.int32, (1, 1, page), 2)
     valid = pos < len_ref[b]                            # (1, 1, page)
     s = jnp.where(valid, s, NEG_INF)
@@ -88,8 +118,18 @@ def _paged_attn_kernel(bt_ref, len_ref, q_ref, kp_ref, vp_ref, ks_ref, vs_ref,
     m_ref[...] = m_new
     l_ref[...] = l_ref[...] * alpha + jnp.sum(pexp, axis=-1)
     acc = acc_ref[...].reshape(g, r, d) * alpha[..., None]
-    acc = acc + jnp.einsum("grt,tgd->grd", pexp, v,
-                           preferred_element_type=jnp.float32)
+    if kv_bits == 4:
+        # acc scratch layout for int4: [even-half | odd-half] along D
+        d2 = d // 2
+        acc = jnp.concatenate(
+            [acc[..., :d2] + jnp.einsum("grt,tgd->grd", pexp, v_lo,
+                                        preferred_element_type=jnp.float32),
+             acc[..., d2:] + jnp.einsum("grt,tgd->grd", pexp, v_hi,
+                                        preferred_element_type=jnp.float32)],
+            axis=-1)
+    else:
+        acc = acc + jnp.einsum("grt,tgd->grd", pexp, v,
+                               preferred_element_type=jnp.float32)
     acc_ref[...] = acc.reshape(h, d)
 
     @pl.when(p == pl.num_programs(1) - 1)
@@ -98,6 +138,9 @@ def _paged_attn_kernel(bt_ref, len_ref, q_ref, kp_ref, vp_ref, ks_ref, vs_ref,
         # floor → output 0; those rows are never read by the engine
         l = jnp.maximum(l_ref[...], 1e-30)[..., None]   # (G, R, 1)
         out = acc_ref[...].reshape(g, r, d) / l
+        if kv_bits == 4:
+            # the one interleave: [even | odd] halves → natural D order
+            out = out.reshape(g, r, 2, d // 2).swapaxes(-1, -2)
         o_ref[0] = out.reshape(h, d)
 
 

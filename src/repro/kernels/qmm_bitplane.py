@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: bit-plane (MLWeaving) dequant-GEMM.
+
+``y[M, N] = x[M, K] · decode(planes[P, K, W] ⊙ scale[1, N])``
+
+The weight is stored bit-serially (``repro.quant.pack_bitplanes``): plane 0
+is the sign, planes 1..k the magnitude MSB-first, each plane packing 32
+consecutive N-elements per uint32 word (W = N/32). The kernel streams ONLY
+the planes present in the operand HBM→VMEM — the block carries the full
+plane axis, which is tiny (≤ 9) — so serving a ``slice_planes(k)`` view
+moves (k+1)/(B+1) of the full artifact's code bytes with zero repacking.
+
+Codes are reconstructed in-register: a broadcast shift+mask unpack (the
+word→bit expansion is a contiguous reshape, never a stride interleave), a
+plane-weighted sum for the magnitude, then ``sign · mag · 2^-k · scale``.
+The reconstruction is value-identical to ``QTensor.decode()`` of the same
+planes (integers < 2^8 are exact in f32 and the plane weights are powers of
+two; pinned by tests/test_bitplane.py), so parity vs the ref backend is
+bounded by the usual bf16-decode epsilon.
+
+Blocking mirrors ``qmm``: (bm, bk)×(bk, bn) with the contraction as the
+sequential minor grid axis and an fp32 accumulator tile; ``bn`` must be a
+multiple of 32 (whole words). ``bm/bk/bn=None`` resolve through
+``registry.resolve_block``; ops.quant_dense_bitplane is the padded entry.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import registry
+
+
+def _qmm_bitplane_kernel(x_ref, w_ref, scale_ref, o_ref, *, k_bits: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    words = w_ref[...]                            # (P, bk, bn/32) uint32
+    p, bk, bw = words.shape
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 1, 32), 3)
+    bits = ((words[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.float32)
+    bits = bits.reshape(p, bk, bw * 32)           # contiguous: bit j of word
+    sign = 1.0 - 2.0 * bits[0]                    # w is element 32·w + j
+    mag = jnp.zeros_like(sign)
+    for i in range(k_bits):                       # static: k_bits ≤ 8 planes
+        mag = mag + bits[1 + i] * (2.0 ** (k_bits - 1 - i))
+    w = sign * mag * (2.0 ** -k_bits) * scale_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def qmm_bitplane(x: jax.Array, planes: jax.Array, scale: jax.Array, *,
+                 bm: int | None = None, bk: int | None = None,
+                 bn: int | None = None,
+                 interpret: bool | None = None) -> jax.Array:
+    """x: (M, K) bf16/f32 · bitplane codes (P, K, N/32) uint32 with scale
+    (1, N) → (M, N) f32. P = k_bits + 1 (sign plane first).
+
+    Bytes streamed for the weight are K·N·P/8 — linear in the requested
+    planes. ``bm/bk/bn=None`` resolve through registry.resolve_block; use
+    ops.quant_dense_bitplane for the padded general entry point.
+    """
+    interpret = registry.resolve_interpret(interpret)
+    m, k = x.shape
+    p, k2, w = planes.shape
+    n = w * 32
+    assert k == k2, (x.shape, planes.shape)
+    assert scale.shape == (1, n), (scale.shape, n)
+    bm, bk, bn = registry.resolve_block(
+        "qmm_bitplane", {"bm": m, "bk": k, "bn": n}, dtype="uint32",
+        explicit={"bm": bm, "bk": bk, "bn": bn})
+    assert bn % 32 == 0, bn
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+    return pl.pallas_call(
+        functools.partial(_qmm_bitplane_kernel, k_bits=p - 1),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((p, bk, bn // 32), lambda i, j, kk: (0, kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, planes, scale)

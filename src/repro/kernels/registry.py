@@ -54,6 +54,7 @@ def resolve_interpret(interpret: bool | None) -> bool:
 # ``block=None → autotune-cache lookup → default`` resolution chain
 BLOCK_DEFAULTS = {
     "qmm": {"bm": 256, "bk": 512, "bn": 256},
+    "qmm_bitplane": {"bm": 256, "bk": 512, "bn": 256},
     "qmm_t": {"bm": 256, "bk": 256, "bn": 512},
     "qmm_qout": {"bm": 256, "bk": 512},
     "qmv": {"br": 256, "bc": 512},
@@ -448,12 +449,39 @@ class _PallasBackend(KernelBackend):
             scale = scale / sch.s
         return codes, scale, packed
 
+    def _bitplane_scale(self, qt):
+        """Kernel-ready (1, N) scale for a 2-D bitplane weight, or None when
+        the scaling family needs the decode fallback (per-row scales don't
+        broadcast over the GEMM's N axis)."""
+        n = qt.scheme.vec_dim
+        scale = jnp.asarray(qt.scale, jnp.float32)
+        shp = scale.shape
+        if shp in ((), (1,), (1, 1)):
+            return jnp.broadcast_to(scale.reshape(1, 1), (1, n))
+        if shp == (n,):
+            return scale.reshape(1, n)
+        if shp == (1, n):
+            return scale
+        return None
+
     def quant_dense(self, x, qt, *, transpose: bool = False):
         """Stream the code plane through the fused dequant-GEMM kernels
         (kernels/qmm.qmm / qmm_t): int8 moves ~2× fewer HBM bytes than the
-        bf16 decode path, packed int4 ~4×. Stacked (S, K, N) weights (the MoE
-        expert axis) run one kernel launch per slice — S is small and
-        static."""
+        bf16 decode path, packed int4 ~4×, bitplane (k+1)/16ths
+        (kernels/qmm_bitplane — only the sliced planes move). Stacked
+        (S, K, N) weights (the MoE expert axis) run one kernel launch per
+        slice — S is small and static."""
+        if qt.scheme.layout == "bitplane":
+            scale = None if transpose or qt.codes.ndim != 3 \
+                else self._bitplane_scale(qt)
+            if scale is None:
+                # transpose / stacked / per-row scales → bf16 decode fallback
+                return KernelBackend.quant_dense(self, x, qt,
+                                                 transpose=transpose)
+            from repro.kernels import ops
+
+            return ops.quant_dense_bitplane(x, qt.codes, scale,
+                                            qt.scheme.vec_dim)
         plan = self._qd_plan(qt)
         if plan is None or qt.ndim > 3:
             return KernelBackend.quant_dense(self, x, qt, transpose=transpose)

@@ -43,14 +43,17 @@ def _resolve_plan(plan, kv_bits, weight_bits, optimal_levels) -> PrecisionPlan:
     return plan
 
 
-def _build(arch: str, *, reduced: bool, plan: PrecisionPlan, seed: int):
+def _build(arch: str, *, reduced: bool, plan: PrecisionPlan, seed: int,
+           weight_layout: str = "dense"):
     get = configs.get_reduced if reduced else configs.get_config
     cfg = get(arch, precision=plan)
     key = jax.random.PRNGKey(seed)
     params = T.init_params(key, cfg)
     if plan.model_bits:
-        params = quantize_param_tree(params, bits=plan.model_bits,
-                                     optimal=plan.optimal_levels)
+        params = quantize_param_tree(
+            params, bits=plan.model_bits,
+            optimal=plan.optimal_levels and weight_layout == "dense",
+            layout=weight_layout)
     return cfg, params, key
 
 
@@ -125,20 +128,37 @@ def serve_engine(arch: str, *, reduced: bool = True, n_requests: int = 16,
                  optimal_levels: bool = False, seed: int = 0,
                  plan: PrecisionPlan | None = None, max_slots: int = 4,
                  page_size: int = 8, temperature: float = 0.0,
-                 top_k: int = 0, backend: str | None = None):
+                 top_k: int = 0, backend: str | None = None,
+                 weight_layout: str = "dense", autoscale: bool = False,
+                 slo_admit_ms: float | None = None):
     """Serve a mixed-length trace through the continuous-batching engine.
 
-    Returns (engine, results dict rid → Finished). Throughput/byte stats via
-    ``engine.throughput()`` / ``engine.kv_pool_nbytes()`` / ``engine.stats``.
+    ``weight_layout='bitplane'`` stores the weights bit-serially (one
+    artifact, any precision); ``autoscale=True`` then attaches the
+    :class:`repro.serve.PrecisionAutoscaler` so load drops/restores weight
+    bits against the admission SLO (``slo_admit_ms``, default from
+    ``$ZIPML_SLO_ADMIT_MS``). Returns (engine, results dict rid → Finished).
+    Throughput/byte stats via ``engine.throughput()`` /
+    ``engine.kv_pool_nbytes()`` / ``engine.stats``.
     """
-    from repro.serve import ServeEngine
+    from repro.serve import AutoscalerConfig, PrecisionAutoscaler, ServeEngine
 
     plan = _resolve_plan(plan, kv_bits, weight_bits, optimal_levels)
-    cfg, params, _ = _build(arch, reduced=reduced, plan=plan, seed=seed)
+    cfg, params, _ = _build(arch, reduced=reduced, plan=plan, seed=seed,
+                            weight_layout=weight_layout)
+    autoscaler = None
+    if autoscale:
+        if weight_layout != "bitplane" or not plan.model_bits:
+            raise ValueError(
+                "autoscale needs --weight-layout bitplane with weight_bits > 0")
+        over = {} if slo_admit_ms is None else {"slo_admit_ms": slo_admit_ms}
+        ladder = tuple(b for b in (8, 4, 2, 1) if b <= plan.model_bits)
+        autoscaler = PrecisionAutoscaler(
+            AutoscalerConfig.from_env(bits_ladder=ladder, **over))
     max_seq_len = max_prompt + max_new + page_size
     engine = ServeEngine(params, cfg, plan=plan, max_slots=max_slots,
                          page_size=page_size, max_seq_len=max_seq_len,
-                         backend=backend)
+                         backend=backend, autoscaler=autoscaler)
     trace = make_trace(n_requests, cfg.vocab_size, max_new=max_new,
                        min_prompt=min_prompt, max_prompt=max_prompt,
                        seed=seed, temperature=temperature, top_k=top_k)
@@ -153,6 +173,14 @@ def main(argv=None):
     ap.add_argument("--kv-bits", type=int, default=0, choices=(0, 4, 8))
     ap.add_argument("--weight-bits", type=int, default=0)
     ap.add_argument("--optimal-levels", action="store_true")
+    ap.add_argument("--weight-layout", default="dense",
+                    choices=("dense", "bitplane"),
+                    help="bitplane = bit-serial any-precision weight storage")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="adapt weight bits to load (needs bitplane layout)")
+    ap.add_argument("--slo-admit-ms", type=float, default=None,
+                    help="admission-latency SLO for --autoscale "
+                         "(default $ZIPML_SLO_ADMIT_MS or 50)")
     ap.add_argument("--kernel-backend", default=None, choices=(None, "ref", "pallas"))
     # engine mode (default)
     ap.add_argument("--requests", type=int, default=16)
@@ -188,7 +216,8 @@ def main(argv=None):
         weight_bits=args.weight_bits, optimal_levels=args.optimal_levels,
         max_slots=args.max_slots, page_size=args.page_size,
         temperature=args.temperature, top_k=args.top_k,
-        backend=args.kernel_backend)
+        backend=args.kernel_backend, weight_layout=args.weight_layout,
+        autoscale=args.autoscale, slo_admit_ms=args.slo_admit_ms)
     st = engine.stats
     gen_total = sum(f.n_generated for f in results.values())
     print(f"[serve-engine] {len(results)} requests, {gen_total} tokens "
@@ -199,6 +228,12 @@ def main(argv=None):
     print(f"[serve-engine] KV pool: {engine.kv_pool_nbytes():,} bytes "
           f"(kv_bits={args.kv_bits or 'bf16'}, "
           f"page_size={args.page_size}) via QTensor.nbytes")
+    if engine.autoscaler is not None:
+        asc = engine.autoscaler
+        print(f"[serve-engine] autoscaler: bits={asc.bits} after "
+              f"{asc.n_observations} observations, "
+              f"{len(asc.decisions)} rung moves "
+              f"(slo_admit_ms={asc.config.slo_admit_ms})")
 
 
 if __name__ == "__main__":

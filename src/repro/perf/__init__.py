@@ -5,7 +5,7 @@ Three layers (see each module's docstring):
 * :mod:`repro.perf.probe` — ERT-style measured peak HBM GB/s + FLOP/s per
   backend, cached per hardware fingerprint.
 * :mod:`repro.perf.autotune` — block-shape sweeps per (op, dtype,
-  shape-bucket) for the six Pallas kernels, winners persisted to a JSON
+  shape-bucket) for the seven Pallas kernels, winners persisted to a JSON
   cache the kernel entry points resolve ``block=None`` through
   (:func:`repro.kernels.registry.resolve_block`).
 * :mod:`repro.perf.report` — bytes-moved → achieved GB/s →

@@ -1,7 +1,8 @@
 """Block-shape autotuner for the Pallas kernels + the persisted winner cache.
 
-Every hot kernel (``qmm``, ``qmm_t``, ``qmm_qout``, ``ds_quant``,
-``paged_attn``, ``quant_adamw``) ships hand-picked block sizes. This module
+Every hot kernel (``qmm``, ``qmm_t``, ``qmm_qout``, ``qmm_bitplane``,
+``ds_quant``, ``paged_attn``, ``quant_adamw``) ships hand-picked block
+sizes. This module
 sweeps a small candidate space per (op, dtype, shape-bucket), times each
 candidate on representative shapes, and persists the winners to a JSON cache
 keyed by :func:`~repro.perf.fingerprint.fingerprint_key`. The kernel entry
@@ -25,7 +26,7 @@ shapes are a coarse function of problem size, not of every last dim.
 ``paged_attn`` rides along with a singleton candidate space: its grid is
 fully determined by (batch, pages-per-sequence) and the pool's page size,
 so there is no free block axis yet — the tuner still measures it so the
-roofline report covers all six kernels.
+roofline report covers all seven kernels.
 """
 from __future__ import annotations
 
@@ -42,7 +43,8 @@ CACHE_ENV = "ZIPML_AUTOTUNE_CACHE"       # explicit cache-file override
 DISABLE_ENV = "ZIPML_AUTOTUNE"           # "0" → lookups always miss
 CACHE_VERSION = 1
 
-OPS = ("qmm", "qmm_t", "qmm_qout", "ds_quant", "paged_attn", "quant_adamw")
+OPS = ("qmm", "qmm_t", "qmm_qout", "qmm_bitplane", "ds_quant", "paged_attn",
+       "quant_adamw")
 
 # candidate block spaces — the hand-picked default is element 0 of each
 SPACES = {
@@ -63,6 +65,12 @@ SPACES = {
         {"bm": 256, "bk": 512},
         {"bm": 128, "bk": 512},
         {"bm": 128, "bk": 256},
+    ],
+    "qmm_bitplane": [
+        {"bm": 256, "bk": 512, "bn": 256},
+        {"bm": 128, "bk": 512, "bn": 256},
+        {"bm": 256, "bk": 256, "bn": 256},
+        {"bm": 128, "bk": 256, "bn": 128},
     ],
     "ds_quant": [
         {"br": 256, "bc": 512},
@@ -207,6 +215,7 @@ def _cases(smoke: bool):
 
     from repro.kernels import paged_attn as pa_mod
     from repro.kernels import qmm as qmm_mod
+    from repro.kernels import qmm_bitplane as qbp_mod
     from repro.kernels import quant_adamw as qa_mod
     from repro.kernels import stoch_quant as sq_mod
 
@@ -242,6 +251,15 @@ def _cases(smoke: bool):
         2 * m * k + codes8.size + 4 * n + 4 * m * n + 2 * m * n + 4 * m,
         lambda b: jax.block_until_ready(
             qmm_mod.qmm_qout(x, codes8, scale, rand, qmax=127, **b)),
+    ))
+
+    planes = jax.random.bits(jax.random.fold_in(key, 9), (9, k, n // 32),
+                             jnp.uint32)          # sign + 8 magnitude planes
+    cases.append((
+        "qmm_bitplane", "uint32", {"m": m, "k": k, "n": n},
+        2 * m * k + planes.size * 4 + 4 * n + 4 * m * n,
+        lambda b: jax.block_until_ready(
+            qbp_mod.qmm_bitplane(x, planes, scale, **b)),
     ))
 
     r, c = (256, 512) if smoke else (1024, 2048)

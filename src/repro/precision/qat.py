@@ -120,20 +120,34 @@ def migrate_spliced_weights(params, bits: int = 8):
 
 def quantize_param_tree(params, bits: int = 8, optimal: bool = False,
                         packed: bool | None = None,
-                        include_embedding: bool = False):
+                        include_embedding: bool = False,
+                        layout: str = "dense"):
     """Convert every matmul weight to QTensor storage (see layers.dense).
 
     ``packed=None`` auto-packs 4-bit codes (two nibbles per byte) whenever
     the out-channel dim is even — decode values are identical, HBM bytes
     halve again. ``include_embedding`` also quantizes embedding tables
     (``table`` leaves) — the tied unembed then streams codes through the
-    transpose kernel; ``embed``'s gather decodes row-wise."""
+    transpose kernel; ``embed``'s gather decodes row-wise.
+
+    ``layout='bitplane'`` stores each weight bit-serially
+    (:meth:`repro.quant.QScheme.bitplane`): one artifact serves any
+    precision 1..``bits`` via ``QTensor.slice_planes(k)`` — the serving
+    engine's ``set_weight_bits``/autoscaler path. Incompatible with
+    ``optimal`` (DP level sets are not representable bit-serially) and with
+    ``packed`` (planes are already uint32-packed)."""
+    if layout not in ("dense", "bitplane"):
+        raise ValueError(f"layout must be 'dense' or 'bitplane', got {layout!r}")
+    if layout == "bitplane" and (optimal or packed):
+        raise ValueError("layout='bitplane' excludes optimal= and packed=")
 
     def convert(path, leaf):
         last = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
         is_table = include_embedding and last == "table"
         if not (_is_weight(path) or is_table) or leaf.ndim < 2:
             return leaf
+        if layout == "bitplane":
+            return quant.encode(leaf, QScheme.bitplane(bits))
         if optimal and not is_table:
             return _optimal_quantize_weight(leaf, bits)
         return quant.encode(

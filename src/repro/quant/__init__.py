@@ -19,9 +19,11 @@ from .qtensor import (
     dot,
     ds_pair,
     encode,
+    pack_bitplanes,
     pack_int4,
     quantize_to_levels_jnp,
     tree_nbytes,
+    unpack_bitplanes,
     unpack_int4,
 )
 from .quant_dense import ShipWeight, quant_dense, quant_dense_q
@@ -37,10 +39,12 @@ __all__ = [
     "dot",
     "ds_pair",
     "encode",
+    "pack_bitplanes",
     "pack_int4",
     "quant_dense",
     "quant_dense_q",
     "quantize_to_levels_jnp",
     "tree_nbytes",
+    "unpack_bitplanes",
     "unpack_int4",
 ]

@@ -21,6 +21,7 @@ backend and the fused Pallas pipeline share this one storage format.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any
 
 import numpy as np
@@ -79,6 +80,65 @@ def unpack_int4(packed: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Bit-plane (MLWeaving) packing — the generalization of the nibble machinery
+# above to any 1..8-bit precision: one sign plane + B magnitude planes, MSB
+# first, each plane packing 32 elements per uint32 word. This module is the
+# ONE home of the packing convention; kernels/qmm_bitplane.py reconstructs
+# the identical planes in-register from the same words.
+# ---------------------------------------------------------------------------
+
+def pack_bitplanes(planes: jax.Array) -> jax.Array:
+    """0/1 planes ``(…, D)`` → uint32 words ``(…, ⌈D/32⌉)``.
+
+    Bit ``j`` of word ``w`` holds element ``32·w + j`` — consecutive elements
+    share a word, so unpacking is a contiguous reshape, never a stride
+    interleave. The tail word zero-pads."""
+    d = planes.shape[-1]
+    pad = (-d) % 32
+    b = planes.astype(jnp.uint32)
+    if pad:
+        b = jnp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, pad)])
+    b = b.reshape(*b.shape[:-1], -1, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return (b << shifts).sum(axis=-1).astype(jnp.uint32)
+
+
+def unpack_bitplanes(words: jax.Array, d: int) -> jax.Array:
+    """uint32 words ``(…, ⌈d/32⌉)`` → int32 0/1 planes ``(…, d)``
+    (inverse of :func:`pack_bitplanes`)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(*words.shape[:-1], words.shape[-1] * 32)
+    return bits[..., :d].astype(jnp.int32)
+
+
+def _encode_bitplane(x: jax.Array, scheme: QScheme,
+                     scale: jax.Array) -> "QTensor":
+    """Bit-serial encode: codes ``(*lead, B+1, R, ⌈D/32⌉)`` for x
+    ``(*lead, R, D)`` — plane axis at −3 so stacked layers still
+    ``lax.scan`` over their leading axis.
+
+    The magnitude is TRUNCATED (⌊|x|·2^B/scale⌋, not nearest): truncation
+    nests under right-shift (⌊⌊u·2^B⌋/2^(B−k)⌋ = ⌊u·2^k⌋, and the clip
+    commutes because (2^B−1)≫(B−k) = 2^k−1), so decoding the top-k planes
+    is value-identical to direct k-bit encoding — the any-precision
+    invariant. 2^B/2^k are exact in fp32, so the identity is exact."""
+    if x.ndim < 2:
+        raise ValueError(
+            f"bitplane layout packs matrices (ndim >= 2), got {x.shape}")
+    b = scheme.bits
+    x32 = x.astype(jnp.float32)
+    u = jnp.abs(x32) / scale
+    mag = jnp.clip(jnp.floor(u * (2.0 ** b)), 0.0,
+                   float(2 ** b - 1)).astype(jnp.uint32)
+    sign = (x32 < 0).astype(jnp.uint32)
+    planes = [sign] + [(mag >> (b - 1 - p)) & jnp.uint32(1) for p in range(b)]
+    codes = pack_bitplanes(jnp.stack(planes, axis=-3))
+    scheme = dataclasses.replace(scheme, vec_dim=int(x.shape[-1]))
+    return QTensor(codes, scale, scheme)
+
+
+# ---------------------------------------------------------------------------
 # Scale families
 # ---------------------------------------------------------------------------
 
@@ -103,6 +163,10 @@ def compute_scale(x: jax.Array, scheme: QScheme) -> jax.Array:
     axes, keepdims = _reduce_axes(scheme, x.ndim)
     m = jnp.max(jnp.abs(x32), axis=axes, keepdims=keepdims)
     if scheme.grid == "int":
+        if scheme.layout == "bitplane":
+            # bitplane magnitudes live on [0, 1): the scale is the absmax
+            # itself, independent of bits, so every plane slice shares it
+            return jnp.where(m == 0, 1.0, m).astype(jnp.float32)
         qmax = float(scheme.qmax)
         return jnp.where(m == 0, 1.0, m / qmax).astype(jnp.float32)
     return jnp.where(m == 0, 1.0, m).astype(jnp.float32)
@@ -139,15 +203,20 @@ class QTensor:
     # -------------------------------------------------------------- shape --
     @property
     def shape(self):
+        """LOGICAL shape — bitplane codes (*lead, B+1, R, W) report the
+        decoded (*lead, R, vec_dim), so matmul equations see a matrix."""
+        if self.scheme.layout == "bitplane":
+            s = self.codes.shape
+            return (*s[:-3], s[-2], self.scheme.vec_dim)
         return self.codes.shape
 
     @property
     def ndim(self):
-        return self.codes.ndim
+        return len(self.shape)
 
     @property
     def size(self):
-        return self.codes.size
+        return int(np.prod(self.shape)) if self.shape else 1
 
     @property
     def is_ds(self) -> bool:
@@ -175,7 +244,16 @@ class QTensor:
 
     @property
     def nbytes(self) -> int:
-        """Logical HBM/wire bytes: packed codes + scales + level table."""
+        """Logical HBM/wire bytes: packed codes + scales + level table.
+        Bitplane storage counts its uint32 words directly — exactly
+        (bits+1) planes' worth, so a ``slice_planes(k)`` view costs bytes
+        linear in k."""
+        if self.scheme.layout == "bitplane":
+            total = int(np.prod(self.codes.shape)) * 4        # uint32 words
+            total += int(np.prod(self.scale.shape)
+                         if self.scale.shape else 1) * \
+                np.dtype(jnp.float32).itemsize
+            return int(total)
         n = int(np.prod(self.codes.shape)) if self.codes.shape else 1
         if self.scheme.packed:
             n *= 2                               # two logical codes per byte
@@ -206,6 +284,16 @@ class QTensor:
             return out.astype(dtype) if dtype is not None else out
         ct = jnp.float32 if dtype is None else dtype
         if sch.grid == "int":
+            if sch.layout == "bitplane":
+                # self-describing: k comes from the plane axis, so the same
+                # decode serves every slice_planes(k) view
+                k = codes.shape[-3] - 1
+                bits = jnp.moveaxis(
+                    unpack_bitplanes(codes, sch.vec_dim), -3, 0).astype(ct)
+                sign = 1.0 - 2.0 * bits[0]
+                w = (2.0 ** (k - 1 - jnp.arange(k))).astype(ct)
+                mag = jnp.tensordot(w, bits[1:], axes=(0, 0))
+                return sign * mag * self.scale.astype(ct) * (2.0 ** -k)
             if sch.packed:
                 codes = unpack_int4(codes)
             return codes.astype(ct) * self.scale.astype(ct)
@@ -224,6 +312,24 @@ class QTensor:
 
     def dequantize(self) -> jax.Array:   # old Quantized/IntTensor spelling
         return self.decode()
+
+    # ---------------------------------------------------------- bitplane --
+    def slice_planes(self, k: int) -> "QTensor":
+        """Top-k-bit view of a bitplane QTensor: the sign plane + the k most
+        significant magnitude planes. A pure slice — zero repacking, bytes
+        streamed linear in k — whose decode is value-identical to encoding
+        the original tensor directly at k bits (truncation nests; the scale
+        is bits-independent)."""
+        if self.scheme.layout != "bitplane":
+            raise ValueError("slice_planes needs layout='bitplane', got "
+                             f"{self.scheme.layout!r}")
+        if not 1 <= k <= self.scheme.bits:
+            raise ValueError(
+                f"k must be in 1..{self.scheme.bits}, got {k}")
+        if k == self.scheme.bits:
+            return self
+        scheme = dataclasses.replace(self.scheme, bits=k)
+        return QTensor(self.codes[..., :k + 1, :, :], self.scale, scheme)
 
     def dot(self, v: jax.Array, backend: str | None = None) -> jax.Array:
         """decode(self) @ v, dispatched through the kernel-backend registry
@@ -273,6 +379,8 @@ def encode_jnp(x: jax.Array, scheme: QScheme, key: jax.Array | None = None,
         scale = compute_scale(x, scheme)
     else:
         scale = jnp.asarray(scale, jnp.float32)
+    if scheme.layout == "bitplane":
+        return _encode_bitplane(x, scheme, scale)
     if scheme.grid == "zipml":
         s = scheme.s
         xn = (jnp.asarray(x) / scale).astype(jnp.float32)

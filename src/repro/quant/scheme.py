@@ -16,9 +16,16 @@ a tensor through integer codes:
   (deterministic, the §5.4 straw man), 'ds' (double sampling §2.2: two
   independent stochastic planes sharing one base level, +1 bit of storage).
 * **packed** — physical nibble packing for the 4-bit int grid: two
-  offset-binary codes per uint8 byte (the MLWeaving-style any-precision
-  memory layout the serving KV cache stores). Logical semantics are
-  identical to the unpacked int4 grid; only the storage bytes halve.
+  offset-binary codes per uint8 byte (what the serving KV cache stores).
+  Logical semantics are identical to the unpacked int4 grid; only the
+  storage bytes halve.
+* **layout** — 'dense' (one code per element, the default) or 'bitplane'
+  (MLWeaving bit-serial storage: a sign plane + ``bits`` magnitude planes,
+  MSB first, each packed 32 elements per uint32 word). One bitplane
+  artifact serves ANY precision 1..bits — ``QTensor.slice_planes(k)`` is a
+  pure view whose decode is value-identical to direct k-bit encoding,
+  because the magnitude is truncated (⌊|x|·2^B/scale⌋ nests under
+  right-shift where nearest rounding would not).
 
 Schemes are frozen/hashable so they ride as static pytree aux data on
 ``QTensor`` — ``jit``/``vmap``/``lax.scan`` treat them as compile-time
@@ -31,6 +38,7 @@ import dataclasses
 GRIDS = ("int", "zipml", "levels")
 SCALINGS = ("tensor", "row", "column", "channel")
 ROUNDINGS = ("stochastic", "nearest", "ds")
+LAYOUTS = ("dense", "bitplane")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +51,9 @@ class QScheme:
     s: int = 0                 # zipml intervals; 0 → 2**bits − 1
     channel_axis: int = -2     # reduction axis for 'channel' scaling
     packed: bool = False       # nibble-packed storage (int grid, bits=4)
+    layout: str = "dense"      # physical storage: 'dense' | 'bitplane'
+    vec_dim: int = 0           # bitplane only: logical last-dim length
+                               # (set at encode time; words lose ceil info)
 
     def __post_init__(self):
         if self.grid not in GRIDS:
@@ -53,6 +64,20 @@ class QScheme:
             raise ValueError(f"unknown rounding {self.rounding!r}; have {ROUNDINGS}")
         if self.packed and (self.grid != "int" or self.bits != 4 or not self.signed):
             raise ValueError("packed storage is the signed 4-bit int grid only")
+        if self.layout not in LAYOUTS:
+            raise ValueError(f"unknown layout {self.layout!r}; have {LAYOUTS}")
+        if self.layout == "bitplane":
+            if self.grid != "int" or not self.signed or self.packed:
+                raise ValueError(
+                    "bitplane layout is the signed int grid only (unpacked)")
+            if not 1 <= self.bits <= 8:
+                raise ValueError(
+                    f"bitplane layout serves 1..8 bits, got {self.bits}")
+            if self.rounding != "nearest":
+                # bitplane magnitudes are truncated so plane slices nest;
+                # stochastic/ds rounding cannot nest, so the scheme pins the
+                # deterministic mode
+                raise ValueError("bitplane layout requires rounding='nearest'")
         if self.grid == "zipml" and self.s == 0:
             object.__setattr__(self, "s", 2 ** self.bits - 1)
 
@@ -66,9 +91,12 @@ class QScheme:
     def code_bits(self) -> int:
         """Storage width of one code in bits (host-side; satellite of the old
         ``Quantized.nbits`` which ran ``jnp.ceil(jnp.log2(...))`` on a Python
-        int). For the zipml grid this is ⌈log₂(s+1)⌉ = s.bit_length()."""
+        int). For the zipml grid this is ⌈log₂(s+1)⌉ = s.bit_length(); a
+        bitplane tensor pays +1 for the sign plane."""
         if self.grid == "zipml":
             return max(int(self.s).bit_length(), 1)
+        if self.layout == "bitplane":
+            return self.bits + 1
         return self.bits
 
     def with_rounding(self, rounding: str) -> "QScheme":
@@ -92,6 +120,16 @@ class QScheme:
         uint8 byte — same values, half the storage bytes."""
         return cls(bits=int(bits), grid="int", scaling=scaling,
                    rounding=rounding, channel_axis=channel_axis, packed=packed)
+
+    @classmethod
+    def bitplane(cls, bits: int = 8, *, scaling: str = "channel",
+                 channel_axis: int = -2) -> "QScheme":
+        """MLWeaving bit-serial storage: sign plane + ``bits`` magnitude
+        planes (MSB first), 32 elements per uint32 word. One artifact serves
+        any precision 1..bits via ``QTensor.slice_planes(k)``."""
+        return cls(bits=int(bits), grid="int", scaling=scaling,
+                   rounding="nearest", channel_axis=channel_axis,
+                   layout="bitplane")
 
     @classmethod
     def levels(cls, n_levels: int, *, rounding: str = "nearest") -> "QScheme":

@@ -8,20 +8,27 @@
   ``PrecisionPlan.kv_bits`` (pages.py).
 * :func:`sample_tokens` — greedy / temperature / top-k with per-request
   keys (sampling.py).
+* :class:`PrecisionAutoscaler` + :class:`AutoscalerConfig` — the
+  load-adaptive precision governor: walks a bits ladder against an
+  admission-latency SLO with hysteresis; the engine actuates it through
+  ``set_weight_bits`` on bit-plane weights (autoscaler.py).
 
 The decode hot loop dispatches through :mod:`repro.kernels.registry`'s
 ``paged_attention`` op: ``ref`` gathers pages and reuses the legacy decode
 softmax (bit-exact with the ring buffer); ``pallas`` streams pages by block
 table with in-kernel int8/int4 dequantization (kernels/paged_attn.py).
 """
+from .autoscaler import AutoscalerConfig, PrecisionAutoscaler
 from .engine import Finished, Request, ServeEngine
 from .pages import PageAllocator, PagedKVPool, init_pool, pool_nbytes
 from .sampling import sample_tokens
 
 __all__ = [
+    "AutoscalerConfig",
     "Finished",
     "PageAllocator",
     "PagedKVPool",
+    "PrecisionAutoscaler",
     "Request",
     "ServeEngine",
     "init_pool",

@@ -36,6 +36,15 @@ Scheduling model (Orca-style iteration-level batching):
   as prompt would instead read full-precision K/V where the original decode
   read quantized pages, and diverge.
 
+* **precision autoscaling** (optional): bit-plane weights
+  (``quantize_param_tree(..., layout='bitplane')``) make serving precision a
+  per-step dial — ``set_weight_bits(k)`` swaps in a cached
+  ``slice_planes(k)`` view of every weight (zero repack, no reload; decode
+  streams (k+1)/(B+1) of the code bytes). Attach a
+  :class:`repro.serve.autoscaler.PrecisionAutoscaler` and ``step()`` feeds
+  it the head-of-line admission wait + queue depth each iteration and
+  actuates the bits it returns.
+
 Invariants the tests pin: every admitted request finishes; no page leaks;
 per-request outputs are independent of batch composition; paged decode
 matches the legacy ring path.
@@ -59,7 +68,7 @@ from repro.kernels import registry
 from repro.models import attention as attn
 from repro.models import transformer as T
 from repro.models.layers import dense, embed, rmsnorm
-from repro.quant import PrecisionPlan
+from repro.quant import PrecisionPlan, QTensor
 from repro.serve import pages as pg
 from repro.serve import sampling
 
@@ -93,7 +102,8 @@ class ServeEngine:
     def __init__(self, params, cfg, *, plan: PrecisionPlan | None = None,
                  max_slots: int = 4, page_size: int = 8,
                  max_seq_len: int = 128, n_pages: int | None = None,
-                 reserve: str = "full", backend: str | None = None):
+                 reserve: str = "full", backend: str | None = None,
+                 autoscaler=None, clock=None):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise ValueError(
                 f"ServeEngine supports {SUPPORTED_FAMILIES} families, "
@@ -134,11 +144,18 @@ class ServeEngine:
         self._slots: list[dict | None] = [None] * B
         self._queue: collections.deque = collections.deque()
         self._admit_seq = 0
-        self._compiled_variants: set[bool] = set()
+        self._compiled_variants: set[tuple] = set()
         self.stats = {"admitted": 0, "finished": 0, "preemptions": 0,
                       "decode_steps": 0, "decode_tokens": 0,
                       "decode_seconds": 0.0, "steady_decode_tokens": 0,
-                      "prefill_tokens": 0}
+                      "prefill_tokens": 0, "admit_wait_seconds": 0.0}
+        self.admit_waits: list[float] = []      # per-admission queue wait, s
+        self.decode_times: list[float] = []     # steady per-step decode, s
+        self._clock = clock if clock is not None else time.perf_counter
+        self.autoscaler = autoscaler
+        self._params_full = params
+        self._params_by_bits: dict[int, Any] = {}
+        self.weight_bits: int | None = None     # None until set_weight_bits
 
         # two decode variants: the greedy-only one skips the sort +
         # categorical machinery entirely (the common case); lazily compiled
@@ -245,7 +262,8 @@ class ServeEngine:
                 f"request {req.rid} can never fit: needs {worst} pages, "
                 f"pool has {self.allocator.n_pages - 1}")
         self._queue.append({"req": req, "prompt": prompt,
-                            "replay": np.zeros((0,), np.int32)})
+                            "replay": np.zeros((0,), np.int32),
+                            "t_submit": self._clock()})
 
     @property
     def n_pending(self) -> int:
@@ -254,6 +272,38 @@ class ServeEngine:
     @property
     def n_active(self) -> int:
         return int(self._active.sum())
+
+    def set_weight_bits(self, k: int) -> None:
+        """Serve the next decode batches at ``k`` weight bits.
+
+        Swaps ``self.params`` for the tree whose bitplane QTensor weights are
+        ``slice_planes(k)`` views of the full artifact — a zero-copy plane
+        slice, so no weight reload and no repacking; decode simply streams
+        fewer code planes. Trees are cached per k (each k is one extra jit
+        trace of the decode step — the shapes differ — amortized after the
+        first switch). Requires ``layout='bitplane'`` weights
+        (``quantize_param_tree(..., layout='bitplane')``)."""
+        tree = self._params_by_bits.get(k)
+        if tree is None:
+            n_hit = [0]
+
+            def slice_leaf(leaf):
+                if (isinstance(leaf, QTensor)
+                        and leaf.scheme.layout == "bitplane"):
+                    n_hit[0] += 1
+                    return leaf.slice_planes(min(int(k), leaf.scheme.bits))
+                return leaf
+
+            tree = jax.tree.map(slice_leaf, self._params_full,
+                                is_leaf=lambda x: isinstance(x, QTensor))
+            if not n_hit[0]:
+                raise ValueError(
+                    "set_weight_bits needs layout='bitplane' QTensor weights "
+                    "— quantize with quantize_param_tree(..., "
+                    "layout='bitplane')")
+            self._params_by_bits[k] = tree
+        self.params = tree
+        self.weight_bits = int(k)
 
     def kv_pool_nbytes(self, used_only: bool = False) -> int:
         """Logical KV HBM bytes (QTensor.nbytes accounting; §2.2)."""
@@ -297,6 +347,9 @@ class ServeEngine:
             if ids is None:
                 return                              # FIFO head-of-line wait
             self._queue.popleft()
+            wait = max(0.0, self._clock() - entry["t_submit"])
+            self.stats["admit_wait_seconds"] += wait
+            self.admit_waits.append(wait)
             req = entry["req"]
             row = np.zeros((self.max_pages_per_seq,), np.int32)
             row[:len(ids)] = ids
@@ -391,7 +444,8 @@ class ServeEngine:
             np.asarray(state["gen"], np.int32),
             np.asarray(state["replay_left"], np.int32)])
         self._queue.appendleft({"req": state["req"],
-                                "prompt": state["prompt"], "replay": replay})
+                                "prompt": state["prompt"], "replay": replay,
+                                "t_submit": self._clock()})
         self.stats["preemptions"] += 1
         return slot
 
@@ -419,6 +473,15 @@ class ServeEngine:
         """One scheduler iteration: admit what fits, decode one token for
         every live sequence. Returns the requests that finished."""
         finished: list[Finished] = []
+        if self.autoscaler is not None:
+            now = self._clock()
+            wait = (max(0.0, now - self._queue[0]["t_submit"])
+                    if self._queue else 0.0)
+            bits = self.autoscaler.observe(
+                admit_wait_ms=wait * 1e3, queue_depth=len(self._queue),
+                now=now)
+            if bits != self.weight_bits:
+                self.set_weight_bits(bits)
         self._admit(finished)
         self._ensure_pages()
         if not self._active.any():
@@ -437,10 +500,12 @@ class ServeEngine:
         n_live = int(self._active.sum())
         self.stats["decode_steps"] += 1
         self.stats["decode_tokens"] += n_live
-        if sampled in self._compiled_variants:  # steady state: skip compiles
+        variant = (sampled, self.weight_bits)
+        if variant in self._compiled_variants:  # steady state: skip compiles
             self.stats["decode_seconds"] += dt
             self.stats["steady_decode_tokens"] += n_live
-        self._compiled_variants.add(sampled)
+            self.decode_times.append(dt)
+        self._compiled_variants.add(variant)
 
         for slot in range(self.max_slots):
             if not self._active[slot]:

@@ -26,11 +26,35 @@ class TestPublicExports:
         assert set(quant.__all__) == {
             "PrecisionPlan", "QScheme", "QTensor", "ShipWeight",
             "compute_scale", "decode", "dot", "ds_pair", "encode",
-            "pack_int4", "quant_dense", "quant_dense_q",
-            "quantize_to_levels_jnp", "tree_nbytes", "unpack_int4",
+            "pack_bitplanes", "pack_int4", "quant_dense", "quant_dense_q",
+            "quantize_to_levels_jnp", "tree_nbytes", "unpack_bitplanes",
+            "unpack_int4",
         }
         for name in quant.__all__:
             assert hasattr(quant, name), name
+
+    def test_quant_bitplane_symbols(self):
+        from repro.quant import QScheme
+        sch = QScheme.bitplane(4)
+        assert sch.layout == "bitplane" and sch.code_bits == 5
+        assert callable(QTensor.slice_planes)
+        assert callable(quant.pack_bitplanes)
+        assert callable(quant.unpack_bitplanes)
+
+    def test_serve_autoscaler_exports(self):
+        import repro.serve as serve
+        from repro.serve.autoscaler import (AutoscalerConfig,
+                                            PrecisionAutoscaler)
+        assert {"PrecisionAutoscaler", "AutoscalerConfig"} <= set(serve.__all__)
+        assert serve.PrecisionAutoscaler is PrecisionAutoscaler
+        assert serve.AutoscalerConfig is AutoscalerConfig
+        assert hasattr(serve.ServeEngine, "set_weight_bits")
+
+    def test_ckpt_ship_exports(self):
+        import repro.ckpt as ckpt
+        assert callable(ckpt.save_ship_weights)
+        assert callable(ckpt.load_ship_weights)
+        assert ckpt.ship.FORMAT == "weights-bitplane-v1"
 
     def test_plan_canonical_fields(self):
         import dataclasses
@@ -161,6 +185,22 @@ class TestNoSurvivingCopies:
         mirror, pinned bit-exact by tests/test_ds_fused.py)."""
         pat = re.compile(r"jax\.random\.uniform\([^)]*\)[^\n]*< \(t - lo\)"
                          r"|\(u < \(t - lo\)\)")
+        homes = []
+        for path in self._source_files():
+            if "kernels" in path.split(os.sep):
+                continue
+            if pat.search(open(path).read()):
+                homes.append(os.path.relpath(path, SRC))
+        assert homes == [self.ALLOWED_ROUNDING_HOME], homes
+
+    def test_one_bit_packing_implementation(self):
+        """Bit-level packing (bit-plane word assembly, nibble packing) lives
+        in repro.quant only — kernels/ hold the in-register unpack mirror
+        (pinned value-identical by tests/test_bitplane.py) and are skipped
+        like the stochastic-rounding mirror above."""
+        pat = re.compile(r"<<\s*shifts|>>\s*shifts"     # bit-plane words
+                         r"|\(hi\s*<<\s*4\)"            # nibble packing
+                         r"|&\s*0xF\b")                 # nibble unpacking
         homes = []
         for path in self._source_files():
             if "kernels" in path.split(os.sep):

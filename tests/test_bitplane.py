@@ -1,0 +1,325 @@
+"""Bit-plane (any-precision) storage pins — the PR-7 tentpole invariants:
+
+  * encode/decode round-trip bound and EXACT top-k-slice ≡ direct-k-bit
+    equivalence (the MLWeaving claim: one artifact, every precision)
+  * the Pallas qmm_bitplane kernel reconstructs codes in-register
+    value-identically to QTensor.decode (f32), on odd shapes, lead dims,
+    every scale family the kernel serves
+  * quant_dense integration: both backends, transpose fallback, ShipWeight
+    custom-vjp path untouched
+  * the precision autoscaler: hysteresis walk on a virtual clock
+  * the serving engine: set_weight_bits swaps sliced trees; serving a
+    slice_planes(k) view ≡ serving a direct k-bit quantization
+  * the weights-bitplane-v1 ship artifact: atomic layout, bits-at-load
+"""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import quant
+from repro.quant import QScheme, QTensor, quant_dense
+from repro.serve import AutoscalerConfig, PrecisionAutoscaler
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _w(shape, seed=0, sd=0.1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, sd, shape), jnp.float32)
+
+
+class TestBitplaneStorage:
+    def test_scheme_validation(self):
+        sch = QScheme.bitplane(4)
+        assert sch.layout == "bitplane" and sch.code_bits == 5
+        with pytest.raises(ValueError):
+            QScheme.bitplane(9)
+        with pytest.raises(ValueError):
+            QScheme(bits=4, grid="levels", layout="bitplane")
+        with pytest.raises(ValueError):
+            QScheme(bits=4, grid="int", packed=True, layout="bitplane")
+
+    def test_logical_shape_and_codes_layout(self):
+        w = _w((6, 70))
+        qt = quant.encode(w, QScheme.bitplane(4))
+        assert qt.codes.shape == (5, 6, 3)        # (planes, rows, ceil(70/32))
+        assert qt.codes.dtype == jnp.uint32
+        assert qt.shape == (6, 70) and qt.ndim == 2 and qt.size == 420
+        assert qt.nbytes == 5 * 6 * 3 * 4 + np.asarray(qt.scale).size * 4
+
+    @pytest.mark.parametrize("k", [1, 2, 4, 8])
+    def test_slice_equals_direct_encode(self, k):
+        w = _w((16, 48), sd=2.0)
+        full = quant.encode(w, QScheme.bitplane(8))
+        direct = quant.encode(w, QScheme.bitplane(k))
+        sliced = full.slice_planes(k)
+        np.testing.assert_array_equal(np.asarray(sliced.codes),
+                                      np.asarray(direct.codes))
+        np.testing.assert_array_equal(np.asarray(sliced.decode()),
+                                      np.asarray(direct.decode()))
+
+    def test_slice_planes_validation(self):
+        qt = quant.encode(_w((4, 32)), QScheme.bitplane(4))
+        assert qt.slice_planes(4) is qt            # full slice: pure view
+        for bad in (0, 5, -1):
+            with pytest.raises(ValueError):
+                qt.slice_planes(bad)
+        dense = quant.encode(_w((4, 32)),
+                             QScheme.int_symmetric(8, rounding="nearest"))
+        with pytest.raises(ValueError):
+            dense.slice_planes(4)
+
+    def test_stacked_layers_scan_slice(self):
+        """Stacked (L, R, D) weights keep the plane axis at -3, so lax.scan
+        over layers hands each step a (P, R, W) slice that decodes alone."""
+        w = _w((3, 8, 64))
+        qt = quant.encode(w, QScheme.bitplane(4))
+        assert qt.codes.shape == (3, 5, 8, 2)
+        full = np.asarray(qt.decode())
+
+        def body(c, q):
+            return c, q.decode()
+
+        _, per_layer = jax.lax.scan(body, 0, qt)
+        np.testing.assert_array_equal(np.asarray(per_layer), full)
+
+
+class TestQmmBitplaneKernel:
+    @pytest.mark.parametrize("k", [1, 2, 4, 8])
+    def test_kernel_matches_f32_decode(self, k):
+        """The in-register reconstruction is value-identical to
+        QTensor.decode in f32 — not merely close."""
+        from repro.kernels.qmm_bitplane import qmm_bitplane
+
+        w = _w((128, 128), sd=1.0)
+        x = _w((128, 128), seed=1).astype(jnp.bfloat16)
+        qt = quant.encode(w, QScheme.bitplane(k))
+        want = jnp.einsum("mk,kn->mn", x.astype(jnp.float32), qt.decode())
+        got = qmm_bitplane(x, qt.codes,
+                           jnp.asarray(qt.scale, jnp.float32).reshape(1, -1))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_quant_dense_both_backends_odd_shapes(self):
+        w = _w((96, 200))
+        x = _w((5, 96), seed=2).astype(jnp.bfloat16)
+        qt = quant.encode(w, QScheme.bitplane(4))
+        want = jnp.einsum("mk,kn->mn", x.astype(jnp.float32), qt.decode())
+        for be, atol in (("ref", 2e-2), ("pallas", 1e-4)):
+            got = quant_dense(x, qt, backend=be)
+            assert got.shape == (5, 200)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=atol, rtol=5e-3)
+
+    def test_quant_dense_transpose_fallback(self):
+        """The backward/transpose contraction has no bitplane kernel yet —
+        it must fall back to the decode path, not crash."""
+        w = _w((32, 64))
+        g = _w((5, 64), seed=3).astype(jnp.bfloat16)
+        qt = quant.encode(w, QScheme.bitplane(4))
+        want = jnp.einsum("mn,kn->mk", g.astype(jnp.float32), qt.decode())
+        for be in ("ref", "pallas"):
+            got = quant_dense(g, qt, transpose=True, backend=be)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=2e-2, rtol=5e-3)
+
+    def test_quant_dense_grad_flows(self):
+        w = _w((32, 64))
+        x = _w((4, 32), seed=4).astype(jnp.bfloat16)
+        qt = quant.encode(w, QScheme.bitplane(8))
+
+        def loss(x):
+            return jnp.sum(quant_dense(x, qt) ** 2)
+
+        gx = jax.grad(loss)(x)
+        assert gx.shape == x.shape
+        assert bool(jnp.isfinite(gx.astype(jnp.float32)).all())
+
+
+class TestPrecisionAutoscaler:
+    CFG = dict(slo_admit_ms=10.0, breach_patience=2, restore_patience=3,
+               restore_frac=0.5)
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            AutoscalerConfig(slo_admit_ms=0)
+        with pytest.raises(ValueError):
+            AutoscalerConfig(bits_ladder=())
+        with pytest.raises(ValueError):
+            AutoscalerConfig(bits_ladder=(4, 8))      # must decrease
+        with pytest.raises(ValueError):
+            AutoscalerConfig(restore_frac=1.5)
+
+    def test_env_default(self, monkeypatch):
+        monkeypatch.setenv("ZIPML_SLO_ADMIT_MS", "123.5")
+        assert AutoscalerConfig.from_env().slo_admit_ms == 123.5
+        assert AutoscalerConfig.from_env(slo_admit_ms=7.0).slo_admit_ms == 7.0
+
+    def test_drop_restore_walk_with_hysteresis(self):
+        asc = PrecisionAutoscaler(AutoscalerConfig(**self.CFG))
+        assert asc.bits == 8
+        # one breach is not enough (patience 2)
+        assert asc.observe(admit_wait_ms=50, now=0.0) == 8
+        assert asc.observe(admit_wait_ms=50, now=1.0) == 4
+        # dead band (between 0.5·slo and slo) holds the rung and resets
+        assert asc.observe(admit_wait_ms=7, now=2.0) == 4
+        assert asc.observe(admit_wait_ms=50, now=3.0) == 4   # counter reset
+        assert asc.observe(admit_wait_ms=50, now=4.0) == 2
+        # healthy streak restores one rung per patience window
+        for t in range(3):
+            bits = asc.observe(admit_wait_ms=1, now=5.0 + t)
+        assert bits == 4
+        assert [d["action"] for d in asc.decisions] == \
+            ["drop", "drop", "restore"]
+        assert all(d["t"] is not None for d in asc.decisions)
+
+    def test_floor_and_ceiling(self):
+        asc = PrecisionAutoscaler(AutoscalerConfig(
+            slo_admit_ms=10.0, bits_ladder=(8, 4), breach_patience=1,
+            restore_patience=1))
+        for _ in range(5):
+            bits = asc.observe(admit_wait_ms=100)
+        assert bits == 4                                 # clamped at floor
+        for _ in range(5):
+            bits = asc.observe(admit_wait_ms=0)
+        assert bits == 8                                 # clamped at ceiling
+        assert len(asc.decisions) == 2
+
+    def test_queue_high_guard(self):
+        asc = PrecisionAutoscaler(AutoscalerConfig(
+            slo_admit_ms=10.0, breach_patience=1, queue_high=4))
+        assert asc.observe(admit_wait_ms=0, queue_depth=10) == 4
+
+
+def _tiny_engine(params, cfg, **kw):
+    from repro.quant import PrecisionPlan
+    from repro.serve import ServeEngine
+
+    return ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=8),
+                       max_slots=2, page_size=4, max_seq_len=32, **kw)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    from repro import configs
+    from repro.models import transformer as T
+
+    cfg = configs.get_reduced("qwen2.5-14b")
+    return cfg, T.init_params(KEY, cfg)
+
+
+class TestEngineBitplaneServing:
+    def _reqs(self, n=3):
+        from repro.serve import Request
+
+        return [Request(rid=i, prompt=np.arange(1, 5 + i), max_new_tokens=6)
+                for i in range(n)]
+
+    def test_set_weight_bits_requires_bitplane(self, tiny_model):
+        cfg, params = tiny_model
+        eng = _tiny_engine(params, cfg)
+        with pytest.raises(ValueError, match="bitplane"):
+            eng.set_weight_bits(4)
+
+    def test_sliced_serving_equals_direct_quantization(self, tiny_model):
+        """Serving the top-2 planes of the 8-bit artifact produces the same
+        tokens as serving weights quantized directly at 2 bits — the
+        any-precision invariant end-to-end through the engine."""
+        from repro.precision.qat import quantize_param_tree
+
+        cfg, params = tiny_model
+        bp8 = quantize_param_tree(params, bits=8, layout="bitplane")
+        bp2 = quantize_param_tree(params, bits=2, layout="bitplane")
+
+        eng = _tiny_engine(bp8, cfg)
+        eng.set_weight_bits(2)
+        got = {r: f.tokens.tolist() for r, f in eng.run(self._reqs()).items()}
+        direct = _tiny_engine(bp2, cfg)
+        want = {r: f.tokens.tolist()
+                for r, f in direct.run(self._reqs()).items()}
+        assert got == want
+        assert sorted(eng._params_by_bits) == [2]
+        eng.allocator.check_leaks(0)
+
+    def test_autoscaler_drives_engine_on_virtual_clock(self, tiny_model):
+        from repro.precision.qat import quantize_param_tree
+        from repro.serve import Request
+
+        cfg, params = tiny_model
+        bp = quantize_param_tree(params, bits=8, layout="bitplane")
+        clk = [0.0]
+        asc = PrecisionAutoscaler(AutoscalerConfig(
+            slo_admit_ms=10.0, breach_patience=1, restore_patience=2))
+        eng = _tiny_engine(bp, cfg, autoscaler=asc, clock=lambda: clk[0])
+        for i in range(4):
+            eng.submit(Request(rid=i, prompt=np.arange(1, 6),
+                               max_new_tokens=4))
+        clk[0] = 0.5                       # 500 ms head-of-line wait: breach
+        done = {}
+        for _ in range(60):
+            clk[0] += 0.001
+            for f in eng.step():
+                done[f.rid] = f
+            if not eng._queue and not eng._active.any():
+                break
+        assert sorted(done) == [0, 1, 2, 3]
+        assert any(d["action"] == "drop" for d in asc.decisions)
+        assert eng.weight_bits == asc.bits
+        assert len(eng.admit_waits) >= 4
+        eng.allocator.check_leaks(0)
+
+
+class TestShipArtifact:
+    def test_roundtrip_and_bits_at_load(self, tiny_model, tmp_path):
+        from repro.ckpt import load_ship_weights, save_ship_weights
+        from repro.precision.qat import quantize_param_tree
+
+        cfg, params = tiny_model
+        bp = quantize_param_tree(params, bits=8, layout="bitplane")
+        d = str(tmp_path / "ship")
+        save_ship_weights(d, bp, extra={"arch": "test"})
+        assert sorted(os.listdir(d)) == [".complete", "arrays.npz",
+                                         "manifest.json"]
+
+        is_qt = lambda x: isinstance(x, QTensor)  # noqa: E731
+        full = load_ship_weights(d)
+        for a, b in zip(jax.tree.leaves(bp, is_leaf=is_qt),
+                        jax.tree.leaves(full, is_leaf=is_qt)):
+            if isinstance(a, QTensor):
+                np.testing.assert_array_equal(np.asarray(a.codes),
+                                              np.asarray(b.codes))
+                np.testing.assert_array_equal(np.asarray(a.scale),
+                                              np.asarray(b.scale))
+                assert a.scheme == b.scheme
+            else:
+                assert a.dtype == b.dtype
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        k2 = load_ship_weights(d, bits=2)
+        direct = quantize_param_tree(params, bits=2, layout="bitplane")
+        for a, b in zip(jax.tree.leaves(k2, is_leaf=is_qt),
+                        jax.tree.leaves(direct, is_leaf=is_qt)):
+            if isinstance(a, QTensor):
+                np.testing.assert_array_equal(np.asarray(a.codes),
+                                              np.asarray(b.codes))
+
+    def test_rejects_non_bitplane_and_bad_bits(self, tiny_model, tmp_path):
+        from repro.ckpt import load_ship_weights, save_ship_weights
+        from repro.precision.qat import quantize_param_tree
+
+        cfg, params = tiny_model
+        with pytest.raises(ValueError, match="bitplane"):
+            save_ship_weights(str(tmp_path / "a"), params)
+        with pytest.raises(ValueError, match="layout"):
+            save_ship_weights(str(tmp_path / "b"),
+                              quantize_param_tree(params, bits=8))
+        bp = quantize_param_tree(params, bits=8, layout="bitplane")
+        d = str(tmp_path / "ship")
+        save_ship_weights(d, bp)
+        with pytest.raises(ValueError, match="not servable"):
+            load_ship_weights(d, bits=9)
+        with pytest.raises(FileNotFoundError):
+            load_ship_weights(str(tmp_path / "missing"))

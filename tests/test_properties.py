@@ -179,6 +179,71 @@ class TestQSchemeGridProperties:
             np.asarray(codes, np.float32))
 
 
+class TestBitplaneProperties:
+    """The any-precision contract of ``layout='bitplane'`` storage: the
+    round-trip error bound holds at every bit width × scaling family, a
+    top-k plane slice decodes EXACTLY like quantizing directly at k bits
+    (scale is bits-independent and the magnitude truncation nests), and the
+    physical bytes are linear in the planes kept."""
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1), bits=st.integers(1, 8),
+           scaling=st.sampled_from(SCALINGS))
+    def test_roundtrip_within_one_step(self, seed, bits, scaling):
+        x = _grid_matrix(seed)
+        qt = quant.encode(x, QScheme.bitplane(bits, scaling=scaling))
+        assert qt.codes.dtype == jnp.uint32
+        assert qt.shape == x.shape
+        step = _bcast_scale(qt, x.shape) * 2.0 ** -bits
+        err = np.abs(np.asarray(qt.decode()) - np.asarray(x))
+        # truncation: one full step, plus fp32 rounding of mag·scale·2^-bits
+        # (relative to |x| ≈ step·2^bits, hence the 1e-4 headroom at bits=8)
+        tol = step * (1 + 1e-4) + 1e-7
+        assert (err <= tol).all(), float((err - tol).max())
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1), k=st.sampled_from([1, 2, 4, 8]),
+           scaling=st.sampled_from(SCALINGS))
+    def test_plane_slice_equals_direct_encode(self, seed, k, scaling):
+        """slice_planes(k) of the 8-bit artifact ≡ encoding at k bits — the
+        MLWeaving any-precision invariant, exact (not approximate)."""
+        x = _grid_matrix(seed)
+        full = quant.encode(x, QScheme.bitplane(8, scaling=scaling))
+        direct = quant.encode(x, QScheme.bitplane(k, scaling=scaling))
+        sliced = full.slice_planes(k)
+        np.testing.assert_array_equal(np.asarray(sliced.codes),
+                                      np.asarray(direct.codes))
+        np.testing.assert_array_equal(np.asarray(sliced.decode()),
+                                      np.asarray(direct.decode()))
+        assert sliced.scheme.bits == k
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1),
+           scaling=st.sampled_from(["tensor", "channel"]))
+    def test_nbytes_linear_in_planes(self, seed, scaling):
+        """Code bytes of a k-bit slice are exactly (k+1)/(B+1) of the full
+        artifact's — the byte-per-plane increment is constant."""
+        x = _grid_matrix(seed)
+        full = quant.encode(x, QScheme.bitplane(8, scaling=scaling))
+        scale_b = np.asarray(full.scale).size * 4
+        code_b = {k: full.slice_planes(k).nbytes - scale_b for k in range(1, 9)}
+        per_plane = code_b[8] // 9
+        assert code_b[8] == 9 * per_plane
+        for k in range(1, 9):
+            assert code_b[k] == (k + 1) * per_plane, (k, code_b)
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1), d=st.integers(1, 70))
+    def test_pack_unpack_bitplanes_roundtrip(self, seed, d):
+        rng = np.random.default_rng(seed)
+        planes = jnp.asarray(rng.integers(0, 2, (3, 4, d)), jnp.uint32)
+        words = quant.pack_bitplanes(planes)
+        assert words.dtype == jnp.uint32
+        assert words.shape == (3, 4, -(-d // 32))
+        np.testing.assert_array_equal(
+            np.asarray(quant.unpack_bitplanes(words, d)), np.asarray(planes))
+
+
 class TestOptimalLevelProperties:
     @settings(**SETTINGS)
     @given(seed=st.integers(0, 2**31 - 1), s=st.sampled_from([2, 3, 7]),
