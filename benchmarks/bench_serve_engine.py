@@ -24,6 +24,16 @@ low-precision storage is near-linear speedup):
 The trace (``--smoke``/quick: 16 requests) mixes prompt lengths 4–32 and
 generation lengths 4–16 over 4 decode slots — enough churn that admission,
 page growth, and page recycling all fire.
+
+The ``prefix_*`` rows replay a shared-system-prompt trace (4 prompt
+families, 256 requests full / 64 quick) through a cold chunked engine
+(empty cache) and a warm ``prefix_cache=True, chunk_pages=2`` engine at
+each KV precision, and CHECK: prefill tokens cut ≥ 2×, outputs
+token-identical to cold-start, refcounted pages drain leak-free, and
+chunked prefill bounds the per-step prefill burst to one chunk — below a
+monolithic engine's whole-prompt admission burst. The ``replicas_2`` row
+runs the same trace through a 2-replica
+:class:`~repro.launch.serve.ReplicaSet` and CHECKs balanced dispatch.
 """
 from __future__ import annotations
 
@@ -43,6 +53,29 @@ from repro.serve import ServeEngine
 # amortize the scale too poorly to show the claim
 ARCH = "qwen2.5-14b"
 HEAD_DIM = 64
+
+
+def make_shared_trace(n_requests: int, vocab_size: int, *, page_size: int = 8,
+                      sys_pages: int = 4, n_families: int = 4,
+                      max_new: int = 8, seed: int = 1):
+    """A serving trace with shared system prompts: every request opens with
+    one of ``n_families`` fixed ``sys_pages``-page system prompts followed by
+    a short unique suffix — the workload shape prefix caching exists for."""
+    from repro.serve import Request
+
+    rng = np.random.default_rng(seed)
+    families = [rng.integers(0, vocab_size, sys_pages * page_size)
+                for _ in range(n_families)]
+    reqs = []
+    for rid in range(n_requests):
+        sys_prompt = families[int(rng.integers(0, n_families))]
+        suffix = rng.integers(
+            0, vocab_size, int(rng.integers(2, 2 * page_size)))
+        g = int(rng.integers(max(1, max_new // 2), max_new + 1))
+        reqs.append(Request(rid=rid,
+                            prompt=np.concatenate([sys_prompt, suffix]),
+                            max_new_tokens=g, seed=seed))
+    return reqs
 
 
 def run(quick: bool = False):
@@ -105,6 +138,93 @@ def run(quick: bool = False):
         "int4_step_ms_min": round(step_min_ms[4], 3),
         "int8_step_ms_min": round(step_min_ms[8], 3),
         "int4_decode_not_slower_than_int8": bool(t_ratio <= 1.15),
+    })
+
+    # -- prefix sharing + chunked prefill ----------------------------------
+    # Same shared-system-prompt trace through a cold chunked engine (empty
+    # cache) and a warm prefix-cache engine, per KV precision. CHECKs: the
+    # cache cuts prefill tokens >= 2x, outputs stay token-identical to
+    # cold-start (greedy), and refcounted pages drain leak-free. The cold
+    # baseline is *chunked*, not monolithic: chunked prefill quantizes each
+    # chunk's K/V before attending (decode-consistent, what makes prefix
+    # hits exact) while monolithic prefill attends full-precision within the
+    # prompt, so the two legitimately diverge at int8/int4 KV. A single
+    # monolithic run supplies the stall baseline: chunking must bound the
+    # per-step prefill burst to one chunk, far below whole-prompt admission.
+    n_shared = 64 if quick else 256
+    page, cp, sys_pages = 8, 2, 4
+    chunk_tokens = cp * page
+
+    def mk_shared(kv_bits, **kw):
+        return ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=kv_bits),
+                           max_slots=4, page_size=page, max_seq_len=64, **kw)
+
+    def shared_trace():
+        return make_shared_trace(n_shared, cfg.vocab_size, page_size=page,
+                                 sys_pages=sys_pages)
+
+    mono = mk_shared(8)
+    mono.run(shared_trace())
+    mono.allocator.check_leaks(0)
+    stall_mono = mono.stats["max_prefill_tokens_per_step"]
+
+    for kv_bits in (0, 8, 4):
+        kv_name = "bf16" if kv_bits == 0 else f"int{kv_bits}"
+        cold = mk_shared(kv_bits, chunk_pages=cp)
+        cold_results = cold.run(shared_trace())
+        cold.allocator.check_leaks(0)
+
+        warm = mk_shared(kv_bits, prefix_cache=True, chunk_pages=cp)
+        warm_results = warm.run(shared_trace())
+        assert len(warm_results) == n_shared
+        warm.release_prefix_cache()
+        warm.allocator.check_leaks(0)
+
+        identical = all(
+            np.array_equal(cold_results[rid].tokens, warm_results[rid].tokens)
+            for rid in cold_results)
+        pf_cold = cold.stats["prefill_tokens"]
+        pf_warm = warm.stats["prefill_tokens"]
+        stall_warm = warm.stats["max_prefill_tokens_per_step"]
+        rows.append({
+            "case": f"prefix_{kv_name}",
+            "requests": n_shared,
+            "prefix_hits": warm.stats["prefix_hits"],
+            "prefix_hit_tokens": warm.stats["prefix_hit_tokens"],
+            "prefill_tokens_cold": pf_cold,
+            "prefill_tokens_warm": pf_warm,
+            "max_prefill_per_step_mono": stall_mono,
+            "max_prefill_per_step_warm": stall_warm,
+            "prefix_prefill_reduction_ge_2x": bool(pf_cold >= 2 * pf_warm),
+            "prefix_hit_token_identical": bool(identical),
+            "prefix_pages_leak_free": True,      # check_leaks(0) above raised
+            "chunked_bounds_prefill_stall": bool(
+                stall_warm <= chunk_tokens < stall_mono),
+        })
+
+    # -- multi-replica scaling: 2 engines behind one shared queue -----------
+    from repro.launch.serve import ReplicaSet
+
+    n_rep = 32 if quick else 64
+    rs = ReplicaSet(
+        lambda i: ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=8),
+                              max_slots=4, page_size=page, max_seq_len=64,
+                              prefix_cache=True, chunk_pages=cp),
+        2)
+    rep_results = rs.run(make_shared_trace(n_rep, cfg.vocab_size,
+                                           page_size=page,
+                                           sys_pages=sys_pages))
+    for eng in rs.engines:
+        eng.release_prefix_cache()
+        eng.allocator.check_leaks(0)
+    rows.append({
+        "case": "replicas_2",
+        "requests": n_rep,
+        "dispatch": list(rs.dispatched),
+        "prefix_hits": rs.stats_sum("prefix_hits"),
+        "replicas_all_finished": bool(len(rep_results) == n_rep),
+        "replicas_dispatch_balanced": bool(
+            min(rs.dispatched) >= n_rep // 4),
     })
 
     # -- weight path at int storage: every model matmul streams codes -------

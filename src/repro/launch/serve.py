@@ -1,11 +1,22 @@
 """Serving driver — a thin CLI over the continuous-batching engine
 (repro/serve/engine.py) with the ZipML serving channels: int8 weights at
-rest, bf16/int8/packed-int4 paged KV cache.
+rest, bf16/int8/packed-int4 paged KV cache, prefix sharing + chunked
+prefill, and a multi-replica data-parallel front-end.
 
 Engine mode (default) serves a mixed-length synthetic trace:
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
-      --requests 16 --max-new 24 --kv-bits 4 --page-size 8
+      --requests 16 --max-new 24 --kv-bits 4 --page-size 8 \
+      --prefix-cache --chunk-pages 2
+
+Multi-replica mode (``--replicas N``) runs N engines — one paged pool and
+prefix cache each, data-parallel over the host's devices when several are
+visible (same placement policy as launch/sharding.py's data axis) — behind
+one shared submit queue with least-loaded dispatch:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
+      --requests 64 --replicas 4 --prefix-cache
 
 Legacy single-shot mode (the pre-engine fixed-batch greedy loop, kept as a
 compatibility wrapper around the ring-buffer cache):
@@ -16,6 +27,8 @@ compatibility wrapper around the ring-buffer cache):
 from __future__ import annotations
 
 import argparse
+import collections
+import contextlib
 import dataclasses
 import time
 
@@ -122,6 +135,102 @@ def make_trace(n_requests: int, vocab_size: int, *, max_new: int = 16,
     return reqs
 
 
+class ReplicaSet:
+    """N serving engines behind one shared submit queue (data parallelism at
+    the request level — the multi-replica rung below tensor sharding).
+
+    Each replica is a full :class:`~repro.serve.ServeEngine` — its own paged
+    pool, prefix cache (sharing is per-replica; the dispatcher's job is to
+    keep a prefix family's requests landing on the same replica via the
+    shared queue's FIFO order + least-loaded choice), and jit caches.
+    ``devices`` optionally pins replica i's arrays and dispatches to
+    ``devices[i % len(devices)]`` (``jax.default_device``), which is exactly
+    the data-parallel placement ``launch/sharding.py`` meshes give one
+    process per device group.
+
+    Dispatch is least-loaded with bounded backlog: a queued request is
+    handed to the replica with the fewest in-flight-plus-pending requests,
+    but only while that backlog is under ``2 × max_slots`` — otherwise it
+    stays in the shared queue, so one slow replica can't hoard the tail of
+    the trace.
+    """
+
+    def __init__(self, factory, n_replicas: int, *, devices=None):
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        self.devices = list(devices) if devices else None
+        self.engines = []
+        for i in range(n_replicas):
+            with self._device_ctx(i):
+                self.engines.append(factory(i))
+        self._queue: collections.deque = collections.deque()
+        self.dispatched = [0] * n_replicas
+
+    def _device_ctx(self, i: int):
+        if self.devices is None:
+            return contextlib.nullcontext()
+        return jax.default_device(self.devices[i % len(self.devices)])
+
+    def submit(self, req) -> None:
+        self._queue.append(req)
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._queue) + sum(e.n_pending for e in self.engines)
+
+    def _dispatch(self) -> None:
+        while self._queue:
+            loads = [e.n_active + e.n_prefilling + e.n_pending
+                     for e in self.engines]
+            i = min(range(len(loads)), key=lambda j: loads[j])
+            if loads[i] >= 2 * self.engines[i].max_slots:
+                return
+            with self._device_ctx(i):
+                self.engines[i].submit(self._queue.popleft())
+            self.dispatched[i] += 1
+
+    def step(self) -> dict:
+        """One dispatch pass + one scheduler step on every busy replica."""
+        self._dispatch()
+        finished = {}
+        for i, eng in enumerate(self.engines):
+            if not eng.busy:
+                continue
+            with self._device_ctx(i):
+                for f in eng.step():
+                    finished[f.rid] = f
+        return finished
+
+    def run(self, requests=None, max_steps: int = 100_000) -> dict:
+        for r in requests or ():
+            self.submit(r)
+        out: dict = {}
+        for _ in range(max_steps):
+            if not self._queue and not any(e.busy for e in self.engines):
+                return out
+            before = self._progress()
+            out.update(self.step())
+            if self._progress() == before:
+                raise RuntimeError("replica set stalled — no engine "
+                                   "admitted, prefilled, decoded, or finished")
+        raise RuntimeError(f"ReplicaSet.run exceeded {max_steps} steps")
+
+    def _progress(self) -> tuple:
+        return (len(self._queue),
+                tuple((e.n_pending, e.n_active, e.n_prefilling,
+                       e.stats["decode_steps"], e.stats["prefill_tokens"])
+                      for e in self.engines))
+
+    def stats_sum(self, key: str):
+        return sum(e.stats[key] for e in self.engines)
+
+    def throughput(self) -> float:
+        """Aggregate steady-state decode tokens/s across replicas."""
+        tps = [e.throughput() for e in self.engines]
+        good = [t for t in tps if t == t]          # drop NaN (idle replica)
+        return sum(good) if good else float("nan")
+
+
 def serve_engine(arch: str, *, reduced: bool = True, n_requests: int = 16,
                  max_new: int = 16, min_prompt: int = 4, max_prompt: int = 32,
                  kv_bits: int = 0, weight_bits: int = 0,
@@ -130,15 +239,20 @@ def serve_engine(arch: str, *, reduced: bool = True, n_requests: int = 16,
                  page_size: int = 8, temperature: float = 0.0,
                  top_k: int = 0, backend: str | None = None,
                  weight_layout: str = "dense", autoscale: bool = False,
-                 slo_admit_ms: float | None = None):
+                 slo_admit_ms: float | None = None,
+                 prefix_cache: bool = False, chunk_pages: int | None = None,
+                 replicas: int = 1, devices=None):
     """Serve a mixed-length trace through the continuous-batching engine.
 
     ``weight_layout='bitplane'`` stores the weights bit-serially (one
     artifact, any precision); ``autoscale=True`` then attaches the
     :class:`repro.serve.PrecisionAutoscaler` so load drops/restores weight
     bits against the admission SLO (``slo_admit_ms``, default from
-    ``$ZIPML_SLO_ADMIT_MS``). Returns (engine, results dict rid → Finished).
-    Throughput/byte stats via ``engine.throughput()`` /
+    ``$ZIPML_SLO_ADMIT_MS``). ``prefix_cache``/``chunk_pages`` enable prefix
+    sharing and chunked prefill; ``replicas > 1`` serves the trace through a
+    :class:`ReplicaSet` (one engine per replica, shared queue; ``devices``
+    pins replicas round-robin). Returns (engine-or-replicaset, results dict
+    rid → Finished). Throughput/byte stats via ``engine.throughput()`` /
     ``engine.kv_pool_nbytes()`` / ``engine.stats``.
     """
     from repro.serve import AutoscalerConfig, PrecisionAutoscaler, ServeEngine
@@ -146,22 +260,33 @@ def serve_engine(arch: str, *, reduced: bool = True, n_requests: int = 16,
     plan = _resolve_plan(plan, kv_bits, weight_bits, optimal_levels)
     cfg, params, _ = _build(arch, reduced=reduced, plan=plan, seed=seed,
                             weight_layout=weight_layout)
-    autoscaler = None
-    if autoscale:
+
+    def mk_autoscaler():
+        if not autoscale:
+            return None
         if weight_layout != "bitplane" or not plan.model_bits:
             raise ValueError(
                 "autoscale needs --weight-layout bitplane with weight_bits > 0")
         over = {} if slo_admit_ms is None else {"slo_admit_ms": slo_admit_ms}
         ladder = tuple(b for b in (8, 4, 2, 1) if b <= plan.model_bits)
-        autoscaler = PrecisionAutoscaler(
+        return PrecisionAutoscaler(
             AutoscalerConfig.from_env(bits_ladder=ladder, **over))
+
     max_seq_len = max_prompt + max_new + page_size
-    engine = ServeEngine(params, cfg, plan=plan, max_slots=max_slots,
-                         page_size=page_size, max_seq_len=max_seq_len,
-                         backend=backend, autoscaler=autoscaler)
+
+    def factory(_i):
+        return ServeEngine(params, cfg, plan=plan, max_slots=max_slots,
+                           page_size=page_size, max_seq_len=max_seq_len,
+                           backend=backend, autoscaler=mk_autoscaler(),
+                           prefix_cache=prefix_cache, chunk_pages=chunk_pages)
+
     trace = make_trace(n_requests, cfg.vocab_size, max_new=max_new,
                        min_prompt=min_prompt, max_prompt=max_prompt,
                        seed=seed, temperature=temperature, top_k=top_k)
+    if replicas > 1:
+        rs = ReplicaSet(factory, replicas, devices=devices)
+        return rs, rs.run(trace)
+    engine = factory(0)
     results = engine.run(trace)
     return engine, results
 
@@ -182,6 +307,13 @@ def main(argv=None):
                     help="admission-latency SLO for --autoscale "
                          "(default $ZIPML_SLO_ADMIT_MS or 50)")
     ap.add_argument("--kernel-backend", default=None, choices=(None, "ref", "pallas"))
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share page-aligned prompt prefixes across requests")
+    ap.add_argument("--chunk-pages", type=int, default=None,
+                    help="chunked prefill: pages per prefill chunk "
+                         "(implies interleaved prefill/decode)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind a shared submit queue")
     # engine mode (default)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
@@ -217,14 +349,42 @@ def main(argv=None):
         max_slots=args.max_slots, page_size=args.page_size,
         temperature=args.temperature, top_k=args.top_k,
         backend=args.kernel_backend, weight_layout=args.weight_layout,
-        autoscale=args.autoscale, slo_admit_ms=args.slo_admit_ms)
-    st = engine.stats
+        autoscale=args.autoscale, slo_admit_ms=args.slo_admit_ms,
+        prefix_cache=args.prefix_cache, chunk_pages=args.chunk_pages,
+        replicas=args.replicas)
     gen_total = sum(f.n_generated for f in results.values())
+    if isinstance(engine, ReplicaSet):
+        rs = engine
+        print(f"[serve-engine] {len(results)} requests across "
+              f"{len(rs.engines)} replicas, {gen_total} tokens generated "
+              f"(dispatch={rs.dispatched})")
+        print(f"[serve-engine] aggregate steady-state decode: "
+              f"{rs.throughput():.1f} tok/s; "
+              f"preemptions={rs.stats_sum('preemptions')}")
+        for i, eng in enumerate(rs.engines):
+            st = eng.stats
+            line = (f"[serve-engine]   replica {i}: "
+                    f"{st['decode_steps']} decode steps, "
+                    f"{st['prefill_tokens']} prefill tokens")
+            if args.prefix_cache:
+                line += (f", prefix hits={st['prefix_hits']} "
+                         f"({st['prefix_hit_tokens']} tokens skipped)")
+            print(line)
+        return
+    st = engine.stats
     print(f"[serve-engine] {len(results)} requests, {gen_total} tokens "
           f"generated in {st['decode_steps']} decode steps "
           f"(+{st['prefill_tokens']} prefill tokens)")
     print(f"[serve-engine] steady-state decode: {engine.throughput():.1f} "
           f"tok/s; preemptions={st['preemptions']}")
+    if args.prefix_cache:
+        print(f"[serve-engine] prefix cache: {st['prefix_hits']} hits / "
+              f"{st['prefix_misses']} misses, "
+              f"{st['prefix_hit_tokens']} prefill tokens skipped "
+              f"({engine.prefix.n_pages} pages cached)")
+    if args.chunk_pages or args.prefix_cache:
+        print(f"[serve-engine] chunked prefill: {st['prefill_chunks']} chunks, "
+              f"max {st['max_prefill_tokens_per_step']} prefill tokens/step")
     print(f"[serve-engine] KV pool: {engine.kv_pool_nbytes():,} bytes "
           f"(kv_bits={args.kv_bits or 'bf16'}, "
           f"page_size={args.page_size}) via QTensor.nbytes")

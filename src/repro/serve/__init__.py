@@ -1,11 +1,16 @@
 """repro.serve — the continuous-batching low-precision serving engine.
 
 * :class:`ServeEngine` / :class:`Request` / :class:`Finished` — the
-  iteration-level scheduler (admit / prefill / batched paged decode /
-  evict) over a mixed request stream (engine.py).
+  iteration-level scheduler (admit / chunked or monolithic prefill /
+  batched paged decode / evict) over a mixed request stream (engine.py).
 * :class:`PagedKVPool` + :class:`PageAllocator` — the paged KV cache whose
   pages are QTensor code planes: bf16 / int8 / packed int4 per
-  ``PrecisionPlan.kv_bits`` (pages.py).
+  ``PrecisionPlan.kv_bits``; the allocator refcounts pages so full
+  (immutable) pages can be shared read-only across sequences (pages.py).
+* :class:`PrefixCache` — the radix/trie prefix index over completed prompt
+  pages behind ``ServeEngine(prefix_cache=True)``: page-aligned shared
+  prompt prefixes skip prefill and point block-table rows at the shared
+  quantized code pages, copy-on-write by refcount (prefix.py).
 * :func:`sample_tokens` — greedy / temperature / top-k with per-request
   keys (sampling.py).
 * :class:`PrecisionAutoscaler` + :class:`AutoscalerConfig` — the
@@ -21,6 +26,7 @@ table with in-kernel int8/int4 dequantization (kernels/paged_attn.py).
 from .autoscaler import AutoscalerConfig, PrecisionAutoscaler
 from .engine import Finished, Request, ServeEngine
 from .pages import PageAllocator, PagedKVPool, init_pool, pool_nbytes
+from .prefix import PrefixCache
 from .sampling import sample_tokens
 
 __all__ = [
@@ -29,6 +35,7 @@ __all__ = [
     "PageAllocator",
     "PagedKVPool",
     "PrecisionAutoscaler",
+    "PrefixCache",
     "Request",
     "ServeEngine",
     "init_pool",

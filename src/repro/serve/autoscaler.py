@@ -9,7 +9,14 @@ no repacking — and restore them when the burst passes.
 This module is the control loop. :class:`PrecisionAutoscaler` watches the
 admission signal the engine already measures (head-of-line queue wait, queue
 depth) against an SLO and walks a bits ladder (default 8→4→2→1) with
-hysteresis:
+hysteresis. Under chunked prefill the engine's ``queue_depth`` counts
+queued requests **plus** slots still chunk-prefilling — admitted-but-not-
+yet-decoding work is load the governor must see, or a burst of long
+prompts would read as an empty queue. The engine may also *defer* acting
+on the returned bits while a preemption replay is in flight (replayed KV
+must be rebuilt under the original weights); the governor itself is
+oblivious — it keeps observing every step and the rung move lands on the
+first replay-free step:
 
 * ``breach_patience`` consecutive SLO breaches → drop one rung (fewer bits,
   faster decode, more admission throughput).

@@ -10,31 +10,64 @@ sequences free their pages immediately for the next admission.
 
 Scheduling model (Orca-style iteration-level batching):
 
-* ``submit()`` queues requests FIFO; ``step()`` = admit → ensure-pages →
-  one batched decode.
+* ``submit()`` queues requests FIFO; ``step()`` = admit → prefill-chunk →
+  ensure-pages → one batched decode.
 * **admission**: a request is admitted when a decode slot is free and the
   allocator can hand it its pages — ``reserve='full'`` takes the worst-case
   page count up front (no mid-flight eviction, ever); ``reserve='none'``
-  takes only the prompt pages and grows on demand.
-* **prefill** runs per request at its exact prompt length (no padding, no
-  masking subtleties) through the unmodified ``transformer.prefill``; the
-  raw post-RoPE K/V rows are then quantized per (token, head) and scattered
-  into pages — bit-identical codes to the legacy ring buffer.
+  takes only the prompt pages and grows on demand. Monolithic-reserve-only
+  admission (the ``reserve`` knob with neither ``prefix_cache`` nor
+  ``chunk_pages``) is the legacy compatibility mode — chunked admission
+  bounds the per-step prefill stall and is the intended serving default.
+* **prefill** has two paths:
+
+  - *monolithic* (default, bit-exact with the pre-chunking engine): per
+    request at its page-bucketed prompt length through the unmodified
+    ``transformer.prefill``; the raw post-RoPE K/V rows are then quantized
+    per (token, head) and scattered into pages — bit-identical codes to the
+    legacy ring buffer.
+  - *chunked* (``chunk_pages=N`` or ``prefix_cache=True``, Orca/Sarathi
+    style): the prompt runs through fixed-width chunks of ``N`` pages at
+    absolute page-aligned boundaries, one chunk per scheduler step,
+    interleaved with decode — a 2k-token admission no longer stalls the
+    live batch. Each chunk **writes its quantized K/V pages first, then
+    attends the dequantized context** (exactly the decode step's
+    append-then-attend order), so a token's KV codes are the same whether
+    it arrived via chunked prefill, decode, or replay — which is what makes
+    prefix reuse exact (below). One jit compile total: every chunk call has
+    the same static shapes.
+
+* **prefix reuse** (``prefix_cache=True``): a radix/trie index
+  (:class:`repro.serve.prefix.PrefixCache`) maps page-aligned token runs of
+  completed prompts to their pool pages. Admission walks the trie and
+  points the new block-table row at the shared pages (copy-on-write by
+  refcount: full pages are immutable — decode only appends past them — and
+  are freed only when the last sharer *and* the trie drop them; the partial
+  tail page is always private). The chunks fully covered by the hit are
+  skipped outright; the first partially-covered chunk is recomputed at
+  identical shapes but writes to the null page instead of the shared pages.
+  A warm admission therefore executes byte-identical chunk calls to a cold
+  one — prefix-hit outputs are **bit-identical to cold-start at every
+  kv-bits setting by construction**, not by tolerance.
 * **decode** is one jitted step over all ``max_slots`` slots: append each
   slot's token KV into its current page (inactive slots write to the null
   page), run the paged-attention op through the kernel registry (ref or
   Pallas), sample with per-request keys (greedy / temperature / top-k).
 * **eviction/preemption** (``reserve='none'``): when a sequence needs a page
-  and none is free, the youngest sequence is evicted — its pages return to
-  the pool and it is re-queued (front) carrying its generated tokens as a
-  **replay list**. Re-admission recomputes: prefill the original prompt
-  (same call as the first admission), then force-feed the replayed tokens
-  through ordinary decode steps (batched with everyone else) instead of
-  sampling. That rebuilds the quantized KV pages through the *same*
-  computation path that produced them, so the post-replay continuation is
-  bit-identical to the never-preempted run — re-prefilling generated tokens
-  as prompt would instead read full-precision K/V where the original decode
-  read quantized pages, and diverge.
+  and none is free, the engine first evicts unreferenced prefix-cache
+  leaves, then preempts the youngest sequence — its pages return to the
+  pool and it is re-queued (front, original ``t_submit`` preserved so the
+  admission-latency signal keeps accruing) carrying its generated tokens as
+  a **replay list**. Re-admission recomputes: prefill the original prompt
+  (same calls as the first admission — chunked prefill is deterministic and
+  prefix hits are exact, so the rebuilt pages carry identical codes), then
+  force-feed the replayed tokens through ordinary decode steps (batched
+  with everyone else) instead of sampling. That rebuilds the quantized KV
+  pages through the *same* computation path that produced them, so the
+  post-replay continuation is bit-identical to the never-preempted run —
+  re-prefilling generated tokens as prompt would instead read
+  full-precision K/V where the original decode read quantized pages, and
+  diverge.
 
 * **precision autoscaling** (optional): bit-plane weights
   (``quantize_param_tree(..., layout='bitplane')``) make serving precision a
@@ -42,16 +75,29 @@ Scheduling model (Orca-style iteration-level batching):
   ``slice_planes(k)`` view of every weight (zero repack, no reload; decode
   streams (k+1)/(B+1) of the code bytes). Attach a
   :class:`repro.serve.autoscaler.PrecisionAutoscaler` and ``step()`` feeds
-  it the head-of-line admission wait + queue depth each iteration and
-  actuates the bits it returns.
+  it the head-of-line admission wait + queue depth (queued requests plus
+  slots still chunk-prefilling — admitted-but-not-decoding work is load the
+  governor must see) each iteration and actuates the bits it returns.
+  Actuation is **deferred while any replay is in flight** (a slot holds
+  ``replay_left`` or a requeued entry carries replay tokens): switching
+  weight bits between eviction and replay would rebuild the replayed KV
+  under different weights than the original decode and break the bit-exact
+  replay invariant above. The governor still observes every step; the rung
+  move lands on the first replay-free step. An actuated bits change also
+  flushes the prefix cache and marks in-flight prefills non-cacheable —
+  pages computed under other weights must never serve a prefix hit.
 
-Invariants the tests pin: every admitted request finishes; no page leaks;
-per-request outputs are independent of batch composition; paged decode
-matches the legacy ring path.
+Invariants the tests pin: every admitted request finishes; no page leaks
+(shared pages freed exactly at refcount 0); per-request outputs are
+independent of batch composition; paged decode matches the legacy ring
+path; shared prefix pages are never written after sharing.
 
 Throughput accounting deliberately excludes the first decode call (jit
 compile) — ``stats['decode_seconds']`` is steady-state only, the fix the
-old serve loop needed (its t0 sat before compilation).
+old serve loop needed (its t0 sat before compilation). All scheduler timing
+goes through the injectable ``clock`` (``admit_waits`` *and*
+``decode_times``), so virtual-clock replays never mix real and virtual
+time.
 """
 from __future__ import annotations
 
@@ -65,12 +111,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import registry
+from repro.kernels.ops import kv_bits_of
+from repro.kernels.ref import dequant_pages_ref, gather_pages_ref
 from repro.models import attention as attn
 from repro.models import transformer as T
-from repro.models.layers import dense, embed, rmsnorm
+from repro.models.layers import apply_rope, dense, embed, rmsnorm
 from repro.quant import PrecisionPlan, QTensor
 from repro.serve import pages as pg
 from repro.serve import sampling
+from repro.serve.prefix import PrefixCache
 
 SUPPORTED_FAMILIES = ("dense", "moe", "audio")
 
@@ -103,7 +152,8 @@ class ServeEngine:
                  max_slots: int = 4, page_size: int = 8,
                  max_seq_len: int = 128, n_pages: int | None = None,
                  reserve: str = "full", backend: str | None = None,
-                 autoscaler=None, clock=None):
+                 autoscaler=None, clock=None, prefix_cache: bool = False,
+                 chunk_pages: int | None = None):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise ValueError(
                 f"ServeEngine supports {SUPPORTED_FAMILIES} families, "
@@ -133,6 +183,19 @@ class ServeEngine:
             cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim,
             kv_bits=plan.kv_bits, dtype=cfg.dtype)
 
+        # prefix sharing requires the chunked path: a prefix hit attends
+        # quantized shared pages, so the cold computation that *minted* them
+        # must have attended its own quantized pages the same way
+        if chunk_pages is not None and int(chunk_pages) < 1:
+            raise ValueError(f"chunk_pages must be >= 1, got {chunk_pages}")
+        self.chunk_pages = (min(int(chunk_pages), self.max_pages_per_seq)
+                            if chunk_pages is not None
+                            else (self.max_pages_per_seq if prefix_cache
+                                  else None))
+        self._chunked = self.chunk_pages is not None
+        self.prefix = (PrefixCache(self.page_size, self.allocator)
+                       if prefix_cache else None)
+
         B, MP = self.max_slots, self.max_pages_per_seq
         self._bt = np.zeros((B, MP), np.int32)
         self._lens = np.zeros((B,), np.int32)
@@ -148,7 +211,10 @@ class ServeEngine:
         self.stats = {"admitted": 0, "finished": 0, "preemptions": 0,
                       "decode_steps": 0, "decode_tokens": 0,
                       "decode_seconds": 0.0, "steady_decode_tokens": 0,
-                      "prefill_tokens": 0, "admit_wait_seconds": 0.0}
+                      "prefill_tokens": 0, "admit_wait_seconds": 0.0,
+                      "prefill_chunks": 0, "max_prefill_tokens_per_step": 0,
+                      "prefix_hits": 0, "prefix_misses": 0,
+                      "prefix_hit_tokens": 0}
         self.admit_waits: list[float] = []      # per-admission queue wait, s
         self.decode_times: list[float] = []     # steady per-step decode, s
         self._clock = clock if clock is not None else time.perf_counter
@@ -161,6 +227,7 @@ class ServeEngine:
         # categorical machinery entirely (the common case); lazily compiled
         self._decode_jits: dict[bool, Any] = {}
         self._prefill_jits: dict[int, Any] = {}
+        self._chunk_jit_fn = None
         self._sample1 = jax.jit(
             lambda lg, t, k, key: sampling.sample_tokens(
                 lg[None], t[None], k[None], key[None])[0])
@@ -245,6 +312,91 @@ class ServeEngine:
             fn = self._prefill_jits[bucket] = jax.jit(prefill_fn)
         return fn
 
+    def _make_chunk_fn(self):
+        """One prefill chunk: ``C = chunk_pages × page_size`` tokens at an
+        absolute page-aligned offset, **write-then-attend-quantized**.
+
+        Every call has the same static shapes — chunk width, block-table
+        row, gathered context — so the engine compiles this exactly once,
+        and a warm (prefix-hit) admission replays byte-identical calls to
+        the cold run that minted the shared pages: same tokens, same
+        positions, same gathered values (shared pages hold the codes the
+        cold run wrote); only the write targets differ (``page_ids`` entry 0
+        parks a shared page's recomputed rows on the null page). Bit-exact
+        hit-vs-cold outputs follow structurally.
+
+        Per layer the chunk's K/V rows are quantized and scattered into the
+        pool *first*, then every query attends the dequantized gathered
+        context (earlier pages + this chunk, causally masked) — the decode
+        step's append-then-attend order, so chunked prefill and decode
+        produce identical codes for the same token stream.
+        """
+        cfg, spec = self.cfg, self.cfg.attn_spec
+        page, cp = self.page_size, self.chunk_pages
+        C = cp * page
+        n_ctx = self.max_pages_per_seq * page
+        g, d = spec.n_kv_heads, spec.head_dim
+
+        def chunk_fn(params, pool, toks, pos0, page_ids, true_len, bt_row,
+                     last_rel):
+            positions = pos0 + jnp.arange(C, dtype=jnp.int32)         # (C,)
+            h = embed(params["embed"], toks[None]).astype(cfg.dtype)  # (1,C,d)
+            key_pos = jnp.arange(n_ctx, dtype=jnp.int32)
+            # causal within the valid context; pad queries (positions ≥
+            # true_len) still see ≥1 key, so no all-masked softmax rows
+            mask = ((key_pos[None, :] <= positions[:, None])
+                    & (key_pos[None, :] < true_len))                  # (C,S)
+            bt = bt_row[None]                                         # (1,MP)
+
+            def body(h, inp):
+                layer, kp, vp, ks, vs = inp
+                kv_bits = kv_bits_of(kp)
+                box = {}
+
+                def attend(z):
+                    pa = layer["attn"]
+                    q = dense(pa["q"], z).reshape(1, C, spec.n_heads, d)
+                    k = dense(pa["k"], z).reshape(1, C, g, d)
+                    v = dense(pa["v"], z).reshape(1, C, g, d)
+                    q = apply_rope(q, positions[None], spec.rope_theta)
+                    k = apply_rope(k, positions[None], spec.rope_theta)
+                    kc, ksc = pg.quant_rows(
+                        k[0].reshape(cp, page, g, d), kv_bits, kp.dtype)
+                    vc, vsc = pg.quant_rows(
+                        v[0].reshape(cp, page, g, d), kv_bits, vp.dtype)
+                    kp2 = kp.at[page_ids].set(kc)
+                    vp2 = vp.at[page_ids].set(vc)
+                    ks2 = ks.at[page_ids].set(ksc) if kv_bits else ks
+                    vs2 = vs.at[page_ids].set(vsc) if kv_bits else vs
+                    box["planes"] = (kp2, vp2, ks2, vs2)
+                    kk = dequant_pages_ref(
+                        gather_pages_ref(kp2, bt),
+                        gather_pages_ref(ks2, bt) if kv_bits else None)
+                    vv = dequant_pages_ref(
+                        gather_pages_ref(vp2, bt),
+                        gather_pages_ref(vs2, bt) if kv_bits else None)
+                    out = attn._attend_block(q, kk, vv, spec.scale, mask)
+                    return dense(pa["o"], out.reshape(
+                        1, C, spec.n_heads * d))
+
+                h = T.decode_layer_block(cfg, layer, h, attend)
+                return h, box["planes"]
+
+            xs = (params["layers"], pool.k_pages, pool.v_pages,
+                  pool.k_scale, pool.v_scale)
+            h, planes = jax.lax.scan(body, h, xs)
+            new_pool = pg.PagedKVPool(*planes)
+            h = rmsnorm(params["final_norm"], h)
+            logits = T._readout(params, cfg, h)[0]                    # (C, V)
+            return logits[last_rel], new_pool
+
+        return chunk_fn
+
+    def _chunk_jit(self):
+        if self._chunk_jit_fn is None:
+            self._chunk_jit_fn = jax.jit(self._make_chunk_fn())
+        return self._chunk_jit_fn
+
     # -------------------------------------------------------------- host API
     def submit(self, req: Request) -> None:
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
@@ -273,6 +425,16 @@ class ServeEngine:
     def n_active(self) -> int:
         return int(self._active.sum())
 
+    @property
+    def n_prefilling(self) -> int:
+        """Slots admitted but still chunk-prefilling (not yet decoding)."""
+        return sum(1 for s in self._slots
+                   if s is not None and "prefill_pos" in s)
+
+    @property
+    def busy(self) -> bool:
+        return bool(self._queue) or any(s is not None for s in self._slots)
+
     def set_weight_bits(self, k: int) -> None:
         """Serve the next decode batches at ``k`` weight bits.
 
@@ -282,7 +444,12 @@ class ServeEngine:
         fewer code planes. Trees are cached per k (each k is one extra jit
         trace of the decode step — the shapes differ — amortized after the
         first switch). Requires ``layout='bitplane'`` weights
-        (``quantize_param_tree(..., layout='bitplane')``)."""
+        (``quantize_param_tree(..., layout='bitplane')``).
+
+        An effective change flushes the prefix cache and marks in-flight
+        chunked prefills non-cacheable: pages minted under other weight bits
+        must never serve a prefix hit (hit-vs-cold bit-identity is per
+        weight precision)."""
         tree = self._params_by_bits.get(k)
         if tree is None:
             n_hit = [0]
@@ -302,20 +469,37 @@ class ServeEngine:
                     "— quantize with quantize_param_tree(..., "
                     "layout='bitplane')")
             self._params_by_bits[k] = tree
+        if tree is not self.params:
+            if self.prefix is not None:
+                self.prefix.release_all()
+            for st in self._slots:
+                if st is not None and "prefill_pos" in st:
+                    st["no_insert"] = True
         self.params = tree
         self.weight_bits = int(k)
 
     def kv_pool_nbytes(self, used_only: bool = False) -> int:
-        """Logical KV HBM bytes (QTensor.nbytes accounting; §2.2)."""
+        """Logical KV HBM bytes (QTensor.nbytes accounting; §2.2).
+        ``used_only`` counts **unique** referenced pages via the allocator —
+        a prefix page shared by five block-table rows is five rows of
+        logical context but one page of HBM, which is the point."""
         if used_only:
-            used = sum(len(s["pages"]) for s in self._slots if s)
-            return pg.pool_nbytes(self.pool, n_pages=used)
+            return pg.pool_nbytes(self.pool, n_pages=self.allocator.n_used)
         return pg.pool_nbytes(self.pool)
+
+    def release_prefix_cache(self) -> int:
+        """Drop every trie-held page reference (drain / shutdown); returns
+        pages released. In-flight sharers keep theirs."""
+        return self.prefix.release_all() if self.prefix is not None else 0
 
     # ------------------------------------------------------------- scheduler
     def _free_slot(self) -> int | None:
-        idx = np.flatnonzero(~self._active)
-        return int(idx[0]) if idx.size else None
+        # occupied ≠ active: a chunk-prefilling slot is occupied but not yet
+        # decoding, so scanning ~self._active would double-book it
+        for i, s in enumerate(self._slots):
+            if s is None:
+                return i
+        return None
 
     def _budget(self, entry) -> int:
         """Generation budget: the request's ask, capped by the context."""
@@ -324,6 +508,21 @@ class ServeEngine:
 
     def _bucket(self, s: int) -> int:
         return pg.pages_needed(max(s, 1), self.page_size) * self.page_size
+
+    def _alloc_pages(self, n: int) -> list[int] | None:
+        """Allocate ``n`` pages, evicting unreferenced prefix-cache leaves
+        (LRU) under pressure before giving up."""
+        ids = self.allocator.alloc(n)
+        while ids is None and self.prefix is not None \
+                and self.prefix.evict(1):
+            ids = self.allocator.alloc(n)
+        return ids
+
+    def _replaying(self) -> bool:
+        """True while any recompute-replay is in flight (in a slot or still
+        queued) — the window where weight-bits actuation must be deferred."""
+        return (any(s is not None and s["replay_left"] for s in self._slots)
+                or any(e["replay"].size for e in self._queue))
 
     def _admit(self, finished: list) -> None:
         while self._queue:
@@ -343,23 +542,54 @@ class ServeEngine:
             n_res = (pg.pages_needed(min(s + budget, self.max_seq_len),
                                      self.page_size)
                      if self.reserve == "full" else n_now)
-            ids = self.allocator.alloc(max(n_res, n_now))
+            # prefix hit: the first m pages come shared from the trie (one
+            # reference taken per page — ours now); only the rest is
+            # allocated. Referencing before _alloc_pages keeps the eviction
+            # scan from freeing the very pages we just matched.
+            shared = self.prefix.use(prompt) if self.prefix is not None else []
+            m = len(shared)
+            ids = self._alloc_pages(max(n_res, n_now) - m)
             if ids is None:
-                return                              # FIFO head-of-line wait
+                if shared:
+                    self.allocator.free(shared)    # hand the refs back
+                return                             # FIFO head-of-line wait
             self._queue.popleft()
             wait = max(0.0, self._clock() - entry["t_submit"])
             self.stats["admit_wait_seconds"] += wait
             self.admit_waits.append(wait)
             req = entry["req"]
+            all_ids = shared + ids
             row = np.zeros((self.max_pages_per_seq,), np.int32)
-            row[:len(ids)] = ids
+            row[:len(all_ids)] = all_ids
             self._bt[slot] = row
-            self._lens[slot] = s
             self._temps[slot] = req.temperature
             self._topks[slot] = req.top_k
             base = np.asarray(jax.random.fold_in(
                 jax.random.PRNGKey(req.seed), req.rid), np.uint32)
             self._base_keys[slot] = base
+            if self.prefix is not None:
+                if m:
+                    self.stats["prefix_hits"] += 1
+                    self.stats["prefix_hit_tokens"] += m * self.page_size
+                else:
+                    self.stats["prefix_misses"] += 1
+            state = {"req": req, "prompt": prompt, "gen": [],
+                     "replay_left": list(replay), "pages": all_ids,
+                     "admit_seq": self._admit_seq,
+                     "t_submit": entry["t_submit"]}
+            self._admit_seq += 1
+            self.stats["admitted"] += 1
+
+            if self._chunked:
+                # chunks are skipped only when the hit covers them entirely;
+                # a partially-hit chunk recomputes at identical shapes (its
+                # shared pages write to the null page) — see _make_chunk_fn
+                C = self.chunk_pages * self.page_size
+                state["prefill_pos"] = (m // self.chunk_pages) * C
+                state["shared_pages"] = m
+                self._lens[slot] = 0
+                self._slots[slot] = state
+                continue
 
             bucket = self._bucket(s)
             padded = np.zeros((bucket,), np.int32)
@@ -367,28 +597,74 @@ class ServeEngine:
             fn = self._prefill_jit(bucket)
             logits, self.pool = fn(
                 self.params, jnp.asarray(padded)[None], jnp.int32(s - 1),
-                jnp.asarray(ids[:bucket // self.page_size], jnp.int32),
+                jnp.asarray(all_ids[:bucket // self.page_size], jnp.int32),
                 self.pool)
-            if replay.size:
-                # recompute preemption: the first generated token is known;
-                # the rest replays through forced decode steps
-                tok, replay_left = int(replay[0]), list(replay[1:])
-            else:
-                tok = int(self._sample1(
-                    logits, jnp.float32(req.temperature),
-                    jnp.int32(req.top_k),
-                    sampling.slot_key(jnp.asarray(base), jnp.int32(s))))
-                replay_left = []
-            self._active[slot] = True
-            self._last_tok[slot] = tok
-            self._slots[slot] = {"req": req, "prompt": prompt, "gen": [tok],
-                                 "replay_left": replay_left,
-                                 "pages": list(ids),
-                                 "admit_seq": self._admit_seq}
-            self._admit_seq += 1
-            self.stats["admitted"] += 1
+            self._lens[slot] = s
+            self._slots[slot] = state
             self.stats["prefill_tokens"] += s
-            self._maybe_finish(slot, finished)
+            self._start_decode(slot, logits, finished)
+
+    def _start_decode(self, slot: int, last_logits, finished: list) -> None:
+        """Prompt fully prefilled: take the first token (sampled, or the
+        replay head after a preemption) and activate the slot for decode."""
+        state = self._slots[slot]
+        req = state["req"]
+        if state["replay_left"]:
+            # recompute preemption: the first generated token is known;
+            # the rest replays through forced decode steps
+            tok = int(state["replay_left"].pop(0))
+        else:
+            s = len(state["prompt"])
+            tok = int(self._sample1(
+                last_logits, jnp.float32(req.temperature),
+                jnp.int32(req.top_k),
+                sampling.slot_key(jnp.asarray(self._base_keys[slot]),
+                                  jnp.int32(s))))
+        state["gen"] = [tok]
+        self._active[slot] = True
+        self._last_tok[slot] = tok
+        self._maybe_finish(slot, finished)
+
+    def _advance_prefills(self, finished: list) -> None:
+        """Run ONE chunk for the oldest prefilling slot — per-step prefill
+        work is bounded by ``chunk_pages × page_size`` tokens, so long
+        admissions interleave with live decode instead of stalling it."""
+        cands = [(st["admit_seq"], i) for i, st in enumerate(self._slots)
+                 if st is not None and "prefill_pos" in st]
+        if not cands:
+            return
+        _, slot = min(cands)
+        st = self._slots[slot]
+        prompt = st["prompt"]
+        s = int(prompt.size)
+        page, cp = self.page_size, self.chunk_pages
+        C = cp * page
+        start = st["prefill_pos"]
+        end = min(s, start + C)
+        toks = np.zeros((C,), np.int32)
+        toks[:end - start] = prompt[start:end]
+        m = st["shared_pages"]
+        pids = np.zeros((cp,), np.int32)
+        p0 = start // page
+        for j in range(cp):
+            gp = p0 + j
+            if m <= gp < self.max_pages_per_seq:
+                pids[j] = self._bt[slot, gp]      # 0 (null) when shared
+        logits, self.pool = self._chunk_jit()(
+            self.params, self.pool, jnp.asarray(toks), jnp.int32(start),
+            jnp.asarray(pids), jnp.int32(end), jnp.asarray(self._bt[slot]),
+            jnp.int32(min(s - 1 - start, C - 1)))
+        self.stats["prefill_tokens"] += end - start
+        self.stats["prefill_chunks"] += 1
+        st["prefill_pos"] = start + C
+        if end < s:
+            return
+        del st["prefill_pos"]
+        self._lens[slot] = s
+        if self.prefix is not None and not st.get("no_insert"):
+            self.prefix.insert(
+                prompt, [int(p) for p in self._bt[slot, :s // page]])
+        self._start_decode(slot, logits, finished)
 
     def _full_tokens(self, state) -> np.ndarray:
         return np.concatenate([state["prompt"],
@@ -415,7 +691,7 @@ class ServeEngine:
             reason = "length"
         if reason is None:
             return False
-        self.allocator.free(state["pages"])
+        self.allocator.free(state["pages"])        # decref: shared survive
         self._active[slot] = False
         self._bt[slot] = 0
         self._lens[slot] = 0
@@ -428,8 +704,11 @@ class ServeEngine:
         return True
 
     def _preempt_one(self) -> int | None:
-        """Evict the youngest active sequence; requeue it (front) with its
-        generated tokens as the replay list. Returns the freed slot."""
+        """Evict the youngest occupied slot (decoding or still prefilling);
+        requeue it (front) with its generated tokens as the replay list and
+        its **original** ``t_submit`` — restarting the clock here would
+        zero the very admission-wait signal the autoscaler governs on.
+        Returns the freed slot."""
         cands = [(s["admit_seq"], i) for i, s in enumerate(self._slots) if s]
         if not cands:
             return None
@@ -445,14 +724,14 @@ class ServeEngine:
             np.asarray(state["replay_left"], np.int32)])
         self._queue.appendleft({"req": state["req"],
                                 "prompt": state["prompt"], "replay": replay,
-                                "t_submit": self._clock()})
+                                "t_submit": state["t_submit"]})
         self.stats["preemptions"] += 1
         return slot
 
     def _ensure_pages(self) -> None:
         """Before decode: every active slot must own the page its next KV row
-        lands in; grow on demand, preempting (youngest-first) when the pool
-        is exhausted."""
+        lands in; grow on demand — evicting idle prefix-cache pages first,
+        then preempting (youngest-first) when the pool is exhausted."""
         for slot in range(self.max_slots):
             while True:
                 if not self._active[slot] or self._slots[slot] is None:
@@ -460,7 +739,7 @@ class ServeEngine:
                 pidx = int(self._lens[slot]) // self.page_size
                 if self._bt[slot, pidx] != 0:
                     break
-                ids = self.allocator.alloc(1)
+                ids = self._alloc_pages(1)
                 if ids is not None:
                     self._bt[slot, pidx] = ids[0]
                     self._slots[slot]["pages"].append(ids[0])
@@ -470,25 +749,35 @@ class ServeEngine:
                     break                      # this slot itself got evicted
 
     def step(self) -> list[Finished]:
-        """One scheduler iteration: admit what fits, decode one token for
-        every live sequence. Returns the requests that finished."""
+        """One scheduler iteration: admit what fits, advance one prefill
+        chunk, decode one token for every live sequence. Returns the
+        requests that finished."""
         finished: list[Finished] = []
         if self.autoscaler is not None:
             now = self._clock()
             wait = (max(0.0, now - self._queue[0]["t_submit"])
                     if self._queue else 0.0)
+            depth = len(self._queue) + self.n_prefilling
             bits = self.autoscaler.observe(
-                admit_wait_ms=wait * 1e3, queue_depth=len(self._queue),
-                now=now)
-            if bits != self.weight_bits:
+                admit_wait_ms=wait * 1e3, queue_depth=depth, now=now)
+            # defer actuation while a replay is in flight: switching weight
+            # bits between eviction and replay would rebuild the replayed KV
+            # under different weights than the original decode
+            if bits != self.weight_bits and not self._replaying():
                 self.set_weight_bits(bits)
+        pt0 = self.stats["prefill_tokens"]
         self._admit(finished)
+        if self._chunked:
+            self._advance_prefills(finished)
         self._ensure_pages()
+        step_prefill = self.stats["prefill_tokens"] - pt0
+        if step_prefill > self.stats["max_prefill_tokens_per_step"]:
+            self.stats["max_prefill_tokens_per_step"] = step_prefill
         if not self._active.any():
             return finished
 
         sampled = bool((self._temps[self._active] > 0).any())
-        t0 = time.perf_counter()
+        t0 = self._clock()
         tok, _, self.pool = self._decode_jit(sampled)(
             self.params, self.pool,
             jnp.asarray(self._last_tok)[:, None],
@@ -496,7 +785,7 @@ class ServeEngine:
             jnp.asarray(self._active), jnp.asarray(self._base_keys),
             jnp.asarray(self._temps), jnp.asarray(self._topks))
         tok_np = np.asarray(tok)               # blocks until ready
-        dt = time.perf_counter() - t0
+        dt = self._clock() - t0
         n_live = int(self._active.sum())
         self.stats["decode_steps"] += 1
         self.stats["decode_tokens"] += n_live
@@ -529,18 +818,19 @@ class ServeEngine:
             self.submit(r)
         out: dict[int, Finished] = {}
         for _ in range(max_steps):
-            if not self._queue and not self._active.any():
+            if not self.busy:
                 break
-            before = (len(self._queue), int(self._active.sum()),
-                      self.stats["decode_steps"])
+            before = (len(self._queue), self.n_active, self.n_prefilling,
+                      self.stats["decode_steps"], self.stats["prefill_tokens"])
             for f in self.step():
                 out[f.rid] = f
-            after = (len(self._queue), int(self._active.sum()),
-                     self.stats["decode_steps"])
+            after = (len(self._queue), self.n_active, self.n_prefilling,
+                     self.stats["decode_steps"], self.stats["prefill_tokens"])
             if before == after:
                 raise RuntimeError(
                     "scheduler stalled (pool too small for any queued "
-                    "request?) — nothing admitted, decoded, or finished")
+                    "request?) — nothing admitted, prefilled, decoded, or "
+                    "finished")
         else:
             raise RuntimeError(f"run() exceeded {max_steps} steps")
         return out

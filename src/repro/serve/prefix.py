@@ -1,0 +1,176 @@
+"""Radix/trie prefix index over completed prompt pages.
+
+ZipML's serving thesis is that inference is data-movement-bound — the int4
+pool already cut KV bytes 3.5× — yet without sharing, the engine re-prefills
+and re-stores identical prompt prefixes (system prompts, few-shot headers)
+for every request, wasting exactly the bytes the quantized pool saved. Pages
+are **immutable once full** (decode only ever appends to the page holding
+position ``seq_len``, which is strictly past every full prompt page), so
+prefix sharing via the block table is free: it is the same
+one-artifact-serves-all reuse philosophy as MLWeaving's any-precision
+bit-planes, applied to the KV cache.
+
+The trie is keyed on *page-sized token runs*: each edge is the byte string
+of one page's ``page_size`` token ids, each node owns the pool page holding
+that run's quantized K/V codes. Lookup walks the prompt page-by-page and
+returns the longest matched chain of pages — capped at ``(len(prompt) - 1)
+// page_size`` pages so the un-matched suffix always keeps at least one
+token (the engine needs the last prompt position's logits to sample the
+first token).
+
+Ownership is refcount-based (see :class:`repro.serve.pages.PageAllocator`):
+
+* the trie itself holds **one reference** per registered page (taken at
+  :meth:`insert`), so cached prefixes survive the sequence that created
+  them;
+* every sharer takes one more reference via :meth:`use`; finishing or
+  evicting a sharer decrefs only its own references, so eviction of one
+  sequence can never free a page another sequence still maps;
+* a trie node is evictable only while it is a **leaf whose page refcount is
+  exactly 1** — i.e. no live sequence maps it and no longer cached prefix
+  extends it. :meth:`evict` releases such leaves in LRU order (the engine
+  calls it under pool pressure, before resorting to preemption).
+
+The trie never stores token values beyond the page keys and never touches
+device memory: pages stay where the prefill wrote them; sharing is purely a
+block-table and refcount affair.
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+
+class _Node:
+    __slots__ = ("key", "page", "children", "parent", "last_used")
+
+    def __init__(self, key: bytes, page: int, parent: "_Node | None"):
+        self.key = key
+        self.page = page
+        self.parent = parent
+        self.children: dict[bytes, _Node] = {}
+        self.last_used = 0
+
+
+class PrefixCache:
+    """Page-granular prefix index (one instance per engine/replica)."""
+
+    def __init__(self, page_size: int, allocator):
+        self.page_size = int(page_size)
+        self.allocator = allocator
+        self._root = _Node(b"", 0, None)       # sentinel: owns no page
+        self._ticks = itertools.count(1)
+        self.evictions = 0
+
+    # ------------------------------------------------------------- internals
+    def _page_keys(self, prompt: np.ndarray, n: int) -> list[bytes]:
+        p = self.page_size
+        toks = np.ascontiguousarray(np.asarray(prompt, np.int32))
+        return [toks[i * p:(i + 1) * p].tobytes() for i in range(n)]
+
+    def _walk(self, prompt: np.ndarray) -> list[_Node]:
+        """Longest matched node chain, capped so ≥1 suffix token remains."""
+        n_max = (len(prompt) - 1) // self.page_size
+        node, chain = self._root, []
+        for key in self._page_keys(prompt, n_max):
+            node = node.children.get(key)
+            if node is None:
+                break
+            chain.append(node)
+        return chain
+
+    # ------------------------------------------------------------ public API
+    @property
+    def n_pages(self) -> int:
+        """Pages currently registered (== references the trie holds)."""
+        count = 0
+        stack = list(self._root.children.values())
+        while stack:
+            node = stack.pop()
+            count += 1
+            stack.extend(node.children.values())
+        return count
+
+    def match(self, prompt) -> list[int]:
+        """Matched prefix page ids — pure read, no refcount side effects."""
+        return [n.page for n in self._walk(prompt)]
+
+    def use(self, prompt) -> list[int]:
+        """Match and take one reference per matched page for the caller.
+
+        The caller owns the returned references (frees them like its own
+        allocations); on a failed admission it must hand them straight back
+        via ``allocator.free``. Touches the matched chain's LRU clock.
+        """
+        chain = self._walk(prompt)
+        tick = next(self._ticks)
+        for node in chain:
+            node.last_used = tick
+        pages = [n.page for n in chain]
+        self.allocator.incref(pages)
+        return pages
+
+    def insert(self, prompt, page_ids) -> int:
+        """Register a completed prompt's **full** pages; returns how many
+        pages were newly registered (the trie increfs each of those).
+
+        ``page_ids``: the sequence's block-table pages in order, at least
+        ``len(prompt) // page_size`` of them. Pages whose token run is
+        already cached are skipped — the caller's copy simply stays private
+        (two concurrent misses on one prompt race benignly: first to finish
+        becomes canonical). The partial tail page is never registered.
+        """
+        n_full = len(prompt) // self.page_size
+        node, fresh = self._root, 0
+        tick = next(self._ticks)
+        for key, page in zip(self._page_keys(prompt, n_full), page_ids):
+            child = node.children.get(key)
+            if child is None:
+                page = int(page)
+                self.allocator.incref([page])
+                child = node.children[key] = _Node(key, page, node)
+                fresh += 1
+            child.last_used = tick
+            node = child
+        return fresh
+
+    def evict(self, n: int = 1) -> int:
+        """Release up to ``n`` LRU leaf pages nobody else references
+        (refcount exactly 1 — the trie's own). Returns pages freed; evicting
+        a leaf may expose its parent, so callers loop until satisfied."""
+        freed = 0
+        while freed < n:
+            victim = None
+            stack = list(self._root.children.values())
+            while stack:
+                node = stack.pop()
+                if node.children:
+                    stack.extend(node.children.values())
+                elif self.allocator.refcount(node.page) == 1:
+                    if victim is None or node.last_used < victim.last_used:
+                        victim = node
+            if victim is None:
+                break
+            del victim.parent.children[victim.key]
+            self.allocator.free([victim.page])
+            self.evictions += 1
+            freed += 1
+        return freed
+
+    def release_all(self) -> int:
+        """Drop every trie-held reference and clear the index (drain /
+        weight-precision flush). In-flight sharers keep their own references;
+        their pages return to the pool when they finish."""
+        released = 0
+        stack = list(self._root.children.values())
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            self.allocator.free([node.page])
+            released += 1
+        self._root.children.clear()
+        return released
+
+
+__all__ = ["PrefixCache"]

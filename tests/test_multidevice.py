@@ -13,6 +13,9 @@ What they pin:
     8-way data sharding matches the single-device result, and the
     continuous-batching scheduler runs to completion (leak-free, output-
     identical) in a multi-device process.
+  * the multi-replica driver: prefix-caching engine replicas pinned to
+    distinct devices behind one shared queue finish a shared-prefix trace
+    with balanced dispatch and leak-free pools.
 """
 import numpy as np
 import jax
@@ -249,3 +252,32 @@ class TestShardedServe:
                            max_slots=1, page_size=8, max_seq_len=32)
         got = solo.run([reqs[3]])
         np.testing.assert_array_equal(got[3].tokens, out[3].tokens)
+
+    def test_replica_set_prefix_sharing_device_pinned(self):
+        """Two prefix-caching engine replicas pinned to distinct host
+        devices behind one shared queue: a shared-system-prompt trace
+        finishes completely, dispatch is balanced, at least one replica
+        serves prefix hits, and both pools drain leak-free."""
+        from benchmarks.bench_serve_engine import make_shared_trace
+        from repro import configs
+        from repro.launch.serve import ReplicaSet
+        from repro.models import transformer as T
+        from repro.quant import PrecisionPlan
+        from repro.serve import ServeEngine
+
+        cfg = configs.get_reduced("qwen2.5-14b")
+        params = T.init_params(KEY, cfg)
+        rs = ReplicaSet(
+            lambda i: ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=8),
+                                  max_slots=2, page_size=4, max_seq_len=32,
+                                  prefix_cache=True, chunk_pages=2),
+            2, devices=jax.devices()[:2])
+        n = 12
+        out = rs.run(make_shared_trace(n, cfg.vocab_size, page_size=4,
+                                       sys_pages=2, max_new=4))
+        assert sorted(out) == list(range(n))
+        assert min(rs.dispatched) >= 2        # least-loaded spreads the work
+        assert rs.stats_sum("prefix_hits") >= 1
+        for eng in rs.engines:
+            eng.release_prefix_cache()
+            eng.allocator.check_leaks(0)

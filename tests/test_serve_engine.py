@@ -1,7 +1,9 @@
 """Serving-engine tests: paged-attention parity (ref + Pallas, bf16/int8/int4),
-paged-vs-ring bit-exactness, engine-vs-legacy equivalence, and the scheduler
+paged-vs-ring bit-exactness, engine-vs-legacy equivalence, the scheduler
 invariants (no page leaks, every admitted request finishes, outputs
-independent of batch composition, preemption recovers)."""
+independent of batch composition, preemption recovers), prefix-sharing
+copy-on-write invariants, chunked prefill, and the scheduler-clock /
+autoscaler-deferral regressions."""
 import dataclasses
 
 import numpy as np
@@ -15,7 +17,7 @@ from repro.kernels import ref as kref
 from repro.models import attention as attn
 from repro.models import transformer as T
 from repro.quant import PrecisionPlan, encode
-from repro.serve import PageAllocator, Request, ServeEngine
+from repro.serve import PageAllocator, PrefixCache, Request, ServeEngine
 from repro.serve import pages as pg
 
 KEY = jax.random.PRNGKey(0)
@@ -342,6 +344,335 @@ class TestPageAllocator:
         a.alloc(2)
         with pytest.raises(AssertionError, match="leak"):
             a.check_leaks(0)
+
+
+class TestPageAllocatorRefcount:
+    def test_alloc_order_deterministic(self):
+        a = PageAllocator(5)
+        assert a.alloc(3) == [1, 2, 3]
+        assert a.n_used == 3 and a.n_free == 1
+
+    def test_incref_decref_and_n_used(self):
+        a = PageAllocator(6)
+        ids = a.alloc(2)
+        a.incref(ids)                         # rc 2: one page, two sharers
+        assert a.refcount(ids[0]) == 2
+        assert a.n_used == 2                  # unique pages, not references
+        a.free(ids)                           # first sharer drops out
+        assert a.refcount(ids[0]) == 1
+        assert a.n_used == 2                  # still mapped by the other
+        a.free(ids)                           # last reference → really freed
+        assert a.n_used == 0 and a.refcount(ids[0]) == 0
+        a.check_leaks(0)
+
+    def test_incref_of_free_page_rejected(self):
+        a = PageAllocator(4)
+        with pytest.raises(ValueError, match="free page"):
+            a.incref([2])
+        (pid,) = a.alloc(1)
+        a.free([pid])
+        with pytest.raises(ValueError, match="free page"):
+            a.incref([pid])
+        with pytest.raises(ValueError, match="null page"):
+            a.incref([0])
+
+    def test_double_free_after_full_decref_rejected(self):
+        a = PageAllocator(4)
+        (pid,) = a.alloc(1)
+        a.incref([pid])
+        a.free([pid])
+        a.free([pid])                         # rc 2 → 1 → 0: both legal
+        with pytest.raises(ValueError, match="double free"):
+            a.free([pid])
+
+
+class TestPrefixCache:
+    """Trie unit tests against a bare allocator (no engine)."""
+
+    def _cached(self, alloc, cache, prompt):
+        """Register ``prompt``'s full pages as an engine drain would: alloc,
+        insert (trie takes its ref), then drop the sequence's own refs."""
+        ids = alloc.alloc(len(prompt) // cache.page_size)
+        cache.insert(prompt, ids)
+        alloc.free(ids)
+        return ids
+
+    def test_match_capped_below_full_prompt(self):
+        """A hit must leave >= 1 suffix token to prefill (the last position's
+        logits seed decode), so an exactly-page-aligned prompt matches one
+        page short of itself."""
+        a = PageAllocator(8)
+        cache = PrefixCache(4, a)
+        prompt = np.arange(8, dtype=np.int32)
+        ids = self._cached(a, cache, prompt)
+        assert cache.match(prompt) == ids[:1]          # cap (8-1)//4 = 1
+        assert cache.match(np.arange(9, dtype=np.int32)) == ids
+        assert cache.match(np.arange(4, 12, dtype=np.int32)) == []
+
+    def test_use_takes_refs_match_does_not(self):
+        a = PageAllocator(8)
+        cache = PrefixCache(4, a)
+        prompt = np.arange(9, dtype=np.int32)
+        ids = self._cached(a, cache, prompt)
+        assert all(a.refcount(i) == 1 for i in ids)    # trie-only
+        cache.match(prompt)
+        assert all(a.refcount(i) == 1 for i in ids)    # match is pure
+        got = cache.use(prompt)
+        assert got == ids
+        assert all(a.refcount(i) == 2 for i in ids)    # caller owns one now
+        a.free(got)
+
+    def test_evict_skips_referenced_pages_lru_order(self):
+        a = PageAllocator(16)
+        cache = PrefixCache(4, a)
+        p1 = np.arange(0, 5, dtype=np.int32)
+        p2 = np.arange(100, 105, dtype=np.int32)
+        (id1,) = self._cached(a, cache, p1)
+        (id2,) = self._cached(a, cache, p2)
+        held = cache.use(p1)                  # sharer pins p1's page
+        assert cache.evict(2) == 1            # only p2's page evictable
+        assert a.refcount(id2) == 0 and a.refcount(id1) == 2
+        assert cache.evict(1) == 0            # p1 still pinned
+        a.free(held)
+        assert cache.evict(1) == 1            # now trie-only → evictable
+        a.check_leaks(0)
+
+    def test_lru_prefers_stalest_leaf(self):
+        a = PageAllocator(16)
+        cache = PrefixCache(4, a)
+        p1 = np.arange(0, 5, dtype=np.int32)
+        p2 = np.arange(100, 105, dtype=np.int32)
+        (id1,) = self._cached(a, cache, p1)
+        (id2,) = self._cached(a, cache, p2)
+        cache.use(p1) and a.free(cache.match(p1))      # touch p1 → p2 stalest
+        assert cache.evict(1) == 1
+        assert a.refcount(id2) == 0 and a.refcount(id1) >= 1
+
+    def test_release_all_drops_every_trie_ref(self):
+        a = PageAllocator(16)
+        cache = PrefixCache(4, a)
+        self._cached(a, cache, np.arange(9, dtype=np.int32))
+        self._cached(a, cache, np.arange(50, 63, dtype=np.int32))
+        assert cache.n_pages == 5
+        assert cache.release_all() == 5
+        assert cache.n_pages == 0 and a.n_used == 0
+        a.check_leaks(0)
+
+
+def _family_trace(cfg, n, *, sys_len, n_families=2, max_new=4, seed=5):
+    """Requests sharing ``n_families`` fixed system prompts + unique tails."""
+    rng = np.random.default_rng(seed)
+    fams = [rng.integers(0, cfg.vocab_size, sys_len) for _ in range(n_families)]
+    return [Request(rid=i,
+                    prompt=np.concatenate([
+                        fams[i % n_families],
+                        rng.integers(0, cfg.vocab_size,
+                                     int(rng.integers(2, 6)))]),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+class TestPrefixSharing:
+    @pytest.mark.parametrize("kv_bits", [0, 8, 4])
+    def test_prefix_hit_token_identical_to_cold(self, kv_bits):
+        """Warm (prefix hits) greedy tokens == cold chunked engine (empty
+        cache) tokens at every KV precision — hits skip chunks whose values
+        the fixed-width chunk fn would recompute bit-identically."""
+        cfg = _cfg()
+        params = _params(cfg)
+        kw = dict(plan=PrecisionPlan(kv_bits=kv_bits), max_slots=3,
+                  page_size=4, max_seq_len=32, chunk_pages=2)
+        reqs = _family_trace(cfg, 6, sys_len=8)
+        cold = ServeEngine(params, cfg, **kw).run(reqs)
+        warm_eng = ServeEngine(params, cfg, prefix_cache=True, **kw)
+        warm = warm_eng.run(reqs)
+        assert warm_eng.stats["prefix_hits"] >= 1
+        for rid in cold:
+            np.testing.assert_array_equal(cold[rid].tokens, warm[rid].tokens)
+        warm_eng.release_prefix_cache()
+        warm_eng.allocator.check_leaks(0)
+
+    def test_shared_pages_never_rewritten(self):
+        """COW invariant: a shared prefix page's quantized codes are
+        bit-identical before and after other sharers prefill + decode over
+        it, and refcounts drop back to trie-only at drain."""
+        cfg = _cfg()
+        eng = ServeEngine(_params(cfg), cfg, plan=PrecisionPlan(kv_bits=8),
+                          max_slots=2, page_size=4, max_seq_len=32,
+                          prefix_cache=True, chunk_pages=1)
+        reqs = _family_trace(cfg, 5, sys_len=8, n_families=1)
+        eng.run([reqs[0]])
+        # the family's shared pages: the 8-token system prompt = pages 0-1
+        # (reqs[0]'s private suffix pages are cached too — not shared)
+        shared = eng.prefix.match(reqs[0].prompt[:9])
+        assert len(shared) == 2
+        before = np.asarray(eng.pool.k_pages[:, shared])
+        eng.run(reqs[1:])                     # two cohabiting sharers at once
+        assert eng.stats["prefix_hits"] == 4
+        after = np.asarray(eng.pool.k_pages[:, shared])
+        np.testing.assert_array_equal(before, after)
+        assert all(eng.allocator.refcount(i) == 1 for i in shared)
+        assert eng.release_prefix_cache() >= 2
+        eng.allocator.check_leaks(0)
+
+    def test_sharer_preemption_never_frees_mapped_pages(self):
+        """A pool too small for everyone: preemption decrefs the victim's
+        shared pages but the trie + surviving sharers still hold them, so
+        every request replays to its solo output and the pool drains clean."""
+        cfg = _cfg()
+        params = _params(cfg)
+        eng = ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=8),
+                          max_slots=3, page_size=4, max_seq_len=32,
+                          n_pages=10, reserve="none",
+                          prefix_cache=True, chunk_pages=1)
+        reqs = _family_trace(cfg, 5, sys_len=8, n_families=1, max_new=6)
+        out = eng.run(reqs)
+        assert eng.stats["preemptions"] >= 1
+        assert eng.stats["prefix_hits"] >= 1
+        for r in reqs:
+            solo = ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=8),
+                               max_slots=1, page_size=4,
+                               max_seq_len=32).run([r])
+            np.testing.assert_array_equal(solo[r.rid].tokens,
+                                          out[r.rid].tokens)
+        eng.release_prefix_cache()
+        eng.allocator.check_leaks(0)
+
+
+class TestChunkedPrefill:
+    def test_chunked_matches_monolithic_bf16(self):
+        """chunk_pages=1 at bf16 KV reproduces the monolithic engine's greedy
+        tokens exactly (no quantization → write-then-attend is lossless)."""
+        cfg = _cfg()
+        params = _params(cfg)
+        reqs = _family_trace(cfg, 4, sys_len=9)
+        mono = ServeEngine(params, cfg, max_slots=2, page_size=4,
+                           max_seq_len=32).run(reqs)
+        eng = ServeEngine(params, cfg, max_slots=2, page_size=4,
+                          max_seq_len=32, chunk_pages=1)
+        chunked = eng.run(reqs)
+        for rid in mono:
+            np.testing.assert_array_equal(mono[rid].tokens,
+                                          chunked[rid].tokens)
+        assert eng.stats["prefill_chunks"] >= 4
+        assert eng.stats["max_prefill_tokens_per_step"] <= 4
+        eng.allocator.check_leaks(0)
+
+    def test_decode_interleaves_with_prefill(self):
+        """While a long prompt trickles in chunk by chunk, already-admitted
+        sequences keep decoding: some step must advance both."""
+        cfg = _cfg()
+        rng = np.random.default_rng(9)
+        eng = ServeEngine(_params(cfg), cfg, max_slots=2, page_size=4,
+                          max_seq_len=64, chunk_pages=1)
+        eng.submit(Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 5),
+                           max_new_tokens=12))
+        eng.submit(Request(rid=1, prompt=rng.integers(0, cfg.vocab_size, 40),
+                           max_new_tokens=4))
+        out, both = {}, 0
+        while eng.busy:
+            pf0 = eng.stats["prefill_tokens"]
+            ds0 = eng.stats["decode_steps"]
+            for f in eng.step():
+                out[f.rid] = f
+            if (eng.stats["prefill_tokens"] > pf0
+                    and eng.stats["decode_steps"] > ds0):
+                both += 1
+        assert both >= 3                      # 40-token prompt = 10 chunks
+        assert sorted(out) == [0, 1]
+        eng.allocator.check_leaks(0)
+
+
+class TestSchedulerBugfixes:
+    """Regression pins for the serving-scheduler bug sweep."""
+
+    def test_preemption_preserves_t_submit(self):
+        """The requeued victim keeps its original submit timestamp — a
+        restarted clock would zero the admission-wait signal the autoscaler
+        governs on. Virtual clock: submits at t=0,1,2,3; preemption later."""
+        cfg = _cfg()
+        clk = [0.0]
+        eng = ServeEngine(_params(cfg), cfg, plan=PrecisionPlan(kv_bits=8),
+                          max_slots=3, page_size=4, max_seq_len=32,
+                          n_pages=8, reserve="none", clock=lambda: clk[0])
+        rng = np.random.default_rng(4)
+        submit_t = {}
+        for i in range(4):
+            clk[0] = float(i)
+            eng.submit(Request(rid=i,
+                               prompt=rng.integers(0, cfg.vocab_size, 6),
+                               max_new_tokens=8))
+            submit_t[i] = clk[0]
+        seen_requeue = False
+        out = {}
+        while eng.busy:
+            clk[0] += 1.0
+            for f in eng.step():
+                out[f.rid] = f
+            if eng.stats["preemptions"] and eng._queue:
+                head = eng._queue[0]
+                if head["replay"].size:       # a preempted request, mid-gen
+                    seen_requeue = True
+                    assert head["t_submit"] == submit_t[head["req"].rid]
+        assert eng.stats["preemptions"] >= 1 and seen_requeue
+        assert sorted(out) == list(range(4))
+        eng.allocator.check_leaks(0)
+
+    def test_decode_timing_reads_injected_clock(self):
+        """decode_times must come from the injected clock, not a hardwired
+        perf_counter: under a frozen virtual clock every steady-state decode
+        step measures exactly 0.0 s."""
+        cfg = _cfg()
+        eng = ServeEngine(_params(cfg), cfg, max_slots=2, page_size=8,
+                          max_seq_len=32, clock=lambda: 0.0)
+        rng = np.random.default_rng(2)
+        eng.run([Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 6),
+                         max_new_tokens=6) for i in range(3)])
+        assert len(eng.decode_times) >= 1
+        assert all(dt == 0.0 for dt in eng.decode_times)
+        assert eng.stats["decode_seconds"] == 0.0
+
+    def test_autoscaler_actuation_deferred_during_replay(self):
+        """A rung move requested while a preemption replay is in flight must
+        not land until the replay drains — replayed KV has to be rebuilt
+        under the weights that produced it. The stub governor demands 4 bits
+        exactly when a replay is pending, so any actuation would change
+        weights mid-replay; deferral keeps the run token-identical to a
+        fixed-8-bit engine."""
+        from repro.precision.qat import quantize_param_tree
+
+        cfg = _cfg()
+        params = quantize_param_tree(_params(cfg), bits=8, layout="bitplane")
+
+        class ReplayDipGovernor:
+            def __init__(self, engine_ref):
+                self.engine_ref = engine_ref
+                self.calls = []
+
+            def observe(self, *, admit_wait_ms, queue_depth, now=None):
+                replaying = self.engine_ref[0]._replaying()
+                self.calls.append(replaying)
+                return 4 if replaying else 8
+
+        ref = [None]
+        gov = ReplayDipGovernor(ref)
+        kw = dict(plan=PrecisionPlan(kv_bits=8), max_slots=3, page_size=4,
+                  max_seq_len=32, n_pages=8, reserve="none")
+        eng = ServeEngine(params, cfg, autoscaler=gov, **kw)
+        ref[0] = eng
+        rng = np.random.default_rng(4)
+        reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 6),
+                        max_new_tokens=8) for i in range(4)]
+        out = eng.run(reqs)
+        assert eng.stats["preemptions"] >= 1
+        assert any(gov.calls), "governor never saw a replay in flight"
+        assert eng.weight_bits == 8           # every drop request deferred
+        fixed = ServeEngine(params, cfg, **kw).run(
+            [Request(rid=r.rid, prompt=r.prompt, max_new_tokens=8)
+             for r in reqs])
+        for rid in out:
+            np.testing.assert_array_equal(out[rid].tokens, fixed[rid].tokens)
+        eng.allocator.check_leaks(0)
 
 
 class TestKVBytesAccounting:
