@@ -1,0 +1,148 @@
+"""Self-speculative decoding benchmark: int4/int2 draft + full-precision
+verify through the serving engine, across KV precisions.
+
+What it measures:
+
+* **token identity** — at every (kv_bits × draft_bits) combination the
+  speculative engine's greedy output must equal vanilla decode token for
+  token. This is the engine's core guarantee (accepted rows are minted by
+  the verify pass's own full-precision write-then-attend), so it is a
+  CHECK, not a tolerance.
+* **acceptance rate** — fraction of drafted tokens the verify accepted,
+  per combination. Random init weights give a low-but-nonzero rate (the
+  low-bit slice of a random matrix is a poor predictor); it is reported as
+  data, the speedup claim does not ride on it.
+* **modeled speedup on an acceptance-friendly model** — the
+  ``top4_planes`` case zeroes every magnitude plane below the top 4, so
+  the int4 ``slice_planes`` draft decodes *identically* to the full
+  artifact: acceptance is exactly 1.0 by construction (the self-drafting
+  regime ZipML's bit-plane storage makes free for models whose low planes
+  carry little signal). Decode is weight-bandwidth-bound (§2.2 / fig 5),
+  so cost is modeled in streamed weight bytes: a draft step costs
+  ``c_d = draft_nbytes / full_nbytes`` of a full step (QTensor.nbytes on
+  the sliced vs full tree) and one window commits ``1 + rate·k`` tokens
+  for ``k·c_d + 1`` full-step equivalents. The CHECK: modeled speedup ≥
+  1.3× vanilla on the shared-system-prompt trace. Wall-clock tok/s is
+  reported as data only — on the CPU CI runner the reduced model is
+  compute-bound, so bytes are the hardware claim (same convention as
+  bench_serve_engine).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.bench_serve_engine import make_shared_trace
+from repro import configs
+from repro.models import transformer as T
+from repro.precision.qat import quantize_param_tree
+from repro.quant import PrecisionPlan, QTensor
+from repro.serve import ServeEngine
+
+ARCH = "qwen2.5-14b"
+K = 3                                         # draft tokens per window
+WEIGHT_BITS = 8
+
+
+def _is_qt(x):
+    return isinstance(x, QTensor)
+
+
+def _bitplane_bytes(tree, bits: int | None = None) -> int:
+    """QTensor.nbytes over the tree's bitplane leaves, optionally through
+    the ``slice_planes(bits)`` view the draft streams."""
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=_is_qt):
+        if _is_qt(leaf) and leaf.scheme.layout == "bitplane":
+            total += (leaf if bits is None else leaf.slice_planes(bits)).nbytes
+    return total
+
+
+def _zero_low_planes(tree, keep_bits: int):
+    """Zero every magnitude plane below the top ``keep_bits`` (plane axis:
+    sign, then MSB→LSB), making ``slice_planes(keep_bits)`` decode equal to
+    the full artifact — the acceptance-1.0 self-draft regime."""
+    def f(leaf):
+        if _is_qt(leaf) and leaf.scheme.layout == "bitplane":
+            return QTensor(leaf.codes.at[..., keep_bits + 1:, :, :].set(0),
+                           leaf.scale, leaf.scheme)
+        return leaf
+
+    return jax.tree.map(f, tree, is_leaf=_is_qt)
+
+
+def run(quick: bool = False):
+    n_requests = 16 if quick else 32
+    max_new = 8 if quick else 12
+    page, sys_pages = 8, 4
+    cfg = configs.get_reduced(ARCH)
+    params = quantize_param_tree(T.init_params(jax.random.PRNGKey(0), cfg),
+                                 bits=WEIGHT_BITS, layout="bitplane")
+
+    def trace():
+        return make_shared_trace(n_requests, cfg.vocab_size, page_size=page,
+                                 sys_pages=sys_pages, max_new=max_new)
+
+    def engine(p, kv_bits, **kw):
+        return ServeEngine(p, cfg, plan=PrecisionPlan(kv_bits=kv_bits),
+                           max_slots=4, page_size=page, max_seq_len=64, **kw)
+
+    def identical(a, b):
+        return bool(all(np.array_equal(a[rid].tokens, b[rid].tokens)
+                        for rid in a))
+
+    rows = []
+    # -- token identity + measured acceptance, every kv x draft combination -
+    for kv_bits in (0, 8, 4):
+        kv_name = "bf16" if kv_bits == 0 else f"int{kv_bits}"
+        van = engine(params, kv_bits)
+        van_out = van.run(trace())
+        for draft_bits in (4, 2):
+            spec = engine(params, kv_bits, spec_decode=K,
+                          draft_bits=draft_bits)
+            out = spec.run(trace())
+            spec.allocator.check_leaks(0)
+            assert spec.stats["spec_steps"] > 0
+            rows.append({
+                "case": f"kv_{kv_name}_draft{draft_bits}",
+                "requests": n_requests,
+                "k": K,
+                "spec_windows": spec.stats["spec_steps"],
+                "acceptance_rate": round(spec.acceptance_rate(), 3),
+                "tok_s_vanilla": round(van.throughput(), 1),
+                "tok_s_spec": round(spec.throughput(), 1),
+                "spec_token_identical": identical(van_out, out),
+            })
+
+    # -- acceptance-friendly self-draft: modeled >= 1.3x ---------------------
+    top4 = _zero_low_planes(params, 4)
+    van = engine(top4, 8)
+    van_out = van.run(trace())
+    spec = engine(top4, 8, spec_decode=K, draft_bits=4)
+    out = spec.run(trace())
+    spec.allocator.check_leaks(0)
+    rate = spec.acceptance_rate()
+    c_d = _bitplane_bytes(params, 4) / _bitplane_bytes(params)
+    tokens_per_window = 1 + rate * K
+    modeled_speedup = tokens_per_window / (K * c_d + 1)
+    rows.append({
+        "case": "top4_planes_selfdraft",
+        "requests": n_requests,
+        "k": K,
+        "spec_windows": spec.stats["spec_steps"],
+        "acceptance_rate": round(rate, 3),
+        "acceptance_is_full": bool(rate >= 0.999),
+        "draft_weight_byte_ratio": round(c_d, 3),
+        "modeled_tokens_per_window": round(tokens_per_window, 2),
+        "modeled_speedup_vs_vanilla": round(modeled_speedup, 2),
+        "tok_s_vanilla": round(van.throughput(), 1),
+        "tok_s_spec": round(spec.throughput(), 1),
+        "spec_token_identical": identical(van_out, out),
+        "modeled_speedup_ge_1_3x": bool(modeled_speedup >= 1.3),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

@@ -1,7 +1,8 @@
 """Serving driver — a thin CLI over the continuous-batching engine
 (repro/serve/engine.py) with the ZipML serving channels: int8 weights at
 rest, bf16/int8/packed-int4 paged KV cache, prefix sharing + chunked
-prefill, and a multi-replica data-parallel front-end.
+prefill, self-speculative decoding, and a multi-replica data-parallel
+front-end.
 
 Engine mode (default) serves a mixed-length synthetic trace:
 
@@ -9,10 +10,18 @@ Engine mode (default) serves a mixed-length synthetic trace:
       --requests 16 --max-new 24 --kv-bits 4 --page-size 8 \
       --prefix-cache --chunk-pages 2
 
+Self-speculative decoding drafts k tokens per slot through a low-bit
+``slice_planes`` view of the served bitplane weights and verifies them in
+one batched full-precision step (output token-identical to vanilla):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
+      --weight-bits 8 --weight-layout bitplane --spec-decode 3 --draft-bits 4
+
 Multi-replica mode (``--replicas N``) runs N engines — one paged pool and
 prefix cache each, data-parallel over the host's devices when several are
 visible (same placement policy as launch/sharding.py's data axis) — behind
-one shared submit queue with least-loaded dispatch:
+one shared submit queue (``--dispatch`` picks least-loaded, round-robin, or
+prefix-aware routing):
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
@@ -148,23 +157,42 @@ class ReplicaSet:
     the data-parallel placement ``launch/sharding.py`` meshes give one
     process per device group.
 
-    Dispatch is least-loaded with bounded backlog: a queued request is
-    handed to the replica with the fewest in-flight-plus-pending requests,
-    but only while that backlog is under ``2 × max_slots`` — otherwise it
-    stays in the shared queue, so one slow replica can't hoard the tail of
-    the trace.
+    Dispatch policies (all with bounded backlog — a replica whose
+    in-flight-plus-pending count reaches ``2 × max_slots`` takes no more
+    work, so one slow replica can't hoard the tail of the trace):
+
+    * ``least_loaded`` (default): fewest in-flight-plus-pending requests.
+    * ``round_robin``: strict rotation — the affinity-blind baseline the
+      prefix bench row compares against.
+    * ``prefix``: **prefix-aware** — the head-of-queue request's prompt is
+      matched against every replica's prefix-cache trie (a pure read, no
+      refcount side effects) and routed to the replica holding the deepest
+      page match; on a miss (or when every matching replica is backlogged)
+      it falls back to least-loaded. Keeping a prefix family on the replica
+      that owns its trie pages is what turns per-replica caches into
+      fleet-wide warm hits.
     """
 
-    def __init__(self, factory, n_replicas: int, *, devices=None):
+    def __init__(self, factory, n_replicas: int, *, devices=None,
+                 dispatch: str = "least_loaded"):
         if n_replicas < 1:
             raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        if dispatch not in ("least_loaded", "round_robin", "prefix"):
+            raise ValueError(
+                "dispatch must be 'least_loaded', 'round_robin' or "
+                f"'prefix', got {dispatch!r}")
         self.devices = list(devices) if devices else None
+        self.dispatch = dispatch
         self.engines = []
         for i in range(n_replicas):
             with self._device_ctx(i):
                 self.engines.append(factory(i))
+        if dispatch == "prefix" and any(e.prefix is None for e in self.engines):
+            raise ValueError("dispatch='prefix' needs prefix_cache=True "
+                             "engines (nothing to match against otherwise)")
         self._queue: collections.deque = collections.deque()
         self.dispatched = [0] * n_replicas
+        self._rr = 0
 
     def _device_ctx(self, i: int):
         if self.devices is None:
@@ -182,9 +210,29 @@ class ReplicaSet:
         while self._queue:
             loads = [e.n_active + e.n_prefilling + e.n_pending
                      for e in self.engines]
-            i = min(range(len(loads)), key=lambda j: loads[j])
-            if loads[i] >= 2 * self.engines[i].max_slots:
-                return
+            ok = [loads[j] < 2 * self.engines[j].max_slots
+                  for j in range(len(self.engines))]
+            i = None
+            if self.dispatch == "prefix":
+                prompt = np.asarray(
+                    self._queue[0].prompt, np.int32).reshape(-1)
+                best = 0
+                for j, e in enumerate(self.engines):
+                    if not ok[j] or e.prefix is None:
+                        continue
+                    depth = len(e.prefix.match(prompt))
+                    if depth > best:
+                        best, i = depth, j
+            elif self.dispatch == "round_robin":
+                j = self._rr % len(self.engines)
+                if not ok[j]:
+                    return
+                i = j
+                self._rr += 1
+            if i is None:                      # miss → least-loaded
+                i = min(range(len(loads)), key=lambda j: loads[j])
+                if not ok[i]:
+                    return
             with self._device_ctx(i):
                 self.engines[i].submit(self._queue.popleft())
             self.dispatched[i] += 1
@@ -241,7 +289,9 @@ def serve_engine(arch: str, *, reduced: bool = True, n_requests: int = 16,
                  weight_layout: str = "dense", autoscale: bool = False,
                  slo_admit_ms: float | None = None,
                  prefix_cache: bool = False, chunk_pages: int | None = None,
-                 replicas: int = 1, devices=None):
+                 replicas: int = 1, devices=None, spec_decode: int = 0,
+                 draft_bits: int | None = None,
+                 dispatch: str = "least_loaded"):
     """Serve a mixed-length trace through the continuous-batching engine.
 
     ``weight_layout='bitplane'`` stores the weights bit-serially (one
@@ -249,15 +299,25 @@ def serve_engine(arch: str, *, reduced: bool = True, n_requests: int = 16,
     :class:`repro.serve.PrecisionAutoscaler` so load drops/restores weight
     bits against the admission SLO (``slo_admit_ms``, default from
     ``$ZIPML_SLO_ADMIT_MS``). ``prefix_cache``/``chunk_pages`` enable prefix
-    sharing and chunked prefill; ``replicas > 1`` serves the trace through a
-    :class:`ReplicaSet` (one engine per replica, shared queue; ``devices``
-    pins replicas round-robin). Returns (engine-or-replicaset, results dict
-    rid → Finished). Throughput/byte stats via ``engine.throughput()`` /
+    sharing and chunked prefill; ``spec_decode=k, draft_bits=b`` turns on
+    self-speculative decoding (k-token draft through the b-bit
+    ``slice_planes`` view of the same bitplane artifact, one batched
+    full-precision verify — token-identical output, needs
+    ``weight_layout='bitplane'``); ``replicas > 1`` serves the trace through
+    a :class:`ReplicaSet` (one engine per replica, shared queue; ``devices``
+    pins replicas round-robin; ``dispatch`` picks the routing policy —
+    ``'prefix'`` routes prompt families to the replica owning their trie
+    pages). Returns (engine-or-replicaset, results dict rid → Finished).
+    Throughput/byte stats via ``engine.throughput()`` /
     ``engine.kv_pool_nbytes()`` / ``engine.stats``.
     """
     from repro.serve import AutoscalerConfig, PrecisionAutoscaler, ServeEngine
 
     plan = _resolve_plan(plan, kv_bits, weight_bits, optimal_levels)
+    if spec_decode and (weight_layout != "bitplane" or not plan.model_bits):
+        raise ValueError(
+            "spec_decode needs --weight-layout bitplane with weight_bits > 0 "
+            "(the draft is a slice_planes view of the served artifact)")
     cfg, params, _ = _build(arch, reduced=reduced, plan=plan, seed=seed,
                             weight_layout=weight_layout)
 
@@ -278,13 +338,15 @@ def serve_engine(arch: str, *, reduced: bool = True, n_requests: int = 16,
         return ServeEngine(params, cfg, plan=plan, max_slots=max_slots,
                            page_size=page_size, max_seq_len=max_seq_len,
                            backend=backend, autoscaler=mk_autoscaler(),
-                           prefix_cache=prefix_cache, chunk_pages=chunk_pages)
+                           prefix_cache=prefix_cache, chunk_pages=chunk_pages,
+                           spec_decode=spec_decode, draft_bits=draft_bits)
 
     trace = make_trace(n_requests, cfg.vocab_size, max_new=max_new,
                        min_prompt=min_prompt, max_prompt=max_prompt,
                        seed=seed, temperature=temperature, top_k=top_k)
     if replicas > 1:
-        rs = ReplicaSet(factory, replicas, devices=devices)
+        rs = ReplicaSet(factory, replicas, devices=devices,
+                        dispatch=dispatch)
         return rs, rs.run(trace)
     engine = factory(0)
     results = engine.run(trace)
@@ -314,6 +376,17 @@ def main(argv=None):
                          "(implies interleaved prefill/decode)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="engine replicas behind a shared submit queue")
+    ap.add_argument("--dispatch", default="least_loaded",
+                    choices=("least_loaded", "round_robin", "prefix"),
+                    help="replica routing: prefix = route prompt families "
+                         "to the replica owning their trie pages")
+    ap.add_argument("--spec-decode", type=int, default=0, metavar="K",
+                    help="speculative decoding: draft K tokens per slot "
+                         "through the low-bit weight view, verify in one "
+                         "full-precision step (needs bitplane layout)")
+    ap.add_argument("--draft-bits", type=int, default=None,
+                    help="weight bits of the speculative draft view "
+                         "(e.g. 4 or 2; must be below the serving bits)")
     # engine mode (default)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
@@ -351,7 +424,8 @@ def main(argv=None):
         backend=args.kernel_backend, weight_layout=args.weight_layout,
         autoscale=args.autoscale, slo_admit_ms=args.slo_admit_ms,
         prefix_cache=args.prefix_cache, chunk_pages=args.chunk_pages,
-        replicas=args.replicas)
+        replicas=args.replicas, dispatch=args.dispatch,
+        spec_decode=args.spec_decode, draft_bits=args.draft_bits)
     gen_total = sum(f.n_generated for f in results.values())
     if isinstance(engine, ReplicaSet):
         rs = engine
@@ -361,6 +435,15 @@ def main(argv=None):
         print(f"[serve-engine] aggregate steady-state decode: "
               f"{rs.throughput():.1f} tok/s; "
               f"preemptions={rs.stats_sum('preemptions')}")
+        if args.spec_decode:
+            drafted = rs.stats_sum("spec_draft_tokens")
+            accepted = rs.stats_sum("spec_accepted_tokens")
+            rate = accepted / drafted if drafted else float("nan")
+            print(f"[serve-engine] speculative decode: "
+                  f"{rs.stats_sum('spec_steps')} windows, "
+                  f"{accepted}/{drafted} draft tokens accepted "
+                  f"({rate:.2f}, k={args.spec_decode}, "
+                  f"draft_bits={args.draft_bits})")
         for i, eng in enumerate(rs.engines):
             st = eng.stats
             line = (f"[serve-engine]   replica {i}: "
@@ -377,6 +460,11 @@ def main(argv=None):
           f"(+{st['prefill_tokens']} prefill tokens)")
     print(f"[serve-engine] steady-state decode: {engine.throughput():.1f} "
           f"tok/s; preemptions={st['preemptions']}")
+    if args.spec_decode:
+        print(f"[serve-engine] speculative decode: {st['spec_steps']} windows, "
+              f"{st['spec_accepted_tokens']}/{st['spec_draft_tokens']} draft "
+              f"tokens accepted ({engine.acceptance_rate():.2f}, "
+              f"k={args.spec_decode}, draft_bits={args.draft_bits})")
     if args.prefix_cache:
         print(f"[serve-engine] prefix cache: {st['prefix_hits']} hits / "
               f"{st['prefix_misses']} misses, "

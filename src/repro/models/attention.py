@@ -76,7 +76,9 @@ def _q_spec(spec: AttnSpec):
 def _attend_block(q, k, v, scale, mask):
     """Grouped-query attention block without materializing repeated KV.
 
-    q: (B,Cq,H,D)  k/v: (B,Skv,G,D) with G=Hkv, H=G·R  mask: (Cq,Skv) bool.
+    q: (B,Cq,H,D)  k/v: (B,Skv,G,D) with G=Hkv, H=G·R  mask: (Cq,Skv) bool,
+    or (B,Cq,Skv) when each sequence masks its own context (the serving
+    engine's batched verify step — every slot sits at a different length).
     The (B,S,G,R,D) repeat broadcast would cost n_rep× KV memory and bait
     GSPMD into awkward G-way shardings — the grouped einsum avoids both.
     """
@@ -86,7 +88,8 @@ def _attend_block(q, k, v, scale, mask):
     qg = q.reshape(b, cq, g, r, d)
     scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
                         preferred_element_type=jnp.float32) * scale
-    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    mask_b = mask[:, None, None] if mask.ndim == 3 else mask[None, None, None]
+    scores = jnp.where(mask_b, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bgrqk,bkgd->bqgrd", probs.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)

@@ -373,6 +373,16 @@ def _readout(params: Params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
     return logits
 
 
+def final_logits(params: Params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    """Final-norm + unembed readout over a (B, S, d) hidden stream →
+    (B, S, V) f32 logits at **every** position — the multi-position variant
+    every decode-shaped caller shares: single-token decode (S=1), chunked
+    prefill (one chunk), and the speculative-decode verify step, which scores
+    all k+1 window positions from one forward. One definition keeps the
+    per-position math bit-identical across those paths."""
+    return _readout(params, cfg, rmsnorm(params["final_norm"], h))
+
+
 def loss_fn(params: Params, tokens: jax.Array, targets: jax.Array,
             cfg: ModelConfig, vision_tokens=None) -> jax.Array:
     """Mean next-token cross-entropy, computed in sequence chunks so the

@@ -2,7 +2,11 @@
 
 * :class:`ServeEngine` / :class:`Request` / :class:`Finished` — the
   iteration-level scheduler (admit / chunked or monolithic prefill /
-  batched paged decode / evict) over a mixed request stream (engine.py).
+  batched paged decode / evict) over a mixed request stream; with
+  ``spec_decode=k, draft_bits=b`` it runs **self-speculative decoding** —
+  a k-token greedy draft through the b-bit ``slice_planes`` view of the
+  served bitplane weights, verified by one batched full-precision forward,
+  token-identical to vanilla decode (engine.py).
 * :class:`PagedKVPool` + :class:`PageAllocator` — the paged KV cache whose
   pages are QTensor code planes: bf16 / int8 / packed int4 per
   ``PrecisionPlan.kv_bits``; the allocator refcounts pages so full

@@ -4,7 +4,14 @@ Bit-plane weights (``repro.quant`` ``layout='bitplane'``) make serving
 precision a *runtime dial*: ``QTensor.slice_planes(k)`` is a zero-copy view
 of the top-k magnitude planes, so the engine can drop weight bits under
 pressure — decode streams (k+1)/(B+1) of the code bytes, no weight reload,
-no repacking — and restore them when the burst passes.
+no repacking — and restore them when the burst passes. Self-speculative
+decoding (``ServeEngine(spec_decode=k, draft_bits=b)``) reuses the same
+views for its draft pass; the two compose, with two engine-side rules:
+rung moves are actuated at the top of ``step()`` only — never inside a
+draft/verify window, so a window always runs under one weight precision —
+and whenever the governor has walked the serving bits down to or below
+``draft_bits`` the engine falls back to vanilla decode (a draft at-or-above
+the target's precision predicts nothing the target step wouldn't).
 
 This module is the control loop. :class:`PrecisionAutoscaler` watches the
 admission signal the engine already measures (head-of-line queue wait, queue

@@ -69,6 +69,28 @@ Scheduling model (Orca-style iteration-level batching):
   full-precision K/V where the original decode read quantized pages, and
   diverge.
 
+* **self-speculative decoding** (``spec_decode=k, draft_bits=b``): the
+  low-bit model sliced from the served bit-plane artifact
+  (``slice_planes(b)`` — zero extra weight memory) drafts ``k`` greedy
+  tokens per slot through the ordinary paged decode step, writing
+  **scratch** KV rows past each slot's committed length; one batched
+  full-precision forward then scores all ``k+1`` window positions
+  (embed→rope→quantize-K/V→scatter→attend, the chunked-prefill shape), and
+  the longest prefix of draft tokens matching the verify chain is committed
+  — their KV rows were minted *by the verify pass itself* (write-then-
+  attend), so accepted rows are byte-identical to what sequential decode
+  would have written. Rollback is free: rejected rows sit past ``_lens``
+  (masked garbage, overwritten by the next window). Greedy output is
+  **token-identical to vanilla greedy decode by construction**; with
+  temperature > 0 the window samples with the same per-(request, position)
+  keys sequential decode uses, so sampled chains are identical too —
+  acceptance just compares the greedy draft against the sampled target.
+  The engine falls back to a vanilla step while a replay is in flight,
+  when any active slot lacks ``k+1`` rows of page runway, or when the
+  autoscaler has dropped serving bits to (or below) the draft's — and
+  autoscaler actuation happens at the top of ``step()``, so a bits change
+  can never land mid-window (the same deferral discipline as replay).
+
 * **precision autoscaling** (optional): bit-plane weights
   (``quantize_param_tree(..., layout='bitplane')``) make serving precision a
   per-step dial — ``set_weight_bits(k)`` swaps in a cached
@@ -115,7 +137,7 @@ from repro.kernels.ops import kv_bits_of
 from repro.kernels.ref import dequant_pages_ref, gather_pages_ref
 from repro.models import attention as attn
 from repro.models import transformer as T
-from repro.models.layers import apply_rope, dense, embed, rmsnorm
+from repro.models.layers import apply_rope, dense, embed
 from repro.quant import PrecisionPlan, QTensor
 from repro.serve import pages as pg
 from repro.serve import sampling
@@ -153,7 +175,8 @@ class ServeEngine:
                  max_seq_len: int = 128, n_pages: int | None = None,
                  reserve: str = "full", backend: str | None = None,
                  autoscaler=None, clock=None, prefix_cache: bool = False,
-                 chunk_pages: int | None = None):
+                 chunk_pages: int | None = None, spec_decode: int = 0,
+                 draft_bits: int | None = None):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise ValueError(
                 f"ServeEngine supports {SUPPORTED_FAMILIES} families, "
@@ -214,7 +237,8 @@ class ServeEngine:
                       "prefill_tokens": 0, "admit_wait_seconds": 0.0,
                       "prefill_chunks": 0, "max_prefill_tokens_per_step": 0,
                       "prefix_hits": 0, "prefix_misses": 0,
-                      "prefix_hit_tokens": 0}
+                      "prefix_hit_tokens": 0, "spec_steps": 0,
+                      "spec_draft_tokens": 0, "spec_accepted_tokens": 0}
         self.admit_waits: list[float] = []      # per-admission queue wait, s
         self.decode_times: list[float] = []     # steady per-step decode, s
         self._clock = clock if clock is not None else time.perf_counter
@@ -223,11 +247,30 @@ class ServeEngine:
         self._params_by_bits: dict[int, Any] = {}
         self.weight_bits: int | None = None     # None until set_weight_bits
 
+        # self-speculative decoding: the b-bit draft is a zero-copy
+        # slice_planes view of the served bit-plane artifact — built (and
+        # validated) eagerly so a spec engine without bitplane weights
+        # fails at construction, not mid-trace
+        if int(spec_decode) < 0:
+            raise ValueError(f"spec_decode must be >= 0, got {spec_decode}")
+        if spec_decode and draft_bits is None:
+            raise ValueError(
+                "spec_decode needs draft_bits (the low-bit draft view, "
+                "e.g. draft_bits=4)")
+        if draft_bits is not None and not spec_decode:
+            raise ValueError("draft_bits without spec_decode has no effect")
+        self.spec_decode = int(spec_decode)
+        self.draft_bits = int(draft_bits) if draft_bits is not None else None
+        self._params_draft = (self._sliced_tree(self.draft_bits)
+                              if self.spec_decode else None)
+
         # two decode variants: the greedy-only one skips the sort +
         # categorical machinery entirely (the common case); lazily compiled
         self._decode_jits: dict[bool, Any] = {}
         self._prefill_jits: dict[int, Any] = {}
         self._chunk_jit_fn = None
+        self._draft_jit_fn = None
+        self._verify_jits: dict[bool, Any] = {}
         self._sample1 = jax.jit(
             lambda lg, t, k, key: sampling.sample_tokens(
                 lg[None], t[None], k[None], key[None])[0])
@@ -274,8 +317,7 @@ class ServeEngine:
                   pool.k_scale, pool.v_scale)
             x, planes = jax.lax.scan(body, x, xs)
             new_pool = pg.PagedKVPool(*planes)
-            x = rmsnorm(params["final_norm"], x)
-            logits = T._readout(params, cfg, x)[:, 0]                 # (B, V)
+            logits = T.final_logits(params, cfg, x)[:, 0]             # (B, V)
             if sampled:
                 keys = jax.vmap(sampling.slot_key)(base_keys, pos + 1)
                 tok = sampling.sample_tokens(logits, temps, topks, keys)
@@ -386,8 +428,7 @@ class ServeEngine:
                   pool.k_scale, pool.v_scale)
             h, planes = jax.lax.scan(body, h, xs)
             new_pool = pg.PagedKVPool(*planes)
-            h = rmsnorm(params["final_norm"], h)
-            logits = T._readout(params, cfg, h)[0]                    # (C, V)
+            logits = T.final_logits(params, cfg, h)[0]                # (C, V)
             return logits[last_rel], new_pool
 
         return chunk_fn
@@ -396,6 +437,133 @@ class ServeEngine:
         if self._chunk_jit_fn is None:
             self._chunk_jit_fn = jax.jit(self._make_chunk_fn())
         return self._chunk_jit_fn
+
+    def _make_draft_fn(self):
+        """``spec_decode`` greedy decode steps through the low-bit draft
+        tree against each slot's **scratch KV tail**: every scan iteration
+        is the vanilla greedy decode fn (same append-then-attend paged
+        step), just under ``slice_planes(draft_bits)`` weights, writing rows
+        past the committed length. The draft attends its own draft-minted
+        scratch rows — it is only a guesser; the verify pass overwrites
+        every window row with full-precision-minted codes *before* it
+        attends, so no draft bit ever reaches committed state."""
+        decode_fn = self._make_decode_fn(sampled=False)
+        k = self.spec_decode
+
+        def draft_fn(params, pool, last_tok, lens, block_table, active,
+                     base_keys, temps, topks):
+            def body(carry, _):
+                pool, tok, lens = carry
+                nxt, _, pool = decode_fn(params, pool, tok[:, None], lens,
+                                         block_table, active, base_keys,
+                                         temps, topks)
+                return (pool, nxt, lens + active.astype(jnp.int32)), nxt
+
+            (pool, _, _), toks = jax.lax.scan(
+                body, (pool, last_tok, lens), None, length=k)
+            return jnp.moveaxis(toks, 0, 1), pool              # (B, k)
+
+        return draft_fn
+
+    def _draft_jit(self):
+        if self._draft_jit_fn is None:
+            self._draft_jit_fn = jax.jit(self._make_draft_fn())
+        return self._draft_jit_fn
+
+    def _make_verify_fn(self, sampled: bool):
+        """Score all ``W = spec_decode + 1`` window positions — the slot's
+        pending token plus its k draft tokens — in ONE full-precision
+        forward, batched over slots (the chunked-prefill shape, batched:
+        per-slot positions, per-slot scatter targets, per-slot causal mask).
+
+        Write-then-attend: each layer quantizes and scatters the window's
+        K/V rows into the pool first (:func:`repro.serve.pages.write_rows`,
+        overwriting the draft's scratch rows), then attends the dequantized
+        gathered context — so window position i reads codes identical to
+        what sequential decode would have read at that position, and the
+        rows of *accepted* tokens are already exactly the rows a sequential
+        decode would have written. That structural identity, not a
+        tolerance, is the token-identity guarantee.
+
+        ``sampled`` draws every window position with the same
+        fold_in(base, position) key sequential decode uses
+        (:func:`repro.serve.sampling.window_keys`) — temperature > 0 falls
+        back to verify-step sampling with unchanged output."""
+        cfg, spec = self.cfg, self.cfg.attn_spec
+        page = self.page_size
+        W = self.spec_decode + 1
+        n_ctx = self.max_pages_per_seq * page
+        g, d = spec.n_kv_heads, spec.head_dim
+
+        def verify_fn(params, pool, draft, last_tok, lens, block_table,
+                      active, base_keys, temps, topks):
+            b = last_tok.shape[0]
+            toks = jnp.concatenate([last_tok[:, None], draft], axis=1)
+            positions = lens[:, None] + jnp.arange(W, dtype=jnp.int32)
+            page_ids = jnp.take_along_axis(
+                block_table, positions // page, axis=1)
+            page_ids = jnp.where(active[:, None], page_ids, 0)    # null page
+            offs = positions % page
+            h = embed(params["embed"], toks).astype(cfg.dtype)    # (B, W, d)
+            key_pos = jnp.arange(n_ctx, dtype=jnp.int32)
+            # per-slot causal mask: rows ≤ the query's absolute position are
+            # either committed history or freshly written this window; pages
+            # past the runway are unreachable (key_pos > position)
+            mask = key_pos[None, None, :] <= positions[:, :, None]  # (B,W,S)
+
+            def body(h, inp):
+                layer, kp, vp, ks, vs = inp
+                kv_bits = kv_bits_of(kp)
+                box = {}
+
+                def attend(z):
+                    pa = layer["attn"]
+                    q = dense(pa["q"], z).reshape(b, W, spec.n_heads, d)
+                    kx = dense(pa["k"], z).reshape(b, W, g, d)
+                    vx = dense(pa["v"], z).reshape(b, W, g, d)
+                    q = apply_rope(q, positions, spec.rope_theta)
+                    kx = apply_rope(kx, positions, spec.rope_theta)
+                    kp2, vp2, ks2, vs2 = pg.write_rows(
+                        kp, vp, ks, vs, kx, vx, page_ids, offs)
+                    box["planes"] = (kp2, vp2, ks2, vs2)
+                    kk = dequant_pages_ref(
+                        gather_pages_ref(kp2, block_table),
+                        gather_pages_ref(ks2, block_table) if kv_bits
+                        else None)
+                    vv = dequant_pages_ref(
+                        gather_pages_ref(vp2, block_table),
+                        gather_pages_ref(vs2, block_table) if kv_bits
+                        else None)
+                    out = attn._attend_block(q, kk, vv, spec.scale, mask)
+                    return dense(pa["o"], out.reshape(
+                        b, W, spec.n_heads * d))
+
+                h = T.decode_layer_block(cfg, layer, h, attend)
+                return h, box["planes"]
+
+            xs = (params["layers"], pool.k_pages, pool.v_pages,
+                  pool.k_scale, pool.v_scale)
+            h, planes = jax.lax.scan(body, h, xs)
+            new_pool = pg.PagedKVPool(*planes)
+            logits = T.final_logits(params, cfg, h)               # (B, W, V)
+            if sampled:
+                keys = sampling.window_keys(base_keys, positions + 1)
+                tgt = sampling.sample_tokens(
+                    logits.reshape(b * W, -1), jnp.repeat(temps, W),
+                    jnp.repeat(topks, W),
+                    keys.reshape(b * W, 2)).reshape(b, W)
+            else:
+                tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return jnp.where(active[:, None], tgt, 0), new_pool
+
+        return verify_fn
+
+    def _verify_jit(self, sampled: bool):
+        fn = self._verify_jits.get(sampled)
+        if fn is None:
+            fn = self._verify_jits[sampled] = jax.jit(
+                self._make_verify_fn(sampled))
+        return fn
 
     # -------------------------------------------------------------- host API
     def submit(self, req: Request) -> None:
@@ -450,6 +618,21 @@ class ServeEngine:
         chunked prefills non-cacheable: pages minted under other weight bits
         must never serve a prefix hit (hit-vs-cold bit-identity is per
         weight precision)."""
+        tree = self._sliced_tree(k)
+        if tree is not self.params:
+            if self.prefix is not None:
+                self.prefix.release_all()
+            for st in self._slots:
+                if st is not None and "prefill_pos" in st:
+                    st["no_insert"] = True
+        self.params = tree
+        self.weight_bits = int(k)
+
+    def _sliced_tree(self, k: int):
+        """The cached ``slice_planes(k)`` view of the full artifact — one
+        tree per k, shared by :meth:`set_weight_bits` (serving precision)
+        and the speculative draft (``draft_bits``). Zero-copy plane slices;
+        each distinct k costs one extra jit trace of its decode variant."""
         tree = self._params_by_bits.get(k)
         if tree is None:
             n_hit = [0]
@@ -465,18 +648,19 @@ class ServeEngine:
                                 is_leaf=lambda x: isinstance(x, QTensor))
             if not n_hit[0]:
                 raise ValueError(
-                    "set_weight_bits needs layout='bitplane' QTensor weights "
-                    "— quantize with quantize_param_tree(..., "
+                    "k-bit weight views need layout='bitplane' QTensor "
+                    "weights — quantize with quantize_param_tree(..., "
                     "layout='bitplane')")
             self._params_by_bits[k] = tree
-        if tree is not self.params:
-            if self.prefix is not None:
-                self.prefix.release_all()
-            for st in self._slots:
-                if st is not None and "prefill_pos" in st:
-                    st["no_insert"] = True
-        self.params = tree
-        self.weight_bits = int(k)
+        return tree
+
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the full-precision verify accepted
+        (NaN before the first speculative window)."""
+        drafted = self.stats["spec_draft_tokens"]
+        if not drafted:
+            return float("nan")
+        return self.stats["spec_accepted_tokens"] / drafted
 
     def kv_pool_nbytes(self, used_only: bool = False) -> int:
         """Logical KV HBM bytes (QTensor.nbytes accounting; §2.2).
@@ -748,10 +932,109 @@ class ServeEngine:
                 if victim is None or victim == slot:
                     break                      # this slot itself got evicted
 
+    def _spec_ready(self) -> bool:
+        """Can this step run a speculative window? Checked *after*
+        ``_ensure_pages`` so a preemption it caused (replay in flight)
+        forces the vanilla fallback; a draft at ≥ the serving precision
+        would be pure overhead, so an autoscaler drop to (or below)
+        ``draft_bits`` disables speculation until bits are restored."""
+        if not self.spec_decode:
+            return False
+        if self._replaying():
+            return False
+        if (self.weight_bits is not None
+                and self.weight_bits <= self.draft_bits):
+            return False
+        return True
+
+    def _ensure_spec_pages(self) -> bool:
+        """Extend every active slot's block table to cover the window rows
+        (positions ``lens .. lens+k``). Speculation never preempts anyone:
+        when a slot lacks runway (sequence near ``max_seq_len``) or the
+        pool can't supply the scratch pages, the step falls back to vanilla
+        decode. Pages allocated here join the slot's ``pages`` list — they
+        are committed rows' pages on acceptance, ordinary growth pages
+        later otherwise, and are freed with the slot either way (the
+        preemption-with-draft-tail leak test pins this)."""
+        k = self.spec_decode
+        for slot in range(self.max_slots):
+            if not self._active[slot] or self._slots[slot] is None:
+                continue
+            n = int(self._lens[slot])
+            if n + k + 1 > self.max_seq_len:
+                return False
+            for pidx in range(n // self.page_size,
+                              (n + k) // self.page_size + 1):
+                if self._bt[slot, pidx] != 0:
+                    continue
+                ids = self._alloc_pages(1)
+                if ids is None:
+                    return False
+                self._bt[slot, pidx] = ids[0]
+                self._slots[slot]["pages"].append(ids[0])
+        return True
+
+    def _spec_step(self, finished: list) -> None:
+        """One speculative window: k greedy draft steps at ``draft_bits``
+        + one batched full-precision verify, then commit the longest
+        accepted prefix per slot. Token accounting is exactly-once: a token
+        is counted when (and only when) it is committed to ``gen``, and
+        committing stops the moment the slot finishes (eos / budget), so a
+        slot finishing mid-window never counts its discarded tail — the
+        invariant ``decode_tokens == Σ (n_generated - 1)`` holds with or
+        without speculation. One wall-clock entry (draft + verify) lands in
+        ``decode_times`` per window."""
+        k = self.spec_decode
+        sampled = bool((self._temps[self._active] > 0).any())
+        args = (jnp.asarray(self._last_tok), jnp.asarray(self._lens),
+                jnp.asarray(self._bt), jnp.asarray(self._active),
+                jnp.asarray(self._base_keys), jnp.asarray(self._temps),
+                jnp.asarray(self._topks))
+        t0 = self._clock()
+        draft, pool = self._draft_jit()(self._params_draft, self.pool, *args)
+        tgt, self.pool = self._verify_jit(sampled)(
+            self.params, pool, draft, *args)
+        draft_np = np.asarray(draft)
+        tgt_np = np.asarray(tgt)               # blocks until ready
+        dt = self._clock() - t0
+
+        committed = 0
+        for slot in range(self.max_slots):
+            if not self._active[slot]:
+                continue
+            state = self._slots[slot]
+            m = 0
+            while m < k and draft_np[slot, m] == tgt_np[slot, m]:
+                m += 1
+            self.stats["spec_draft_tokens"] += k
+            self.stats["spec_accepted_tokens"] += m
+            # commit the verify chain: the m accepted draft tokens plus the
+            # verify step's own token at the first divergence — exactly the
+            # tokens sequential decode would have produced
+            for tok in tgt_np[slot, :m + 1]:
+                tok = int(tok)
+                self._lens[slot] += 1
+                state["gen"].append(tok)
+                self._last_tok[slot] = tok
+                committed += 1
+                if self._maybe_finish(slot, finished):
+                    break
+
+        self.stats["decode_steps"] += 1
+        self.stats["spec_steps"] += 1
+        self.stats["decode_tokens"] += committed
+        variant = ("spec", sampled, self.weight_bits)
+        if variant in self._compiled_variants:  # steady state: skip compiles
+            self.stats["decode_seconds"] += dt
+            self.stats["steady_decode_tokens"] += committed
+            self.decode_times.append(dt)
+        self._compiled_variants.add(variant)
+
     def step(self) -> list[Finished]:
         """One scheduler iteration: admit what fits, advance one prefill
-        chunk, decode one token for every live sequence. Returns the
-        requests that finished."""
+        chunk, decode one token for every live sequence — or, with
+        ``spec_decode``, run one speculative window (up to k+1 tokens per
+        slot). Returns the requests that finished."""
         finished: list[Finished] = []
         if self.autoscaler is not None:
             now = self._clock()
@@ -774,6 +1057,14 @@ class ServeEngine:
         if step_prefill > self.stats["max_prefill_tokens_per_step"]:
             self.stats["max_prefill_tokens_per_step"] = step_prefill
         if not self._active.any():
+            return finished
+
+        # speculative window: k cheap draft steps + one full-precision
+        # verify. Falls back to a vanilla step while a replay is in flight,
+        # when the autoscaler sits at/below the draft's bits, or when any
+        # active slot lacks k+1 rows of page runway.
+        if self._spec_ready() and self._ensure_spec_pages():
+            self._spec_step(finished)
             return finished
 
         sampled = bool((self._temps[self._active] > 0).any())

@@ -156,6 +156,36 @@ def append_rows(k_pages: jax.Array, v_pages: jax.Array,
     return k_pages, v_pages, k_scale, v_scale
 
 
+def write_rows(k_pages: jax.Array, v_pages: jax.Array,
+               k_scale: jax.Array | None, v_scale: jax.Array | None,
+               k_new: jax.Array, v_new: jax.Array,
+               page_ids: jax.Array, offsets: jax.Array):
+    """Scatter a **window** of KV rows per slot into ONE layer's page planes
+    — the W-wide generalization of :func:`append_rows` used by the
+    speculative-decode verify step (W = k_draft + 1 rows per slot, all
+    quantized and written before the window attends).
+
+    k/v_new: (B, W, Hkv, D) pre-quantization; page_ids/offsets: (B, W) int32
+    per-row targets (rows of inactive slots target the null page 0). The
+    codes are minted by the same :func:`quant_rows` row scheme as single-row
+    appends — per-(token, head) scaling is row-local, so a row's code is
+    identical whether it arrived via decode, chunked prefill, or a verify
+    window; that identity is what makes accepted speculative rows committable
+    as-is.
+    """
+    from repro.kernels.ops import kv_bits_of
+
+    kv_bits = kv_bits_of(k_pages)
+    kc, ks = quant_rows(k_new, kv_bits, k_pages.dtype)
+    vc, vs = quant_rows(v_new, kv_bits, v_pages.dtype)
+    k_pages = k_pages.at[page_ids, offsets].set(kc)
+    v_pages = v_pages.at[page_ids, offsets].set(vc)
+    if kv_bits:
+        k_scale = k_scale.at[page_ids, offsets].set(ks)
+        v_scale = v_scale.at[page_ids, offsets].set(vs)
+    return k_pages, v_pages, k_scale, v_scale
+
+
 def pool_nbytes(pool: PagedKVPool, n_pages: int | None = None) -> int:
     """Logical KV HBM bytes of ``n_pages`` pages (default: the whole pool),
     accounted through :attr:`repro.quant.QTensor.nbytes` shape-only views —
@@ -270,5 +300,5 @@ def pages_needed(n_tokens: int, page_size: int) -> int:
 
 
 __all__ = ["PagedKVPool", "PageAllocator", "init_pool", "write_prompt",
-           "append_rows", "quant_rows", "pool_nbytes", "kv_scheme",
-           "pages_needed"]
+           "append_rows", "write_rows", "quant_rows", "pool_nbytes",
+           "kv_scheme", "pages_needed"]

@@ -42,4 +42,16 @@ def slot_key(seed_key: jax.Array, position: jax.Array) -> jax.Array:
     return jax.random.fold_in(seed_key, position)
 
 
-__all__ = ["sample_tokens", "slot_key"]
+def window_keys(seed_keys: jax.Array, positions: jax.Array) -> jax.Array:
+    """:func:`slot_key` over a decode **window**: seed_keys (B, 2) uint32 ×
+    positions (B, W) int32 → (B, W, 2). The speculative verify step samples
+    all W = k+1 window positions in one pass; because each draw's key is the
+    same ``fold_in(base, position)`` a sequential decode would use at that
+    position, the verify-sampled chain is token-identical to vanilla sampled
+    decode — the property that lets temperature > 0 fall back to verify-step
+    sampling instead of disabling speculation."""
+    return jax.vmap(jax.vmap(slot_key, in_axes=(None, 0)))(
+        seed_keys, positions)
+
+
+__all__ = ["sample_tokens", "slot_key", "window_keys"]

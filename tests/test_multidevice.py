@@ -15,7 +15,9 @@ What they pin:
     identical) in a multi-device process.
   * the multi-replica driver: prefix-caching engine replicas pinned to
     distinct devices behind one shared queue finish a shared-prefix trace
-    with balanced dispatch and leak-free pools.
+    with balanced dispatch and leak-free pools — and with self-speculative
+    decoding on under prefix-aware dispatch, token-identical to the
+    non-speculative replica set.
 """
 import numpy as np
 import jax
@@ -278,6 +280,49 @@ class TestShardedServe:
         assert sorted(out) == list(range(n))
         assert min(rs.dispatched) >= 2        # least-loaded spreads the work
         assert rs.stats_sum("prefix_hits") >= 1
+        for eng in rs.engines:
+            eng.release_prefix_cache()
+            eng.allocator.check_leaks(0)
+
+    def test_replica_set_spec_decode_prefix_dispatch(self):
+        """Speculative decoding composes with the multi-replica front-end:
+        two device-pinned replicas under **prefix-aware dispatch**, each
+        drafting through the int4 bitplane view, finish a shared-prefix
+        trace token-identical to a vanilla (non-speculative) replica set,
+        with speculative windows on both replicas and leak-free pools."""
+        from benchmarks.bench_serve_engine import make_shared_trace
+        from repro import configs
+        from repro.launch.serve import ReplicaSet
+        from repro.models import transformer as T
+        from repro.precision.qat import quantize_param_tree
+        from repro.quant import PrecisionPlan
+        from repro.serve import ServeEngine
+
+        cfg = configs.get_reduced("qwen2.5-14b")
+        params = quantize_param_tree(T.init_params(KEY, cfg), bits=8,
+                                     layout="bitplane")
+
+        def mk_set(spec):
+            kw = dict(spec_decode=3, draft_bits=4) if spec else {}
+            return ReplicaSet(
+                lambda i: ServeEngine(params, cfg,
+                                      plan=PrecisionPlan(kv_bits=8),
+                                      max_slots=2, page_size=4,
+                                      max_seq_len=32, prefix_cache=True,
+                                      chunk_pages=2, **kw),
+                2, devices=jax.devices()[:2], dispatch="prefix")
+
+        n = 12
+        trace = lambda: make_shared_trace(n, cfg.vocab_size, page_size=4,
+                                          sys_pages=2, max_new=4)
+        want = mk_set(spec=False).run(trace())
+        rs = mk_set(spec=True)
+        out = rs.run(trace())
+        assert sorted(out) == list(range(n))
+        assert rs.stats_sum("spec_steps") >= 2
+        assert min(e.stats["spec_steps"] for e in rs.engines) >= 1
+        for rid in want:
+            np.testing.assert_array_equal(out[rid].tokens, want[rid].tokens)
         for eng in rs.engines:
             eng.release_prefix_cache()
             eng.allocator.check_leaks(0)

@@ -684,3 +684,239 @@ class TestKVBytesAccounting:
               for bits in (0, 8, 4)}
         assert nb[0] / nb[8] >= 1.8
         assert nb[0] / nb[4] >= 3.0
+
+
+def _bitplane_params(cfg, bits=8):
+    from repro.precision.qat import quantize_param_tree
+
+    return quantize_param_tree(_params(cfg), bits=bits, layout="bitplane")
+
+
+class TestSpeculativeDecoding:
+    """Self-speculative decoding: low-bit draft + full-precision verify.
+
+    The guarantee under test: speculation is an *execution strategy*, not a
+    model change — outputs are token-identical to vanilla decode at every
+    (kv_bits × draft_bits) combination, greedy and sampled, through
+    rejections, page-boundary crossings, and preemptions."""
+
+    def _reqs(self, cfg, n=4, max_new=8, seed=11, **kw):
+        rng = np.random.default_rng(seed)
+        return [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            int(rng.integers(4, 12))),
+                        max_new_tokens=max_new, **kw)
+                for i in range(n)]
+
+    @pytest.mark.parametrize("kv_bits", [0, 8, 4])
+    def test_greedy_token_identical_every_draft_bits(self, kv_bits):
+        """Spec output == vanilla output exactly, at bf16/int8/int4 KV ×
+        {4,2}-bit drafts. Accepted rows are minted by the verify pass's own
+        full-precision write-then-attend, so this holds regardless of how
+        wrong the low-bit draft is."""
+        cfg = _cfg()
+        params = _bitplane_params(cfg)
+        kw = dict(plan=PrecisionPlan(kv_bits=kv_bits), max_slots=2,
+                  page_size=4, max_seq_len=32)
+        reqs = self._reqs(cfg)
+        vanilla = ServeEngine(params, cfg, **kw).run(reqs)
+        for draft_bits in (4, 2):
+            eng = ServeEngine(params, cfg, spec_decode=3,
+                              draft_bits=draft_bits, **kw)
+            out = eng.run(reqs)
+            assert eng.stats["spec_steps"] >= 1
+            assert eng.stats["spec_draft_tokens"] > 0
+            for rid in vanilla:
+                np.testing.assert_array_equal(out[rid].tokens,
+                                              vanilla[rid].tokens)
+            eng.allocator.check_leaks(0)
+
+    def test_spec_zero_degenerates_to_vanilla(self):
+        """spec_decode=0 is the vanilla engine bit-for-bit: same tokens,
+        no speculative counters, NaN acceptance."""
+        cfg = _cfg()
+        params = _bitplane_params(cfg)
+        kw = dict(plan=PrecisionPlan(kv_bits=8), max_slots=2, page_size=4,
+                  max_seq_len=32)
+        reqs = self._reqs(cfg)
+        vanilla = ServeEngine(params, cfg, **kw).run(reqs)
+        eng = ServeEngine(params, cfg, spec_decode=0, **kw)
+        out = eng.run(reqs)
+        for rid in vanilla:
+            np.testing.assert_array_equal(out[rid].tokens,
+                                          vanilla[rid].tokens)
+        assert eng.stats["spec_steps"] == 0
+        assert eng.stats["spec_draft_tokens"] == 0
+        assert np.isnan(eng.acceptance_rate())
+
+    def test_first_draft_token_rejection_recovers(self):
+        """A window whose *first* draft token is wrong commits exactly one
+        token (the verify chain's), and the run still matches vanilla. The
+        2-bit draft on random weights is wrong often enough that such a
+        window provably occurs in this trace."""
+        cfg = _cfg()
+        params = _bitplane_params(cfg)
+        kw = dict(plan=PrecisionPlan(kv_bits=8), max_slots=2, page_size=4,
+                  max_seq_len=48)
+        reqs = self._reqs(cfg, n=3, max_new=12, seed=13)
+        vanilla = ServeEngine(params, cfg, **kw).run(reqs)
+        eng = ServeEngine(params, cfg, spec_decode=3, draft_bits=2, **kw)
+        for r in reqs:
+            eng.submit(r)
+        out, first_rejected = {}, False
+        while eng.busy:
+            before = {s: len(eng._slots[s]["gen"])
+                      for s in range(eng.max_slots) if eng._active[s]}
+            sp0 = eng.stats["spec_steps"]
+            for f in eng.step():
+                out[f.rid] = f
+            if eng.stats["spec_steps"] > sp0:
+                for s, n0 in before.items():
+                    st = eng._slots[s]
+                    # +1 token and still running ⇒ the window accepted no
+                    # draft token, only verify's correction
+                    if st is not None and len(st["gen"]) == n0 + 1:
+                        first_rejected = True
+        assert first_rejected, "no window rejected its first draft token"
+        assert eng.acceptance_rate() < 1.0
+        for rid in vanilla:
+            np.testing.assert_array_equal(out[rid].tokens,
+                                          vanilla[rid].tokens)
+        eng.allocator.check_leaks(0)
+
+    def test_window_crosses_page_boundary(self):
+        """k+1 == page_size: every unaligned window spans two pages, so the
+        scratch-tail page allocation and the cross-page verify scatter are
+        exercised on nearly every step."""
+        cfg = _cfg()
+        params = _bitplane_params(cfg)
+        rng = np.random.default_rng(17)
+        # prompt of 7 → first window rows 7..10 straddle pages 1|2 (page 4)
+        reqs = [Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 7),
+                        max_new_tokens=10)]
+        kw = dict(plan=PrecisionPlan(kv_bits=4), max_slots=1, page_size=4,
+                  max_seq_len=32)
+        vanilla = ServeEngine(params, cfg, **kw).run(reqs)
+        eng = ServeEngine(params, cfg, spec_decode=3, draft_bits=4, **kw)
+        out = eng.run(reqs)
+        assert eng.stats["spec_steps"] >= 2
+        np.testing.assert_array_equal(out[0].tokens, vanilla[0].tokens)
+        eng.allocator.check_leaks(0)
+
+    def test_preemption_with_uncommitted_draft_tail_leak_free(self):
+        """Pool pressure preempting a slot that ran speculative windows:
+        the window's scratch pages joined the slot's page list at
+        allocation, so preemption frees them — no leak, and every request
+        still replays to its solo (vanilla) output."""
+        cfg = _cfg()
+        params = _bitplane_params(cfg)
+        eng = ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=8),
+                          max_slots=3, page_size=4, max_seq_len=32,
+                          n_pages=10, reserve="none",
+                          spec_decode=3, draft_bits=4)
+        rng = np.random.default_rng(4)
+        reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 6),
+                        max_new_tokens=8) for i in range(4)]
+        out = eng.run(reqs)
+        assert eng.stats["preemptions"] >= 1
+        assert eng.stats["spec_steps"] >= 1
+        for r in reqs:
+            solo = ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=8),
+                               max_slots=1, page_size=4,
+                               max_seq_len=32).run([r])
+            np.testing.assert_array_equal(solo[r.rid].tokens,
+                                          out[r.rid].tokens)
+        eng.allocator.check_leaks(0)
+
+    def test_sampled_verify_token_identical(self):
+        """temperature > 0: the verify pass samples every window position
+        with the same fold_in(base, position) key sequential decode would
+        use, so a mixed greedy/sampled batch stays token-identical to
+        vanilla."""
+        cfg = _cfg()
+        params = _bitplane_params(cfg)
+        rng = np.random.default_rng(3)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, 4 + 3 * i),
+                        max_new_tokens=6,
+                        temperature=0.8 if i % 2 else 0.0,
+                        top_k=5 if i % 2 else 0, seed=7)
+                for i in range(4)]
+        kw = dict(plan=PrecisionPlan(kv_bits=8), max_slots=2, page_size=4,
+                  max_seq_len=32)
+        vanilla = ServeEngine(params, cfg, **kw).run(reqs)
+        eng = ServeEngine(params, cfg, spec_decode=3, draft_bits=4, **kw)
+        out = eng.run(reqs)
+        assert eng.stats["spec_steps"] >= 1
+        for rid in vanilla:
+            np.testing.assert_array_equal(out[rid].tokens,
+                                          vanilla[rid].tokens)
+        eng.allocator.check_leaks(0)
+
+    def test_decode_tokens_counted_exactly_once(self):
+        """Exactly-once token accounting under speculation: a slot hitting
+        eos or budget mid-window discards the rest of the accepted prefix,
+        and only committed tokens count — ``decode_tokens`` must equal
+        Σ (n_generated − 1) (the first token of each request comes from
+        prefill). Frozen injected clock also pins that window timing reads
+        the engine clock (every steady window measures 0.0 s)."""
+        cfg = _cfg()
+        params = _bitplane_params(cfg)
+        probe = ServeEngine(params, cfg, max_slots=1, page_size=4,
+                            max_seq_len=48)
+        reqs = self._reqs(cfg, n=4, max_new=10, seed=19)
+        ref = probe.run([reqs[0]])
+        eos = int(ref[0].tokens[-4])          # forces an early mid-window eos
+        clk = [0.0]
+        eng = ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=8),
+                          max_slots=2, page_size=4, max_seq_len=48,
+                          spec_decode=3, draft_bits=4,
+                          clock=lambda: clk[0])
+        out = eng.run([dataclasses.replace(r, eos_id=eos) for r in reqs])
+        assert eng.stats["spec_steps"] >= 1
+        assert any(f.reason == "eos" for f in out.values())
+        total = sum(f.n_generated - 1 for f in out.values())
+        assert eng.stats["decode_tokens"] == total
+        assert eng.stats["decode_seconds"] == 0.0
+        assert all(dt == 0.0 for dt in eng.decode_times)
+        eng.allocator.check_leaks(0)
+
+    def test_autoscaler_drop_to_draft_bits_disables_spec(self):
+        """Serving bits at (or below) draft_bits make the draft pure
+        overhead: speculation must pause after a rung drop and resume on
+        restore, with actuation only ever landing between windows."""
+        cfg = _cfg()
+        params = _bitplane_params(cfg)
+        eng = ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=8),
+                          max_slots=2, page_size=4, max_seq_len=64,
+                          spec_decode=3, draft_bits=4)
+        rng = np.random.default_rng(23)
+        eng.submit(Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 6),
+                           max_new_tokens=40))
+        while eng.busy and not eng.stats["spec_steps"]:
+            eng.step()
+        assert eng.stats["spec_steps"] >= 1
+        eng.set_weight_bits(4)                # == draft_bits → spec off
+        frozen = eng.stats["spec_steps"]
+        for _ in range(4):
+            if eng.busy:
+                eng.step()
+        assert eng.stats["spec_steps"] == frozen
+        eng.set_weight_bits(8)                # restored → spec resumes
+        while eng.busy:
+            eng.step()
+        assert eng.stats["spec_steps"] > frozen
+        eng.allocator.check_leaks(0)
+
+    def test_constructor_validation(self):
+        cfg = _cfg()
+        params = _bitplane_params(cfg)
+        dense = _params(cfg)
+        with pytest.raises(ValueError, match="spec_decode"):
+            ServeEngine(params, cfg, spec_decode=-1, draft_bits=4)
+        with pytest.raises(ValueError, match="draft_bits"):
+            ServeEngine(params, cfg, spec_decode=2)
+        with pytest.raises(ValueError, match="draft_bits"):
+            ServeEngine(params, cfg, draft_bits=4)
+        with pytest.raises(ValueError, match="bitplane"):
+            ServeEngine(dense, cfg, spec_decode=2, draft_bits=4)
