@@ -1,0 +1,224 @@
+"""Chaos benchmark: deterministic fault injection through the serving stack.
+
+Every row drives the engine / replica set on a **virtual clock**
+(:class:`repro.serve.VirtualClock`) with a seeded
+:class:`repro.serve.FaultInjector`, so a chaos run costs no wall time and
+replays bit-identically — the CHECKs are exact invariants, not statistics:
+
+* ``migrate_<kv>`` (bf16 / int8 / int4 KV) — a 2-replica
+  :class:`~repro.launch.serve.ReplicaSet` serves a shared-prefix trace;
+  replica 0 is killed mid-trace by injected device-loss raises (two in a
+  row walks its health machine healthy → suspect → dead). CHECKs: every
+  request completes **exactly once**, every request's tokens are identical
+  to the fault-free run (migrated requests replay prompt + committed
+  tokens through the recompute-preemption machinery — bit-exact, so the
+  failure is output-invisible), work actually migrated, the dead replica
+  restarted from the factory, p99 admission wait stays bounded in virtual
+  seconds, and every replica's pool drains leak-free.
+* ``quarantine_nan`` — an injected NaN-logits fault poisons one request
+  mid-decode. CHECKs: that request alone fails with ``reason='nan'``
+  (engine keeps serving), every other request is token-identical to the
+  clean run, the quarantined slot's pages are scrubbed + freed (leak-free
+  drain), and exactly one quarantine is counted.
+* ``trie_corrupt_int4`` — bits are flipped in a shared prefix-trie page
+  between two request waves. CHECKs: the checksum re-verification at
+  ``use`` time evicts the corrupt page (never attends it), the second wave
+  re-prefills cold and stays token-identical to an engine that never had a
+  cache, and the eviction is counted.
+
+The fault specs and the ``fired`` audit log together form a replayable
+chaos trace; rerunning with the same specs reproduces the run exactly.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import transformer as T
+from repro.quant import PrecisionPlan
+from repro.serve import FaultInjector, FaultSpec, ServeEngine, VirtualClock
+from repro.serve.faults import corrupt_kv_page
+
+from benchmarks.bench_serve_engine import make_shared_trace
+
+ARCH = "qwen2.5-14b"
+PAGE = 8
+DT = 0.01                 # virtual seconds advanced per driver iteration
+KILL_STEPS = (6, 7)       # set-level steps the device-loss raises fire at
+P99_BOUND_S = 2.0         # virtual-clock admission bound under one death
+
+
+def _mk_cfg():
+    cfg = configs.get_reduced(ARCH)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _drive(rs, trace, clock, max_steps: int = 20_000):
+    """Run a ReplicaSet to drain on the virtual clock, advancing ``DT`` per
+    scheduler iteration. Returns (results, duplicate-finish count)."""
+    for r in trace:
+        rs.submit(r)
+    out, dupes = {}, 0
+    for _ in range(max_steps):
+        if not rs._queue and not any(e.busy for e in rs.engines):
+            return out, dupes
+        for rid, f in rs.step().items():
+            if rid in out:
+                dupes += 1
+            out[rid] = f
+        clock.advance(DT)
+    raise RuntimeError(f"chaos drive exceeded {max_steps} steps")
+
+
+def _admit_p99(rs) -> float:
+    waits = [w for e in rs.engines for w in e.admit_waits]
+    return float(np.percentile(waits, 99)) if waits else 0.0
+
+
+def _migration_case(cfg, params, kv_bits: int, n_requests: int):
+    from repro.launch.serve import HealthConfig, ReplicaSet
+
+    kv_name = "bf16" if kv_bits == 0 else f"int{kv_bits}"
+
+    def build(faults):
+        clock = VirtualClock()
+        if faults is not None:
+            faults.clock = clock
+
+        def factory(i):
+            return ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=kv_bits),
+                               max_slots=4, page_size=PAGE, max_seq_len=64,
+                               prefix_cache=True, chunk_pages=2, clock=clock,
+                               fault_injector=faults, replica_id=i)
+
+        rs = ReplicaSet(factory, 2, clock=clock, fault_injector=faults,
+                        health=HealthConfig(step_deadline_s=30.0, dead_after=2,
+                                            restart_backoff_s=0.2,
+                                            backoff_cap_s=1.0, max_restarts=3))
+        return rs, clock
+
+    def trace():
+        return make_shared_trace(n_requests, cfg.vocab_size, page_size=PAGE,
+                                 sys_pages=4, max_new=8, seed=1)
+
+    rs, clock = build(None)
+    clean, dupes = _drive(rs, trace(), clock)
+    assert dupes == 0 and len(clean) == n_requests
+
+    faults = FaultInjector([
+        FaultSpec("replica_raise", at_step=s, replica=0) for s in KILL_STEPS])
+    rs, clock = build(faults)
+    out, dupes = _drive(rs, trace(), clock)
+    for eng in rs.engines:
+        eng.release_prefix_cache()
+        eng.allocator.check_leaks(0)
+    identical = all(np.array_equal(clean[rid].tokens, out[rid].tokens)
+                    for rid in clean)
+    p99 = _admit_p99(rs)
+    return {
+        "case": f"migrate_{kv_name}",
+        "requests": n_requests,
+        "deaths": rs.stats["deaths"],
+        "migrated": rs.stats["migrated"],
+        "restarts": rs.stats["restarts"],
+        "faults_fired": len(faults.fired),
+        "p99_admit_virtual_s": round(p99, 4),
+        "all_requests_completed": bool(len(out) == n_requests),
+        "exactly_once": bool(dupes == 0),
+        "migration_token_identical": bool(identical),
+        "work_migrated": bool(rs.stats["migrated"] > 0),
+        "replica_restarted": bool(rs.stats["restarts"] >= 1),
+        "p99_admit_bounded": bool(p99 <= P99_BOUND_S),
+        "pools_leak_free": True,             # check_leaks(0) above raised
+    }
+
+
+def _quarantine_case(cfg, params, n_requests: int):
+    def build(faults):
+        clock = VirtualClock()
+        if faults is not None:
+            faults.clock = clock
+        return ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=8),
+                           max_slots=4, page_size=PAGE, max_seq_len=64,
+                           chunk_pages=2, clock=clock, fault_injector=faults)
+
+    def trace():
+        return make_shared_trace(n_requests, cfg.vocab_size, page_size=PAGE,
+                                 sys_pages=4, max_new=8, seed=2)
+
+    clean = build(None).run(trace())
+    poison_rid = 0
+    eng = build(FaultInjector([
+        FaultSpec("nan_logits", at_step=6, rid=poison_rid)]))
+    out = eng.run(trace())
+    eng.allocator.check_leaks(0)
+    others_identical = all(
+        np.array_equal(clean[rid].tokens, out[rid].tokens)
+        for rid in clean if rid != poison_rid)
+    return {
+        "case": "quarantine_nan",
+        "requests": n_requests,
+        "poisoned_rid": poison_rid,
+        "quarantined": eng.stats["quarantined"],
+        "poisoned_failed_with_status": bool(out[poison_rid].reason == "nan"),
+        "engine_survived_all_finished": bool(len(out) == n_requests),
+        "others_token_identical": bool(others_identical),
+        "exactly_one_quarantine": bool(eng.stats["quarantined"] == 1),
+        "pool_leak_free": True,
+    }
+
+
+def _trie_corruption_case(cfg, params, n_requests: int):
+    def mk(prefix: bool):
+        return ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=4),
+                           max_slots=4, page_size=PAGE, max_seq_len=64,
+                           prefix_cache=prefix, chunk_pages=2,
+                           clock=VirtualClock())
+
+    def wave(seed):
+        return make_shared_trace(n_requests, cfg.vocab_size, page_size=PAGE,
+                                 sys_pages=4, n_families=1, max_new=8,
+                                 seed=seed)
+
+    # cold reference: chunked engine that never had a cache
+    cold = mk(False)
+    cold_out = cold.run(wave(4))
+    cold.allocator.check_leaks(0)
+
+    warm = mk(True)
+    warm.run(wave(4))                        # wave 1 populates the trie
+    victim = warm.prefix.match(
+        np.asarray(wave(4)[0].prompt, np.int32))[0]
+    warm.pool = corrupt_kv_page(warm.pool, victim, n_flips=4, seed=7)
+    warm_out = warm.run(wave(4))             # wave 2 must not attend it
+    warm.release_prefix_cache()
+    warm.allocator.check_leaks(0)
+    identical = all(np.array_equal(cold_out[rid].tokens, warm_out[rid].tokens)
+                    for rid in cold_out)
+    return {
+        "case": "trie_corrupt_int4",
+        "requests": n_requests,
+        "victim_page": int(victim),
+        "corrupt_evictions": warm.prefix.corrupt_evictions,
+        "corrupt_page_evicted": bool(warm.prefix.corrupt_evictions >= 1),
+        "reprefill_token_identical_to_cold": bool(identical),
+        "pool_leak_free": True,
+    }
+
+
+def run(quick: bool = False):
+    n_requests = 24 if quick else 48
+    cfg, params = _mk_cfg()
+    rows = []
+    for kv_bits in (0, 8, 4):
+        rows.append(_migration_case(cfg, params, kv_bits, n_requests))
+    rows.append(_quarantine_case(cfg, params, 12 if quick else 24))
+    rows.append(_trie_corruption_case(cfg, params, 8))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

@@ -44,11 +44,12 @@ BENCHES = [
     ("serve_engine", "benchmarks.bench_serve_engine"),
     ("spec_decode", "benchmarks.bench_spec_decode"),
     ("train_step", "benchmarks.bench_train_step"),
+    ("chaos", "benchmarks.bench_chaos"),
 ]
 
 # fast, shape-independent claims only — what CI runs on every PR
 SMOKE_BENCHES = {"fig5_bandwidth_model", "ds_fused", "qmm", "bitplane",
-                 "serve_engine", "spec_decode", "train_step"}
+                 "serve_engine", "spec_decode", "train_step", "chaos"}
 
 # committed per-bench baselines the --smoke regression gate compares against
 BASELINE_DIR = os.path.join(_REPO_ROOT, "benchmarks", "baselines")

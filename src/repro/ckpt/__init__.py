@@ -1,3 +1,3 @@
 from . import checkpoint, ship  # noqa: F401
 from .checkpoint import CheckpointManager  # noqa: F401
-from .ship import load_ship_weights, save_ship_weights  # noqa: F401
+from .ship import ShipArtifactError, load_ship_weights, save_ship_weights  # noqa: F401

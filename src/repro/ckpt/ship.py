@@ -30,6 +30,8 @@ import json
 import os
 import shutil
 import tempfile
+import zipfile
+import zlib
 from typing import Any
 
 import numpy as np
@@ -38,6 +40,15 @@ import jax
 from repro.quant import QScheme, QTensor
 
 FORMAT = "weights-bitplane-v1"
+
+
+class ShipArtifactError(RuntimeError):
+    """A committed ship-weights artifact is unreadable — truncated,
+    bit-rotted, or torn by a partial copy. The ``.complete`` marker guards
+    against interrupted *writes*; this error covers corruption discovered
+    **after** commit, and always names the fix (re-run
+    :func:`save_ship_weights` / restore the artifact from a good copy)
+    instead of surfacing a raw numpy/zipfile traceback."""
 
 
 def _path_keys(path) -> list:
@@ -142,9 +153,17 @@ def load_ship_weights(directory: str, bits: int | None = None) -> Any:
     full stored precision. Either way only one artifact exists on disk."""
     if not os.path.exists(os.path.join(directory, ".complete")):
         raise FileNotFoundError(
-            f"{directory} is not a committed ship artifact (.complete missing)")
-    with open(os.path.join(directory, "manifest.json")) as f:
-        manifest = json.load(f)
+            f"{directory} is not a committed ship artifact (.complete "
+            "missing — the save was interrupted before commit; re-run "
+            "save_ship_weights)")
+    try:
+        with open(os.path.join(directory, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise ShipArtifactError(
+            f"{directory} is corrupt: manifest.json is missing or unreadable "
+            f"({e}) despite the .complete marker — restore the artifact from "
+            "a good copy or re-run save_ship_weights") from e
     if manifest.get("format") != FORMAT:
         raise ValueError(
             f"{directory} has format {manifest.get('format')!r}, expected "
@@ -153,23 +172,39 @@ def load_ship_weights(directory: str, bits: int | None = None) -> Any:
     if bits is not None and not 1 <= bits <= manifest["bits"]:
         raise ValueError(
             f"bits={bits} not servable by a {manifest['bits']}-bit artifact")
-    data = np.load(os.path.join(directory, "arrays.npz"))
-    tree: dict = {}
-    for i, entry in enumerate(manifest["leaves"]):
-        if entry["kind"] == "qtensor":
-            scheme = QScheme(**entry["scheme"])
-            qt = QTensor(
-                jax.numpy.asarray(data[f"leaf_{i}_codes"]),
-                jax.numpy.asarray(
-                    _unhost(data[f"leaf_{i}_scale"], entry["scale_dtype"])),
-                scheme)
-            if bits is not None and bits < scheme.bits:
-                qt = qt.slice_planes(bits)
-            leaf = qt
-        else:
-            leaf = jax.numpy.asarray(_unhost(data[f"leaf_{i}"], entry["dtype"]))
-        _insert(tree, entry["path"], leaf)
+    # npz truncation surfaces differently per failure point — BadZipFile
+    # (chopped central directory), EOFError/zlib.error (chopped member),
+    # KeyError (missing member), ValueError (short read into the array) —
+    # and all of them mean the same thing to a caller: the committed
+    # artifact's data is unreadable. One clean error, one fix.
+    try:
+        data = np.load(os.path.join(directory, "arrays.npz"))
+        tree: dict = {}
+        for i, entry in enumerate(manifest["leaves"]):
+            if entry["kind"] == "qtensor":
+                scheme = QScheme(**entry["scheme"])
+                qt = QTensor(
+                    jax.numpy.asarray(data[f"leaf_{i}_codes"]),
+                    jax.numpy.asarray(
+                        _unhost(data[f"leaf_{i}_scale"],
+                                entry["scale_dtype"])),
+                    scheme)
+                if bits is not None and bits < scheme.bits:
+                    qt = qt.slice_planes(bits)
+                leaf = qt
+            else:
+                leaf = jax.numpy.asarray(
+                    _unhost(data[f"leaf_{i}"], entry["dtype"]))
+            _insert(tree, entry["path"], leaf)
+    except (zipfile.BadZipFile, OSError, EOFError, KeyError, ValueError,
+            zlib.error) as e:
+        raise ShipArtifactError(
+            f"{directory} is corrupt or truncated: arrays.npz failed to "
+            f"read ({type(e).__name__}: {e}) despite the .complete marker — "
+            "the data was damaged after commit; restore the artifact from a "
+            "good copy or re-run save_ship_weights") from e
     return _listify(tree)
 
 
-__all__ = ["FORMAT", "load_ship_weights", "save_ship_weights"]
+__all__ = ["FORMAT", "ShipArtifactError", "load_ship_weights",
+           "save_ship_weights"]

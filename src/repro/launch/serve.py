@@ -50,6 +50,7 @@ from repro.launch.steps import make_serve_step
 from repro.models import transformer as T
 from repro.precision.qat import quantize_param_tree
 from repro.quant import PrecisionPlan
+from repro.serve.faults import ReplicaDeviceLost
 
 
 def _resolve_plan(plan, kv_bits, weight_bits, optimal_levels) -> PrecisionPlan:
@@ -144,6 +145,68 @@ def make_trace(n_requests: int, vocab_size: int, *, max_new: int = 16,
     return reqs
 
 
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Knobs for the per-replica health state machine.
+
+    ``step_deadline_s`` — a scheduler step slower than this counts as a
+    failure (stalled device); measured on the injected clock.
+    ``dead_after`` — consecutive step failures before the replica is
+    declared dead (healthy → suspect on the first, dead on the Nth).
+    ``restart_backoff_s`` / ``backoff_cap_s`` — capped exponential backoff
+    between death and the restart attempt (``base × 2^restarts``).
+    ``max_restarts`` — restart attempts before the replica is FAILED for
+    good (its work migrates; it takes no more).
+    """
+
+    step_deadline_s: float = 30.0
+    dead_after: int = 2
+    restart_backoff_s: float = 0.5
+    backoff_cap_s: float = 30.0
+    max_restarts: int = 5
+
+    def __post_init__(self):
+        if self.step_deadline_s <= 0:
+            raise ValueError(
+                f"step_deadline_s must be > 0, got {self.step_deadline_s}")
+        if self.dead_after < 1:
+            raise ValueError(f"dead_after must be >= 1, got {self.dead_after}")
+        if self.restart_backoff_s < 0 or self.backoff_cap_s < 0:
+            raise ValueError("backoff times must be >= 0")
+        if self.max_restarts < 0:
+            raise ValueError(
+                f"max_restarts must be >= 0, got {self.max_restarts}")
+
+
+class ReplicaHealth:
+    """One replica's health record: state machine position, failure
+    counters, restart bookkeeping, and an audit trail of transitions
+    ``(t, from, to, why)`` on the injected clock."""
+
+    STATES = ("healthy", "suspect", "dead", "recovering", "failed")
+
+    def __init__(self):
+        self.state = "healthy"
+        self.consecutive_failures = 0
+        self.restarts = 0
+        self.restart_at = 0.0
+        self.last_error: str | None = None
+        self.transitions: list[tuple] = []
+
+    def to(self, state: str, now: float, why: str = "") -> None:
+        if state not in self.STATES:
+            raise ValueError(f"unknown health state {state!r}")
+        if state != self.state:
+            self.transitions.append(
+                (round(float(now), 6), self.state, state, why))
+            self.state = state
+
+    def __repr__(self):
+        return (f"ReplicaHealth({self.state!r}, "
+                f"failures={self.consecutive_failures}, "
+                f"restarts={self.restarts})")
+
+
 class ReplicaSet:
     """N serving engines behind one shared submit queue (data parallelism at
     the request level — the multi-replica rung below tensor sharding).
@@ -171,10 +234,24 @@ class ReplicaSet:
       it falls back to least-loaded. Keeping a prefix family on the replica
       that owns its trie pages is what turns per-replica caches into
       fleet-wide warm hits.
+
+    **Fault tolerance.** Each replica carries a :class:`ReplicaHealth`
+    state machine (healthy → suspect → dead → recovering, or failed for
+    good) driven by step deadlines and consecutive-failure counts on the
+    injected ``clock``. A dead replica's in-flight and queued requests are
+    harvested back into the shared queue (front, original order) and
+    re-dispatched to survivors, where they **replay from prompt + committed
+    tokens** through the engine's recompute-preemption machinery — bit-exact,
+    so migration is output-invisible. Restarts rebuild the engine through
+    the original ``factory`` under capped exponential backoff; after
+    ``max_restarts`` failed attempts the replica is FAILED and only the
+    survivors serve. Dispatch only targets HEALTHY replicas.
     """
 
     def __init__(self, factory, n_replicas: int, *, devices=None,
-                 dispatch: str = "least_loaded"):
+                 dispatch: str = "least_loaded", clock=None,
+                 fault_injector=None, health: HealthConfig | None = None,
+                 ship_dir: str | None = None):
         if n_replicas < 1:
             raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
         if dispatch not in ("least_loaded", "round_robin", "prefix"):
@@ -183,6 +260,11 @@ class ReplicaSet:
                 f"'prefix', got {dispatch!r}")
         self.devices = list(devices) if devices else None
         self.dispatch = dispatch
+        self._factory = factory
+        self._clock = clock if clock is not None else time.perf_counter
+        self._faults = fault_injector
+        self.health_cfg = health or HealthConfig()
+        self.ship_dir = ship_dir
         self.engines = []
         for i in range(n_replicas):
             with self._device_ctx(i):
@@ -193,6 +275,10 @@ class ReplicaSet:
         self._queue: collections.deque = collections.deque()
         self.dispatched = [0] * n_replicas
         self._rr = 0
+        self._step_no = 0
+        self.health = [ReplicaHealth() for _ in range(n_replicas)]
+        self.stats = {"rejected": 0, "migrated": 0, "deaths": 0,
+                      "restarts": 0, "step_failures": 0}
 
     def _device_ctx(self, i: int):
         if self.devices is None:
@@ -200,22 +286,40 @@ class ReplicaSet:
         return jax.default_device(self.devices[i % len(self.devices)])
 
     def submit(self, req) -> None:
-        self._queue.append(req)
+        """Queue a request — or reject it up front (``ValueError`` +
+        ``rejected`` stat) when **no** replica could ever admit its shape,
+        so an unservable request fails fast instead of circulating
+        forever."""
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        reasons = {e.admit_impossible(prompt.size, req.max_new_tokens)
+                   for e in self.engines}
+        if None not in reasons:
+            self.stats["rejected"] += 1
+            raise ValueError(
+                f"request {req.rid} rejected: no replica can ever admit it "
+                f"({'; '.join(sorted(reasons))})")
+        self._queue.append({"req": req, "prompt": prompt,
+                            "replay": np.zeros((0,), np.int32),
+                            "t_submit": self._clock(), "retries": 0})
 
     @property
     def n_pending(self) -> int:
         return len(self._queue) + sum(e.n_pending for e in self.engines)
 
     def _dispatch(self) -> None:
+        n = len(self.engines)
         while self._queue:
             loads = [e.n_active + e.n_prefilling + e.n_pending
                      for e in self.engines]
-            ok = [loads[j] < 2 * self.engines[j].max_slots
-                  for j in range(len(self.engines))]
+            ok = [self.health[j].state == "healthy"
+                  and loads[j] < 2 * self.engines[j].max_slots
+                  for j in range(n)]
+            if not any(self.health[j].state == "healthy" for j in range(n)):
+                return
             i = None
+            entry = self._queue[0]
             if self.dispatch == "prefix":
-                prompt = np.asarray(
-                    self._queue[0].prompt, np.int32).reshape(-1)
+                prompt = np.asarray(entry["prompt"], np.int32).reshape(-1)
                 best = 0
                 for j, e in enumerate(self.engines):
                     if not ok[j] or e.prefix is None:
@@ -224,30 +328,145 @@ class ReplicaSet:
                     if depth > best:
                         best, i = depth, j
             elif self.dispatch == "round_robin":
-                j = self._rr % len(self.engines)
-                if not ok[j]:
+                for off in range(n):
+                    j = (self._rr + off) % n
+                    if self.health[j].state != "healthy":
+                        continue          # rotation skips dead replicas
+                    if not ok[j]:
+                        return            # healthy target backlogged → wait
+                    i = j
+                    self._rr = j + 1
+                    break
+                if i is None:
                     return
-                i = j
-                self._rr += 1
             if i is None:                      # miss → least-loaded
-                i = min(range(len(loads)), key=lambda j: loads[j])
-                if not ok[i]:
+                cand = [j for j in range(n) if ok[j]]
+                if not cand:
                     return
+                i = min(cand, key=lambda j: loads[j])
             with self._device_ctx(i):
-                self.engines[i].submit(self._queue.popleft())
+                self.engines[i].submit_entry(self._queue.popleft())
             self.dispatched[i] += 1
 
     def step(self) -> dict:
-        """One dispatch pass + one scheduler step on every busy replica."""
+        """One restart/dispatch pass + one scheduler step on every busy
+        live replica, with deadline + failure accounting per replica."""
+        self._step_no += 1
+        self._maybe_skip_idle_wait()
+        self._maybe_restart(self._clock())
         self._dispatch()
         finished = {}
+        hc = self.health_cfg
         for i, eng in enumerate(self.engines):
-            if not eng.busy:
+            h = self.health[i]
+            if h.state in ("dead", "recovering", "failed") or not eng.busy:
                 continue
-            with self._device_ctx(i):
-                for f in eng.step():
-                    finished[f.rid] = f
+            t0 = self._clock()
+            try:
+                if self._faults is not None:
+                    for sp in self._faults.poll("replica_stall",
+                                                step=self._step_no, replica=i):
+                        self._advance_or_sleep(sp.stall_s)
+                    for sp in self._faults.poll("replica_raise",
+                                                step=self._step_no, replica=i):
+                        raise ReplicaDeviceLost(
+                            f"replica {i}: injected device loss at "
+                            f"set step {self._step_no}")
+                with self._device_ctx(i):
+                    for f in eng.step():
+                        finished[f.rid] = f
+            except Exception as e:           # device loss shows up as raises
+                self._record_failure(i, e)
+                continue
+            dt = self._clock() - t0
+            if dt > hc.step_deadline_s:
+                self._record_failure(i, TimeoutError(
+                    f"replica {i}: step took {dt:.3f}s > deadline "
+                    f"{hc.step_deadline_s}s"))
+            else:
+                h.consecutive_failures = 0
+                if h.state == "suspect":
+                    h.to("healthy", self._clock(), "step within deadline")
         return finished
+
+    def _advance_or_sleep(self, dt: float) -> None:
+        adv = getattr(self._clock, "advance", None)
+        if adv is not None:
+            adv(float(dt))                   # virtual stall: no wall time
+        else:
+            time.sleep(float(dt))
+
+    def _record_failure(self, i: int, err: BaseException) -> None:
+        h = self.health[i]
+        now = self._clock()
+        h.consecutive_failures += 1
+        h.last_error = f"{type(err).__name__}: {err}"
+        self.stats["step_failures"] += 1
+        if h.consecutive_failures >= self.health_cfg.dead_after:
+            self._kill(i, now)
+        elif h.state == "healthy":
+            h.to("suspect", now, h.last_error)
+
+    def _kill(self, i: int, now: float) -> None:
+        """Declare replica ``i`` dead: harvest its in-flight + queued
+        requests back onto the front of the shared queue (original order)
+        for bit-exact replay on survivors, and schedule the restart."""
+        h = self.health[i]
+        h.to("dead", now, h.last_error or "killed")
+        self.stats["deaths"] += 1
+        entries = self.engines[i].harvest()
+        for e in reversed(entries):
+            self._queue.appendleft(e)
+        self.stats["migrated"] += len(entries)
+        h.restart_at = now + min(
+            self.health_cfg.backoff_cap_s,
+            self.health_cfg.restart_backoff_s * (2.0 ** h.restarts))
+
+    def _maybe_restart(self, now: float) -> None:
+        for i, h in enumerate(self.health):
+            if h.state != "dead" or now < h.restart_at:
+                continue
+            if h.restarts >= self.health_cfg.max_restarts:
+                h.to("failed", now,
+                     f"max_restarts={self.health_cfg.max_restarts} "
+                     f"exhausted; last error: {h.last_error}")
+                continue
+            h.to("recovering", now, "backoff elapsed")
+            h.restarts += 1
+            self.stats["restarts"] += 1
+            if self._faults is not None and self.ship_dir is not None:
+                from repro.serve.faults import truncate_ship_artifact
+                for sp in self._faults.poll("ship_truncate",
+                                            step=self._step_no, replica=i):
+                    truncate_ship_artifact(self.ship_dir)
+            try:
+                with self._device_ctx(i):
+                    self.engines[i] = self._factory(i)
+            except Exception as e:           # bad artifact, OOM, ... → retry
+                h.last_error = f"{type(e).__name__}: {e}"
+                h.to("dead", self._clock(),
+                     f"restart failed: {h.last_error}")
+                h.restart_at = self._clock() + min(
+                    self.health_cfg.backoff_cap_s,
+                    self.health_cfg.restart_backoff_s * (2.0 ** h.restarts))
+            else:
+                h.consecutive_failures = 0
+                h.to("healthy", self._clock(), "engine rebuilt")
+
+    def _maybe_skip_idle_wait(self) -> None:
+        """On a virtual clock with every replica down, jump straight to the
+        earliest restart time instead of spinning through empty steps."""
+        adv = getattr(self._clock, "advance", None)
+        if adv is None:
+            return
+        if any(h.state in ("healthy", "suspect") for h in self.health):
+            return
+        due = [h.restart_at for h in self.health if h.state == "dead"]
+        if not due:
+            return
+        dt = min(due) - self._clock()
+        if dt > 0:
+            adv(dt)
 
     def run(self, requests=None, max_steps: int = 100_000) -> dict:
         for r in requests or ():
@@ -256,15 +475,28 @@ class ReplicaSet:
         for _ in range(max_steps):
             if not self._queue and not any(e.busy for e in self.engines):
                 return out
+            if all(h.state == "failed" for h in self.health):
+                errs = "; ".join(
+                    f"replica {i}: {h.last_error}"
+                    for i, h in enumerate(self.health))
+                raise RuntimeError(
+                    f"all {len(self.health)} replicas failed permanently "
+                    f"with work outstanding — {errs}")
             before = self._progress()
             out.update(self.step())
-            if self._progress() == before:
+            # a dead/recovering replica makes no engine progress while its
+            # backoff runs down — that is a wait, not a stall
+            if (self._progress() == before
+                    and not any(h.state in ("dead", "recovering")
+                                for h in self.health)):
                 raise RuntimeError("replica set stalled — no engine "
                                    "admitted, prefilled, decoded, or finished")
         raise RuntimeError(f"ReplicaSet.run exceeded {max_steps} steps")
 
     def _progress(self) -> tuple:
-        return (len(self._queue),
+        return (len(self._queue), self.stats["step_failures"],
+                tuple((h.state, h.consecutive_failures, h.restarts)
+                      for h in self.health),
                 tuple((e.n_pending, e.n_active, e.n_prefilling,
                        e.stats["decode_steps"], e.stats["prefill_tokens"])
                       for e in self.engines))
@@ -291,7 +523,9 @@ def serve_engine(arch: str, *, reduced: bool = True, n_requests: int = 16,
                  prefix_cache: bool = False, chunk_pages: int | None = None,
                  replicas: int = 1, devices=None, spec_decode: int = 0,
                  draft_bits: int | None = None,
-                 dispatch: str = "least_loaded"):
+                 dispatch: str = "least_loaded", clock=None,
+                 fault_injector=None, health: HealthConfig | None = None,
+                 ship_dir: str | None = None, retry_budget: int = 32):
     """Serve a mixed-length trace through the continuous-batching engine.
 
     ``weight_layout='bitplane'`` stores the weights bit-serially (one
@@ -310,6 +544,15 @@ def serve_engine(arch: str, *, reduced: bool = True, n_requests: int = 16,
     pages). Returns (engine-or-replicaset, results dict rid → Finished).
     Throughput/byte stats via ``engine.throughput()`` /
     ``engine.kv_pool_nbytes()`` / ``engine.stats``.
+
+    Fault tolerance: ``clock`` injects the time source (a
+    :class:`repro.serve.VirtualClock` makes chaos runs deterministic and
+    wall-time-free), ``fault_injector`` arms a
+    :class:`repro.serve.FaultInjector` on every engine and the replica
+    set, ``health`` tunes the replica state machine, and ``ship_dir``
+    saves the bitplane weights as a ship artifact once and rebuilds every
+    replica from it — including restarts after a replica death (needs
+    ``weight_layout='bitplane'`` with ``weight_bits > 0``).
     """
     from repro.serve import AutoscalerConfig, PrecisionAutoscaler, ServeEngine
 
@@ -320,6 +563,13 @@ def serve_engine(arch: str, *, reduced: bool = True, n_requests: int = 16,
             "(the draft is a slice_planes view of the served artifact)")
     cfg, params, _ = _build(arch, reduced=reduced, plan=plan, seed=seed,
                             weight_layout=weight_layout)
+    if ship_dir is not None:
+        if weight_layout != "bitplane" or not plan.model_bits:
+            raise ValueError(
+                "ship_dir needs --weight-layout bitplane with "
+                "weight_bits > 0 (the restart path reloads the artifact)")
+        from repro.ckpt import save_ship_weights
+        save_ship_weights(ship_dir, params)
 
     def mk_autoscaler():
         if not autoscale:
@@ -334,19 +584,27 @@ def serve_engine(arch: str, *, reduced: bool = True, n_requests: int = 16,
 
     max_seq_len = max_prompt + max_new + page_size
 
-    def factory(_i):
-        return ServeEngine(params, cfg, plan=plan, max_slots=max_slots,
+    def factory(i):
+        p = params
+        if ship_dir is not None:
+            from repro.ckpt import load_ship_weights
+            p = load_ship_weights(ship_dir, bits=plan.model_bits or None)
+        return ServeEngine(p, cfg, plan=plan, max_slots=max_slots,
                            page_size=page_size, max_seq_len=max_seq_len,
                            backend=backend, autoscaler=mk_autoscaler(),
                            prefix_cache=prefix_cache, chunk_pages=chunk_pages,
-                           spec_decode=spec_decode, draft_bits=draft_bits)
+                           spec_decode=spec_decode, draft_bits=draft_bits,
+                           clock=clock, fault_injector=fault_injector,
+                           replica_id=i, retry_budget=retry_budget)
 
     trace = make_trace(n_requests, cfg.vocab_size, max_new=max_new,
                        min_prompt=min_prompt, max_prompt=max_prompt,
                        seed=seed, temperature=temperature, top_k=top_k)
     if replicas > 1:
         rs = ReplicaSet(factory, replicas, devices=devices,
-                        dispatch=dispatch)
+                        dispatch=dispatch, clock=clock,
+                        fault_injector=fault_injector, health=health,
+                        ship_dir=ship_dir)
         return rs, rs.run(trace)
     engine = factory(0)
     results = engine.run(trace)
@@ -448,11 +706,19 @@ def main(argv=None):
             st = eng.stats
             line = (f"[serve-engine]   replica {i}: "
                     f"{st['decode_steps']} decode steps, "
-                    f"{st['prefill_tokens']} prefill tokens")
+                    f"{st['prefill_tokens']} prefill tokens "
+                    f"[{rs.health[i].state}]")
             if args.prefix_cache:
                 line += (f", prefix hits={st['prefix_hits']} "
                          f"({st['prefix_hit_tokens']} tokens skipped)")
             print(line)
+        if any(rs.stats.values()):
+            print(f"[serve-engine] fault tolerance: "
+                  f"{rs.stats['deaths']} deaths, "
+                  f"{rs.stats['migrated']} migrations, "
+                  f"{rs.stats['restarts']} restarts, "
+                  f"{rs.stats['step_failures']} step failures, "
+                  f"{rs.stats['rejected']} rejected")
         return
     st = engine.stats
     print(f"[serve-engine] {len(results)} requests, {gen_total} tokens "

@@ -28,7 +28,9 @@ def make_trainer(arch: str, *, reduced: bool = True, batch: int = 8,
                  moment_bits: int = 0, ckpt_dir: str | None = None,
                  ckpt_every: int = 20, log_every: int = 10,
                  precision: PrecisionPlan | None = None,
-                 error_feedback: bool = True) -> Trainer:
+                 error_feedback: bool = True,
+                 max_restarts: int = 8,
+                 restart_backoff_s: float = 0.0) -> Trainer:
     """Build the standard Trainer for an (arch, shape) training run."""
     if precision is None:
         precision = PrecisionPlan()
@@ -40,7 +42,8 @@ def make_trainer(arch: str, *, reduced: bool = True, batch: int = 8,
         vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch)
     return Trainer(cfg, opt_cfg, stream_cfg=stream_cfg, ckpt_dir=ckpt_dir,
                    ckpt_every=ckpt_every, log_every=log_every,
-                   error_feedback=error_feedback)
+                   error_feedback=error_feedback, max_restarts=max_restarts,
+                   restart_backoff_s=restart_backoff_s)
 
 
 def train(arch: str, *, kernel_backend: str | None = None, **kwargs):
@@ -99,6 +102,13 @@ def main(argv=None):
     ap.add_argument("--moment-bits", type=int, default=0)
     ap.add_argument("--fail-at", type=int, default=None,
                     help="inject one fault at this step (supervisor test)")
+    ap.add_argument("--fail-count", type=int, default=1,
+                    help="how many times --fail-at fires (0 = every time — "
+                         "a deterministic crash the restart loop hits the "
+                         "--max-restarts cap on)")
+    ap.add_argument("--max-restarts", type=int, default=8,
+                    help="supervisor restarts without forward progress "
+                         "before the underlying error propagates")
     ap.add_argument("--kernel-backend", default=None,
                     choices=registry.available(),
                     help="quantization kernel backend (default: "
@@ -114,8 +124,10 @@ def main(argv=None):
             args.arch, reduced=args.reduced, batch=args.batch, seq=args.seq,
             steps=args.steps, lr=args.lr, moment_bits=args.moment_bits,
             ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-            precision=precision)
-        _, losses = trainer.run(args.steps, fail_at=args.fail_at)
+            precision=precision, max_restarts=args.max_restarts)
+        _, losses = trainer.run(
+            args.steps, fail_at=args.fail_at,
+            fail_count=None if args.fail_count == 0 else args.fail_count)
     print(f"[train] done: first loss {losses[0]:.4f} → last {losses[-1]:.4f}")
 
 

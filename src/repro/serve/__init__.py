@@ -22,27 +22,40 @@
   admission-latency SLO with hysteresis; the engine actuates it through
   ``set_weight_bits`` on bit-plane weights (autoscaler.py).
 
+* :class:`FaultInjector` + :class:`FaultSpec` + :class:`VirtualClock` —
+  seeded, deterministic fault injection at the engine/replica seams
+  (device loss, stalls, NaN logits, KV bit flips, truncated artifacts);
+  the fired log is a replayable chaos trace (faults.py).
+
 The decode hot loop dispatches through :mod:`repro.kernels.registry`'s
 ``paged_attention`` op: ``ref`` gathers pages and reuses the legacy decode
 softmax (bit-exact with the ring buffer); ``pallas`` streams pages by block
 table with in-kernel int8/int4 dequantization (kernels/paged_attn.py).
 """
 from .autoscaler import AutoscalerConfig, PrecisionAutoscaler
+from .faults import (FaultInjector, FaultSpec, ReplicaDeviceLost,
+                     VirtualClock)
 from .engine import Finished, Request, ServeEngine
-from .pages import PageAllocator, PagedKVPool, init_pool, pool_nbytes
+from .pages import (PageAllocator, PagedKVPool, init_pool, pool_nbytes,
+                    scrub_pages)
 from .prefix import PrefixCache
 from .sampling import sample_tokens
 
 __all__ = [
     "AutoscalerConfig",
+    "FaultInjector",
+    "FaultSpec",
     "Finished",
     "PageAllocator",
     "PagedKVPool",
     "PrecisionAutoscaler",
     "PrefixCache",
+    "ReplicaDeviceLost",
     "Request",
     "ServeEngine",
+    "VirtualClock",
     "init_pool",
     "pool_nbytes",
     "sample_tokens",
+    "scrub_pages",
 ]

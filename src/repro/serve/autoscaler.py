@@ -32,7 +32,9 @@ first replay-free step:
 * anything in between (the dead band) resets both counters, so the governor
   never oscillates across the SLO boundary.
 
-Every rung move is appended to ``decisions`` (a list of plain dicts) for
+Every rung move is appended to ``decisions`` — a **ring buffer** of the
+last ``decision_log_max`` moves (a long-running serve loop must not grow
+its audit log unboundedly; ``n_moves`` keeps the lifetime count) — for
 offline audit/replay. Time is injected via ``observe(..., now=)`` so tests
 and the bench's bursty-trace replay run on a virtual clock.
 
@@ -42,6 +44,7 @@ swaps in the cached per-k sliced param tree).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import os
 
@@ -66,6 +69,7 @@ class AutoscalerConfig:
     restore_patience: int = 4
     restore_frac: float = 0.5
     queue_high: int | None = None
+    decision_log_max: int = 256
 
     def __post_init__(self):
         if self.slo_admit_ms <= 0:
@@ -81,6 +85,9 @@ class AutoscalerConfig:
                 f"band's lower edge — got {self.restore_frac}")
         if self.breach_patience < 1 or self.restore_patience < 1:
             raise ValueError("patience counts must be >= 1")
+        if self.decision_log_max < 1:
+            raise ValueError(
+                f"decision_log_max must be >= 1, got {self.decision_log_max}")
 
     @classmethod
     def from_env(cls, **overrides) -> "AutoscalerConfig":
@@ -106,7 +113,13 @@ class PrecisionAutoscaler:
         self._breach = 0
         self._healthy = 0
         self.n_observations = 0
-        self.decisions: list[dict] = []
+        # bounded audit trail: a long-running serve loop observes every
+        # step forever, so the log is a ring buffer of the last
+        # ``decision_log_max`` rung moves; ``n_moves`` keeps the lifetime
+        # count after old entries age out
+        self.decisions: collections.deque = collections.deque(
+            maxlen=self.config.decision_log_max)
+        self.n_moves = 0
 
     @property
     def bits(self) -> int:
@@ -143,6 +156,7 @@ class PrecisionAutoscaler:
 
     def _log(self, action: str, wait_ms: float, depth: int,
              now: float | None) -> None:
+        self.n_moves += 1
         self.decisions.append({
             "t": now, "admit_wait_ms": round(float(wait_ms), 3),
             "queue_depth": int(depth), "bits": self.bits, "action": action})

@@ -126,6 +126,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
+import zlib
 from typing import Any
 
 import numpy as np
@@ -166,7 +167,7 @@ class Finished:
     tokens: np.ndarray               # prompt + generated, 1-D int32
     prompt_len: int
     n_generated: int
-    reason: str                      # 'eos' | 'length'
+    reason: str                      # 'eos' | 'length' | 'nan' | 'retries'
 
 
 class ServeEngine:
@@ -176,7 +177,8 @@ class ServeEngine:
                  reserve: str = "full", backend: str | None = None,
                  autoscaler=None, clock=None, prefix_cache: bool = False,
                  chunk_pages: int | None = None, spec_decode: int = 0,
-                 draft_bits: int | None = None):
+                 draft_bits: int | None = None, fault_injector=None,
+                 replica_id: int = 0, retry_budget: int = 32):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise ValueError(
                 f"ServeEngine supports {SUPPORTED_FAMILIES} families, "
@@ -238,11 +240,30 @@ class ServeEngine:
                       "prefill_chunks": 0, "max_prefill_tokens_per_step": 0,
                       "prefix_hits": 0, "prefix_misses": 0,
                       "prefix_hit_tokens": 0, "spec_steps": 0,
-                      "spec_draft_tokens": 0, "spec_accepted_tokens": 0}
+                      "spec_draft_tokens": 0, "spec_accepted_tokens": 0,
+                      "quarantined": 0, "retries_exhausted": 0,
+                      "kv_flips": 0}
         self.admit_waits: list[float] = []      # per-admission queue wait, s
         self.decode_times: list[float] = []     # steady per-step decode, s
         self._clock = clock if clock is not None else time.perf_counter
         self.autoscaler = autoscaler
+        # fault tolerance: an optional deterministic injector polled once
+        # per scheduler step (nan_logits / kv_flip fire at this seam), a
+        # poison set marking requests whose next logits must be treated as
+        # non-finite, and a per-request retry budget — a request that keeps
+        # getting preempted or migrated off dying replicas eventually fails
+        # with reason='retries' instead of circulating forever
+        self._faults = fault_injector
+        self.replica_id = int(replica_id)
+        if retry_budget < 1:
+            raise ValueError(f"retry_budget must be >= 1, got {retry_budget}")
+        self.retry_budget = int(retry_budget)
+        self._poison_rids: set[int] = set()
+        self._step_no = 0
+        if self.prefix is not None:
+            # integrity guard: stamp trie pages with a content checksum at
+            # insert, re-verified at use — see PrefixCache / _page_checksum
+            self.prefix.checksum_fn = self._page_checksum
         self._params_full = params
         self._params_by_bits: dict[int, Any] = {}
         self.weight_bits: int | None = None     # None until set_weight_bits
@@ -323,7 +344,11 @@ class ServeEngine:
                 tok = sampling.sample_tokens(logits, temps, topks, keys)
             else:
                 tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            return jnp.where(active, tok, 0), logits, new_pool
+            # per-slot integrity flag: a NaN/inf anywhere in a slot's
+            # logits means its context is poisoned — the scheduler
+            # quarantines that one request instead of failing the batch
+            ok = jnp.isfinite(logits).all(axis=-1)
+            return jnp.where(active, tok, 0), ok, new_pool
 
         return decode_fn
 
@@ -554,7 +579,8 @@ class ServeEngine:
                     keys.reshape(b * W, 2)).reshape(b, W)
             else:
                 tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            return jnp.where(active[:, None], tgt, 0), new_pool
+            ok = jnp.isfinite(logits).all(axis=(1, 2))
+            return jnp.where(active[:, None], tgt, 0), ok, new_pool
 
         return verify_fn
 
@@ -566,24 +592,77 @@ class ServeEngine:
         return fn
 
     # -------------------------------------------------------------- host API
-    def submit(self, req: Request) -> None:
-        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
-        if prompt.size == 0:
-            raise ValueError("empty prompt")
-        if prompt.size >= self.max_seq_len:
-            raise ValueError(
-                f"prompt of {prompt.size} tokens needs max_seq_len > that "
-                f"(engine has {self.max_seq_len})")
+    def admit_impossible(self, prompt_len: int, max_new_tokens: int) -> str | None:
+        """Why a request of this shape can NEVER be admitted here (None =
+        admissible once capacity frees up). The ReplicaSet asks every
+        replica at submit time so an unservable request is rejected up
+        front instead of circulating in the shared queue forever."""
+        prompt_len = int(prompt_len)
+        if prompt_len == 0:
+            return "empty prompt"
+        if prompt_len >= self.max_seq_len:
+            return (f"prompt of {prompt_len} tokens needs max_seq_len > "
+                    f"that (engine has {self.max_seq_len})")
         worst = pg.pages_needed(
-            min(prompt.size + req.max_new_tokens, self.max_seq_len),
+            min(prompt_len + max_new_tokens, self.max_seq_len),
             self.page_size)
         if worst > self.allocator.n_pages - 1:
-            raise ValueError(
-                f"request {req.rid} can never fit: needs {worst} pages, "
-                f"pool has {self.allocator.n_pages - 1}")
+            return (f"needs {worst} pages, pool has "
+                    f"{self.allocator.n_pages - 1}")
+        return None
+
+    def submit(self, req: Request) -> None:
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        why = self.admit_impossible(prompt.size, req.max_new_tokens)
+        if why is not None:
+            raise ValueError(f"request {req.rid} can never fit: {why}")
         self._queue.append({"req": req, "prompt": prompt,
                             "replay": np.zeros((0,), np.int32),
-                            "t_submit": self._clock()})
+                            "t_submit": self._clock(), "retries": 0})
+
+    def submit_entry(self, entry: dict) -> None:
+        """Queue a prepared entry — the migration path: a request harvested
+        off a dead replica re-enters here with its original ``t_submit``
+        (the admission-latency signal keeps accruing across the failure),
+        its committed tokens as the replay list (bit-exact recompute), and
+        its retry count (the budget is per-request, not per-replica)."""
+        self._queue.append({
+            "req": entry["req"],
+            "prompt": np.asarray(entry["prompt"], np.int32).reshape(-1),
+            "replay": np.asarray(entry.get("replay",
+                                           np.zeros((0,), np.int32)),
+                                 np.int32).reshape(-1),
+            "t_submit": entry["t_submit"],
+            "retries": int(entry.get("retries", 0))})
+
+    def harvest(self) -> list[dict]:
+        """Strip every in-flight and queued request out of the engine for
+        re-dispatch elsewhere (replica death). In-flight requests come back
+        as queue entries (admission order first, then the queue) whose
+        replay lists carry their committed tokens — replaying prompt +
+        committed tokens through the recompute-preemption machinery on a
+        survivor is bit-exact, so the migration is output-invisible. Each
+        entry's retry count increments (the budget bounds how many deaths
+        one request may survive). **No pages are freed**: the pool died
+        with the replica; host scheduler state is simply cleared."""
+        entries = []
+        for _, slot in sorted((s["admit_seq"], i)
+                              for i, s in enumerate(self._slots) if s):
+            st = self._slots[slot]
+            replay = np.concatenate([
+                np.asarray(st["gen"], np.int32),
+                np.asarray(st["replay_left"], np.int32)])
+            entries.append({"req": st["req"], "prompt": st["prompt"],
+                            "replay": replay, "t_submit": st["t_submit"],
+                            "retries": int(st.get("retries", 0)) + 1})
+        for e in self._queue:
+            entries.append({**e, "retries": int(e.get("retries", 0)) + 1})
+        self._queue.clear()
+        self._slots = [None] * self.max_slots
+        self._active[:] = False
+        self._bt[:] = 0
+        self._lens[:] = 0
+        return entries
 
     @property
     def n_pending(self) -> int:
@@ -710,10 +789,18 @@ class ServeEngine:
 
     def _admit(self, finished: list) -> None:
         while self._queue:
+            entry = self._queue[0]
+            if int(entry.get("retries", 0)) > self.retry_budget:
+                # preempted/migrated past the budget: fail it with a status
+                # (its committed tokens ride along) rather than letting a
+                # pathological evict-replay or die-migrate cycle spin forever
+                self._queue.popleft()
+                self.stats["retries_exhausted"] += 1
+                finished.append(self._finish_entry(entry, reason="retries"))
+                continue
             slot = self._free_slot()
             if slot is None:
                 return
-            entry = self._queue[0]
             prompt = entry["prompt"]
             replay = entry["replay"]
             s = int(prompt.size)
@@ -760,7 +847,8 @@ class ServeEngine:
             state = {"req": req, "prompt": prompt, "gen": [],
                      "replay_left": list(replay), "pages": all_ids,
                      "admit_seq": self._admit_seq,
-                     "t_submit": entry["t_submit"]}
+                     "t_submit": entry["t_submit"],
+                     "retries": int(entry.get("retries", 0))}
             self._admit_seq += 1
             self.stats["admitted"] += 1
 
@@ -798,6 +886,14 @@ class ServeEngine:
             # the rest replays through forced decode steps
             tok = int(state["replay_left"].pop(0))
         else:
+            if req.rid in self._poison_rids \
+                    or not bool(np.isfinite(np.asarray(last_logits)).all()):
+                # non-finite prefill logits: quarantine before the slot
+                # commits a garbage first token (a 1-token request would
+                # otherwise *finish* with it)
+                self._poison_rids.discard(req.rid)
+                self._quarantine_slot(slot, finished)
+                return
             s = len(state["prompt"])
             tok = int(self._sample1(
                 last_logits, jnp.float32(req.temperature),
@@ -887,6 +983,68 @@ class ServeEngine:
             reason=reason))
         return True
 
+    def _quarantine_slot(self, slot: int, finished: list) -> None:
+        """Fail ONE request whose logits went non-finite — with a status,
+        not an engine crash — and keep the rest of the batch untouched.
+
+        Page hygiene is the subtle part: the poisoned decode steps appended
+        NaN K/V rows into this slot's **private** pages, and masked
+        attention does not protect a recycled page's next owner (a masked
+        score's softmax weight is 0, but ``0 × NaN = NaN`` through the
+        value matmul). Private (refcount-1) pages are therefore scrubbed
+        back to zeros before the free; shared pages (prefix hits, trie
+        refs) were minted before the poison and stay as they are."""
+        state = self._slots[slot]
+        req = state["req"]
+        private = [p for p in state["pages"]
+                   if self.allocator.refcount(p) == 1]
+        if private:
+            self.pool = pg.scrub_pages(self.pool, private)
+        self.allocator.free(state["pages"])
+        self._active[slot] = False
+        self._bt[slot] = 0
+        self._lens[slot] = 0
+        self._slots[slot] = None
+        self.stats["quarantined"] += 1
+        self.stats["finished"] += 1
+        finished.append(Finished(
+            rid=req.rid, tokens=self._full_tokens(state),
+            prompt_len=len(state["prompt"]),
+            n_generated=len(state["gen"]), reason="nan"))
+
+    def _page_checksum(self, pid: int) -> int:
+        """CRC32 over one pool page's raw code (and scale) bytes across all
+        layers — the cheap content fingerprint the prefix trie stamps at
+        insert and re-verifies at use, so a corrupted shared page is caught
+        before a new sharer ever attends it."""
+        pid = int(pid)
+        parts = [np.asarray(self.pool.k_pages[:, pid]),
+                 np.asarray(self.pool.v_pages[:, pid])]
+        if self.plan.kv_bits:
+            parts += [np.asarray(self.pool.k_scale[:, pid]),
+                      np.asarray(self.pool.v_scale[:, pid])]
+        crc = 0
+        for a in parts:
+            crc = zlib.crc32(np.ascontiguousarray(a).tobytes(), crc)
+        return crc
+
+    def _inject_kv_flip(self, spec) -> None:
+        """Apply one armed ``kv_flip`` fault: seeded bit flips in a pool
+        page's K codes (an explicit ``spec.page``, or a seeded pick among
+        currently-allocated pages)."""
+        from repro.serve.faults import corrupt_kv_page
+
+        page = spec.page
+        if page is None:
+            used = self.allocator.used_pages()
+            if not used:
+                return
+            rng = np.random.default_rng(spec.seed)
+            page = int(used[int(rng.integers(len(used)))])
+        self.pool = corrupt_kv_page(self.pool, page, n_flips=spec.n_flips,
+                                    seed=spec.seed)
+        self.stats["kv_flips"] += 1
+
     def _preempt_one(self) -> int | None:
         """Evict the youngest occupied slot (decoding or still prefilling);
         requeue it (front) with its generated tokens as the replay list and
@@ -908,7 +1066,8 @@ class ServeEngine:
             np.asarray(state["replay_left"], np.int32)])
         self._queue.appendleft({"req": state["req"],
                                 "prompt": state["prompt"], "replay": replay,
-                                "t_submit": state["t_submit"]})
+                                "t_submit": state["t_submit"],
+                                "retries": int(state.get("retries", 0)) + 1})
         self.stats["preemptions"] += 1
         return slot
 
@@ -992,10 +1151,11 @@ class ServeEngine:
                 jnp.asarray(self._topks))
         t0 = self._clock()
         draft, pool = self._draft_jit()(self._params_draft, self.pool, *args)
-        tgt, self.pool = self._verify_jit(sampled)(
+        tgt, ok, self.pool = self._verify_jit(sampled)(
             self.params, pool, draft, *args)
         draft_np = np.asarray(draft)
         tgt_np = np.asarray(tgt)               # blocks until ready
+        ok_np = np.asarray(ok)
         dt = self._clock() - t0
 
         committed = 0
@@ -1003,6 +1163,11 @@ class ServeEngine:
             if not self._active[slot]:
                 continue
             state = self._slots[slot]
+            rid = state["req"].rid
+            if rid in self._poison_rids or not bool(ok_np[slot]):
+                self._poison_rids.discard(rid)
+                self._quarantine_slot(slot, finished)
+                continue
             m = 0
             while m < k and draft_np[slot, m] == tgt_np[slot, m]:
                 m += 1
@@ -1036,6 +1201,14 @@ class ServeEngine:
         ``spec_decode``, run one speculative window (up to k+1 tokens per
         slot). Returns the requests that finished."""
         finished: list[Finished] = []
+        self._step_no += 1
+        if self._faults is not None:
+            for sp in self._faults.poll("nan_logits", step=self._step_no,
+                                        replica=self.replica_id):
+                self._poison_rids.add(sp.rid)
+            for sp in self._faults.poll("kv_flip", step=self._step_no,
+                                        replica=self.replica_id):
+                self._inject_kv_flip(sp)
         if self.autoscaler is not None:
             now = self._clock()
             wait = (max(0.0, now - self._queue[0]["t_submit"])
@@ -1069,13 +1242,14 @@ class ServeEngine:
 
         sampled = bool((self._temps[self._active] > 0).any())
         t0 = self._clock()
-        tok, _, self.pool = self._decode_jit(sampled)(
+        tok, ok, self.pool = self._decode_jit(sampled)(
             self.params, self.pool,
             jnp.asarray(self._last_tok)[:, None],
             jnp.asarray(self._lens), jnp.asarray(self._bt),
             jnp.asarray(self._active), jnp.asarray(self._base_keys),
             jnp.asarray(self._temps), jnp.asarray(self._topks))
         tok_np = np.asarray(tok)               # blocks until ready
+        ok_np = np.asarray(ok)
         dt = self._clock() - t0
         n_live = int(self._active.sum())
         self.stats["decode_steps"] += 1
@@ -1091,6 +1265,15 @@ class ServeEngine:
             if not self._active[slot]:
                 continue
             state = self._slots[slot]
+            rid = state["req"].rid
+            if rid in self._poison_rids or not bool(ok_np[slot]):
+                # non-finite logits (or an injected poison): fail THIS
+                # request with a status instead of crashing the engine —
+                # scrub + free its pages so the NaN rows can't leak into
+                # the next owner, and leave every other slot untouched
+                self._poison_rids.discard(rid)
+                self._quarantine_slot(slot, finished)
+                continue
             if state["replay_left"]:
                 # forced replay (recompute preemption): the decode step
                 # rebuilt this position's KV exactly; the token is known

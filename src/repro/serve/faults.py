@@ -1,0 +1,201 @@
+"""Deterministic fault injection for the serving stack.
+
+ZipML's serving thesis treats precision as a dial for graceful degradation;
+this module applies the same discipline to *faults*: every failure the
+fleet must survive — a replica raising mid-step (device loss), a stalled
+step, NaN logits for one request, bit flips in KV code planes, a truncated
+ship artifact — is injectable as a **seeded, scheduler-step-addressed
+event**, so a chaos trace replays bit-for-bit on the injected clock. The
+failure path is as testable and pinned as the happy path.
+
+Pieces:
+
+* :class:`VirtualClock` — an injectable clock (the same protocol
+  ``ServeEngine(clock=...)`` and the autoscaler already use): calling it
+  reads the time, ``advance`` moves it. Chaos runs drive all scheduler
+  timing (admission waits, step deadlines, restart backoff) on it, so a
+  "30 s stall" costs zero wall-clock and two identical runs see identical
+  timestamps.
+* :class:`FaultSpec` / :class:`FaultInjector` — the armed fault list.
+  Components poll the injector at their seam (``poll(kind, step=...,
+  replica=...)``); each armed spec fires **exactly once**, at the first
+  poll whose step reaches ``at_step`` on the matching replica, and lands in
+  the ``fired`` audit log. The injector holds no hidden state beyond the
+  armed/fired lists — replaying the same specs against the same trace
+  fires the same faults at the same steps.
+* :func:`flip_bits` / :func:`corrupt_kv_page` — seeded bit-level
+  corruption of KV code planes (the trie-page-checksum guard's adversary).
+* :func:`truncate_ship_artifact` — chop a committed artifact's
+  ``arrays.npz`` mid-file (the crash-during-copy case
+  ``load_ship_weights`` must turn into a clean error).
+
+Fault kinds and where they fire:
+
+=================  =======================================================
+``replica_raise``  ReplicaSet: the replica's next ``step()`` raises
+                   :class:`ReplicaDeviceLost` (device loss / OOM stand-in)
+``replica_stall``  ReplicaSet: ``stall_s`` seconds elapse inside the step
+                   (virtual clocks advance; real clocks sleep)
+``nan_logits``     ServeEngine: request ``rid``'s logits read as
+                   non-finite → per-request quarantine
+``kv_flip``        ServeEngine: ``n_flips`` seeded bit flips in pool page
+                   ``page`` (or a seeded pick of an allocated page)
+``ship_truncate``  artifact level: callers apply
+                   :func:`truncate_ship_artifact` before a restart
+=================  =======================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+FAULT_KINDS = ("replica_raise", "replica_stall", "nan_logits", "kv_flip",
+               "ship_truncate")
+
+
+class ReplicaDeviceLost(RuntimeError):
+    """An injected (or real) replica device loss surfaced from ``step()``."""
+
+
+class VirtualClock:
+    """A deterministic injectable clock: ``clock()`` reads, ``advance``
+    moves. Drop-in for ``time.perf_counter`` everywhere the serving stack
+    takes ``clock=`` — chaos benches step it a fixed dt per scheduler
+    iteration so stalls, deadlines and restart backoff cost no wall time
+    and replay identically."""
+
+    def __init__(self, t0: float = 0.0):
+        self._t = float(t0)
+
+    def __call__(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"clocks only move forward, got dt={dt}")
+        self._t += float(dt)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One armed fault: ``kind`` fires once at the first poll of matching
+    ``replica`` whose scheduler step reaches ``at_step``. ``rid`` targets
+    one request (``nan_logits``); ``page`` targets one pool page
+    (``kv_flip``; None = seeded pick of an allocated page); ``stall_s`` is
+    the injected step duration (``replica_stall``); ``seed`` drives every
+    random choice the fault makes."""
+
+    kind: str
+    at_step: int
+    replica: int = 0
+    rid: int | None = None
+    page: int | None = None
+    stall_s: float = 0.0
+    n_flips: int = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; expected one of "
+                f"{FAULT_KINDS}")
+        if self.at_step < 0:
+            raise ValueError(f"at_step must be >= 0, got {self.at_step}")
+
+
+class FaultInjector:
+    """The armed fault list components poll at their seams.
+
+    ``poll(kind, step=, replica=)`` returns the specs of that kind due now
+    (``step >= at_step`` and, when the caller names a replica, matching
+    ``spec.replica``), disarming each — a spec fires exactly once. Every
+    firing is appended to ``fired`` (kind, step, replica, spec), which is
+    the replayable chaos trace: same specs + same schedule ⇒ same log.
+    """
+
+    def __init__(self, specs=(), *, clock=None):
+        self._armed: list[FaultSpec] = []
+        for sp in specs:
+            if not isinstance(sp, FaultSpec):
+                sp = FaultSpec(**sp)
+            self._armed.append(sp)
+        self.clock = clock
+        self.fired: list[dict] = []
+
+    @property
+    def n_armed(self) -> int:
+        return len(self._armed)
+
+    def arm(self, spec: FaultSpec) -> None:
+        self._armed.append(spec)
+
+    def poll(self, kind: str, *, step: int,
+             replica: int | None = None) -> list[FaultSpec]:
+        """Fire-and-disarm every armed ``kind`` spec due at ``step`` for
+        ``replica`` (None matches any replica)."""
+        if kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {kind!r}")
+        due, rest = [], []
+        for sp in self._armed:
+            if (sp.kind == kind and step >= sp.at_step
+                    and (replica is None or sp.replica == replica)):
+                due.append(sp)
+                self.fired.append({
+                    "kind": kind, "step": int(step), "replica": replica,
+                    "t": self.clock() if self.clock is not None else None,
+                    "spec": sp})
+            else:
+                rest.append(sp)
+        self._armed = rest
+        return due
+
+
+def flip_bits(arr: np.ndarray, n_flips: int = 1, seed: int = 0) -> np.ndarray:
+    """Return a copy of ``arr`` with ``n_flips`` seeded single-bit flips at
+    uniformly random bit positions (byte-granular XOR, dtype-agnostic —
+    works on int8 codes, packed-nibble uint8 planes, and bf16 rows alike)."""
+    out = np.ascontiguousarray(np.asarray(arr)).copy()
+    flat = out.reshape(-1).view(np.uint8)
+    rng = np.random.default_rng(seed)
+    for pos in rng.integers(0, flat.size * 8, size=int(n_flips)):
+        flat[pos // 8] ^= np.uint8(1 << (pos % 8))
+    return out
+
+
+def corrupt_kv_page(pool, page: int, *, n_flips: int = 4, seed: int = 0):
+    """Flip ``n_flips`` seeded bits in pool page ``page``'s K code plane
+    (all layers) — the silent-corruption adversary the trie's page
+    checksums exist to catch. Returns the updated pool (same structure)."""
+    import jax.numpy as jnp
+
+    page = int(page)
+    if not 0 <= page < pool.n_pages:
+        raise ValueError(f"page {page} outside pool of {pool.n_pages}")
+    k = np.asarray(pool.k_pages)
+    corrupted = flip_bits(k[:, page], n_flips=n_flips, seed=seed)
+    k = k.copy()
+    k[:, page] = corrupted
+    return pool._replace(k_pages=jnp.asarray(k))
+
+
+def truncate_ship_artifact(directory: str, keep_bytes: int = 128) -> str:
+    """Truncate a committed ship artifact's ``arrays.npz`` to ``keep_bytes``
+    — the torn-copy/partial-restore case. The ``.complete`` marker is left
+    in place on purpose: the marker guards against *interrupted writes*;
+    this simulates corruption **after** commit, which only a clean loader
+    error (:class:`repro.ckpt.ship.ShipArtifactError`) can surface."""
+    path = os.path.join(directory, "arrays.npz")
+    size = os.path.getsize(path)
+    if keep_bytes >= size:
+        raise ValueError(
+            f"keep_bytes={keep_bytes} >= file size {size} — nothing truncated")
+    with open(path, "r+b") as f:
+        f.truncate(int(keep_bytes))
+    return path
+
+
+__all__ = ["FAULT_KINDS", "FaultInjector", "FaultSpec", "ReplicaDeviceLost",
+           "VirtualClock", "corrupt_kv_page", "flip_bits",
+           "truncate_ship_artifact"]

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -186,6 +187,26 @@ def write_rows(k_pages: jax.Array, v_pages: jax.Array,
     return k_pages, v_pages, k_scale, v_scale
 
 
+def scrub_pages(pool: PagedKVPool, page_ids) -> PagedKVPool:
+    """Zero the codes (and reset scales to 1) of ``page_ids`` across every
+    layer — quarantine hygiene. A quarantined sequence's pages can hold
+    non-finite K/V rows, and a recycled page must never leak them: masked
+    attention zeros a dead position's softmax *probability*, but
+    ``0 × NaN = NaN`` straight through the value matmul, so a NaN row in a
+    reallocated page would poison its next owner. Scrubbing before the free
+    restores the allocator's clean-page invariant."""
+    ids = np.asarray(list(page_ids), np.int32)
+    if ids.size == 0:
+        return pool
+    new = pool._replace(
+        k_pages=pool.k_pages.at[:, ids].set(0),
+        v_pages=pool.v_pages.at[:, ids].set(0))
+    if pool.kv_bits:
+        new = new._replace(k_scale=pool.k_scale.at[:, ids].set(1.0),
+                           v_scale=pool.v_scale.at[:, ids].set(1.0))
+    return new
+
+
 def pool_nbytes(pool: PagedKVPool, n_pages: int | None = None) -> int:
     """Logical KV HBM bytes of ``n_pages`` pages (default: the whole pool),
     accounted through :attr:`repro.quant.QTensor.nbytes` shape-only views —
@@ -269,6 +290,10 @@ class PageAllocator:
     def refcount(self, i: int) -> int:
         return self._rc.get(int(i), 0)
 
+    def used_pages(self) -> list[int]:
+        """Sorted ids of currently-allocated pages (shared pages once)."""
+        return sorted(self._rc)
+
     def free(self, ids) -> None:
         """Drop one reference per page; pages reaching refcount 0 return to
         the free list. Decref of an already-free page raises (double free)."""
@@ -301,4 +326,4 @@ def pages_needed(n_tokens: int, page_size: int) -> int:
 
 __all__ = ["PagedKVPool", "PageAllocator", "init_pool", "write_prompt",
            "append_rows", "write_rows", "quant_rows", "pool_nbytes",
-           "kv_scheme", "pages_needed"]
+           "scrub_pages", "kv_scheme", "pages_needed"]

@@ -43,7 +43,7 @@ import numpy as np
 
 
 class _Node:
-    __slots__ = ("key", "page", "children", "parent", "last_used")
+    __slots__ = ("key", "page", "children", "parent", "last_used", "checksum")
 
     def __init__(self, key: bytes, page: int, parent: "_Node | None"):
         self.key = key
@@ -51,17 +51,25 @@ class _Node:
         self.parent = parent
         self.children: dict[bytes, _Node] = {}
         self.last_used = 0
+        self.checksum: int | None = None
 
 
 class PrefixCache:
     """Page-granular prefix index (one instance per engine/replica)."""
 
-    def __init__(self, page_size: int, allocator):
+    def __init__(self, page_size: int, allocator, *, checksum_fn=None):
         self.page_size = int(page_size)
         self.allocator = allocator
         self._root = _Node(b"", 0, None)       # sentinel: owns no page
         self._ticks = itertools.count(1)
         self.evictions = 0
+        # integrity guard: ``checksum_fn(page_id) -> int`` over the page's
+        # raw code/scale bytes. insert() stamps each fresh node; use()
+        # re-verifies before handing pages to a new sharer, so a corrupted
+        # shared page (bit flip, torn write) is evicted and re-prefilled
+        # cold instead of silently feeding garbage KV to every sharer.
+        self.checksum_fn = checksum_fn
+        self.corrupt_evictions = 0
 
     # ------------------------------------------------------------- internals
     def _page_keys(self, prompt: np.ndarray, n: int) -> list[bytes]:
@@ -104,12 +112,38 @@ class PrefixCache:
         via ``allocator.free``. Touches the matched chain's LRU clock.
         """
         chain = self._walk(prompt)
+        if self.checksum_fn is not None:
+            for idx, node in enumerate(chain):
+                if node.checksum is None \
+                        or self.checksum_fn(node.page) == node.checksum:
+                    continue
+                # corrupted shared page: drop it and everything cached past
+                # it (descendants' contexts attended the bad rows when
+                # minted, so they are suspect too) and truncate the match —
+                # the admission re-prefills from here, never attending the
+                # corrupt page. Live sharers keep their own references.
+                self._drop_subtree(node)
+                chain = chain[:idx]
+                break
         tick = next(self._ticks)
         for node in chain:
             node.last_used = tick
         pages = [n.page for n in chain]
         self.allocator.incref(pages)
         return pages
+
+    def _drop_subtree(self, node: _Node) -> int:
+        """Unlink ``node`` and its descendants, releasing the trie's own
+        reference on each page (checksum-mismatch eviction)."""
+        del node.parent.children[node.key]
+        dropped, stack = 0, [node]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            self.allocator.free([n.page])
+            dropped += 1
+            self.corrupt_evictions += 1
+        return dropped
 
     def insert(self, prompt, page_ids) -> int:
         """Register a completed prompt's **full** pages; returns how many
@@ -130,6 +164,8 @@ class PrefixCache:
                 page = int(page)
                 self.allocator.incref([page])
                 child = node.children[key] = _Node(key, page, node)
+                if self.checksum_fn is not None:
+                    child.checksum = self.checksum_fn(page)
                 fresh += 1
             child.last_used = tick
             node = child

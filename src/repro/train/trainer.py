@@ -79,7 +79,10 @@ class Trainer:
                  channels: dict[str, Channel] | None = None,
                  error_feedback: bool = True, accum_steps: int = 1,
                  ckpt_dir: str | None = None, ckpt_every: int = 20,
-                 log_every: int = 10, seed: int = 0):
+                 log_every: int = 10, seed: int = 0,
+                 max_restarts: int = 8, restart_backoff_s: float = 0.0):
+        if max_restarts < 0:
+            raise ValueError(f"max_restarts must be >= 0, got {max_restarts}")
         self.cfg = cfg
         self.plan = cfg.precision
         self.opt_cfg = opt_cfg if opt_cfg is not None else adamw.AdamWConfig()
@@ -88,6 +91,12 @@ class Trainer:
         self.accum_steps = accum_steps
         self.ckpt_every = ckpt_every
         self.log_every = log_every
+        # supervisor restart cap: a *deterministic* crash (bad batch, code
+        # bug) restores to the same step and crashes again forever without
+        # one — after max_restarts consecutive failures with no forward
+        # progress the underlying error propagates to the caller
+        self.max_restarts = int(max_restarts)
+        self.restart_backoff_s = float(restart_backoff_s)
         self.key = jax.random.PRNGKey(seed)
         self.stream_cfg = stream_cfg
         self.stream = TokenStream(stream_cfg) if stream_cfg else None
@@ -193,11 +202,17 @@ class Trainer:
 
     # ----------------------------------------------------------- supervisor --
     def run(self, steps: int, *, state: TrainState | None = None,
-            fail_at: int | None = None):
+            fail_at: int | None = None, fail_count: int | None = 1):
         """The supervisor loop: resume-from-checkpoint, NaN-skip (inside the
         optimizer), straggler flagging, restore-and-replay on step failure.
         Returns (final TrainState, losses) — replayed steps re-append, so
-        ``len(losses) ≥ steps`` when faults occurred."""
+        ``len(losses) ≥ steps`` when faults occurred.
+
+        ``fail_at``/``fail_count`` inject a crash at that step the first
+        ``fail_count`` times it is reached (``None`` = every time — a
+        deterministic crash the restart loop can never outrun). Restarts
+        without forward progress are capped at ``max_restarts``; past the
+        cap the underlying error propagates instead of looping forever."""
         if self.stream is None:
             raise RuntimeError("Trainer built without stream_cfg")
         if state is None:
@@ -208,12 +223,18 @@ class Trainer:
         self.stream.skip_to(state.cursor)
 
         losses = []
+        fired = 0
+        # restart accounting: crashes only count against the cap while the
+        # run is stuck at the same high-water step — any forward progress
+        # (checkpoint replay reaching a new step) resets the count
+        high_step, crash_count = -1, 0
         while int(state.step) < steps:
             try:
                 step_i = int(state.step)
                 batch_np = self.stream.next_batch()
-                if fail_at is not None and step_i == fail_at:
-                    fail_at = None
+                if (fail_at is not None and step_i == fail_at
+                        and (fail_count is None or fired < fail_count)):
+                    fired += 1
                     raise RuntimeError("injected fault (test)")
                 t0 = time.time()
                 state, metrics = self.step(state, batch_np)
@@ -230,7 +251,20 @@ class Trainer:
                 if self.mgr and done % self.ckpt_every == 0:
                     self.save(state)
             except (RuntimeError, jax.errors.JaxRuntimeError) as e:
-                print(f"[train] step {int(state.step)} FAILED ({e}); "
+                step_now = int(state.step)
+                if step_now > high_step:
+                    high_step, crash_count = step_now, 1
+                else:
+                    crash_count += 1
+                if crash_count > self.max_restarts:
+                    print(f"[train] step {step_now} crashed {crash_count} "
+                          f"times with no forward progress "
+                          f"(max_restarts={self.max_restarts}) — giving up")
+                    raise
+                if self.restart_backoff_s:
+                    time.sleep(min(30.0, self.restart_backoff_s
+                                   * 2.0 ** (crash_count - 1)))
+                print(f"[train] step {step_now} FAILED ({e}); "
                       "restoring last checkpoint")
                 if self.mgr is None or self.mgr.latest_step() is None:
                     print("[train] no checkpoint — restarting from scratch")

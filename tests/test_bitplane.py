@@ -323,3 +323,49 @@ class TestShipArtifact:
             load_ship_weights(d, bits=9)
         with pytest.raises(FileNotFoundError):
             load_ship_weights(str(tmp_path / "missing"))
+
+    def test_truncated_arrays_raise_clean_error(self, tiny_model, tmp_path):
+        """Post-commit corruption (torn copy, bit rot) must surface as
+        ShipArtifactError naming the fix — never a raw numpy/zipfile
+        traceback. The .complete marker only guards interrupted writes."""
+        from repro.ckpt import (ShipArtifactError, load_ship_weights,
+                                save_ship_weights)
+        from repro.precision.qat import quantize_param_tree
+        from repro.serve.faults import truncate_ship_artifact
+
+        cfg, params = tiny_model
+        d = str(tmp_path / "ship")
+        save_ship_weights(d, quantize_param_tree(params, bits=8,
+                                                 layout="bitplane"))
+        truncate_ship_artifact(d, keep_bytes=128)
+        with pytest.raises(ShipArtifactError,
+                           match="corrupt or truncated") as ei:
+            load_ship_weights(d)
+        assert "save_ship_weights" in str(ei.value)   # names the fix
+
+    def test_corrupt_manifest_raises_clean_error(self, tiny_model, tmp_path):
+        from repro.ckpt import (ShipArtifactError, load_ship_weights,
+                                save_ship_weights)
+        from repro.precision.qat import quantize_param_tree
+
+        cfg, params = tiny_model
+        d = str(tmp_path / "ship")
+        save_ship_weights(d, quantize_param_tree(params, bits=8,
+                                                 layout="bitplane"))
+        with open(os.path.join(d, "manifest.json"), "w") as f:
+            f.write("{ not json")
+        with pytest.raises(ShipArtifactError, match="manifest.json"):
+            load_ship_weights(d)
+
+    def test_truncate_helper_refuses_noop(self, tiny_model, tmp_path):
+        from repro.ckpt import save_ship_weights
+        from repro.precision.qat import quantize_param_tree
+        from repro.serve.faults import truncate_ship_artifact
+
+        cfg, params = tiny_model
+        d = str(tmp_path / "ship")
+        save_ship_weights(d, quantize_param_tree(params, bits=8,
+                                                 layout="bitplane"))
+        size = os.path.getsize(os.path.join(d, "arrays.npz"))
+        with pytest.raises(ValueError, match="nothing truncated"):
+            truncate_ship_artifact(d, keep_bytes=size)

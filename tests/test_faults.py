@@ -1,0 +1,493 @@
+"""Fault-tolerance tests: the deterministic injector itself (once-only
+firing, replica filters, replayable audit log, seeded bit flips), per-request
+NaN quarantine (injected AND genuinely NaN KV), prefix-trie checksum eviction
+at every KV precision, the per-request retry budget, and the ReplicaSet
+health machine — stall → suspect → recover, raise → dead → harvest/migrate →
+restart, restart-failure → FAILED, submit fail-fast, and the all-replicas-
+failed terminal error. Everything runs on the virtual clock: zero wall-time
+waits, bit-identical replays."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+from repro.quant import PrecisionPlan
+from repro.serve import (FaultInjector, FaultSpec, ReplicaDeviceLost,
+                         Request, ServeEngine, VirtualClock)
+from repro.serve.faults import corrupt_kv_page, flip_bits
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = configs.get_reduced("qwen2.5-14b")
+    return cfg, T.init_params(KEY, cfg)
+
+
+def _engine(params, cfg, **kw):
+    kw.setdefault("plan", PrecisionPlan(kv_bits=8))
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_seq_len", 32)
+    kw.setdefault("clock", VirtualClock())
+    return ServeEngine(params, cfg, **kw)
+
+
+def _reqs(n, cfg, *, prompt_len=6, gen=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, prompt_len),
+                    max_new_tokens=gen) for i in range(n)]
+
+
+class TestFaultInjector:
+    def test_spec_validation(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultSpec("meteor_strike", at_step=1)
+        with pytest.raises(ValueError, match="at_step"):
+            FaultSpec("replica_raise", at_step=-1)
+
+    def test_fires_once_with_audit_log(self):
+        clock = VirtualClock()
+        inj = FaultInjector([FaultSpec("nan_logits", at_step=3, rid=7)],
+                            clock=clock)
+        assert inj.poll("nan_logits", step=2) == []
+        clock.advance(1.5)
+        fired = inj.poll("nan_logits", step=3)
+        assert [sp.rid for sp in fired] == [7]
+        assert inj.n_armed == 0
+        # once-only: the same poll never fires the spec again
+        assert inj.poll("nan_logits", step=3) == []
+        assert inj.poll("nan_logits", step=99) == []
+        (rec,) = inj.fired
+        assert rec["kind"] == "nan_logits" and rec["step"] == 3
+        assert rec["t"] == 1.5
+
+    def test_replica_filter_and_late_fire(self):
+        inj = FaultInjector([FaultSpec("replica_raise", at_step=2, replica=1)])
+        assert inj.poll("replica_raise", step=5, replica=0) == []
+        # a fault whose step was missed fires on the next matching poll
+        assert len(inj.poll("replica_raise", step=5, replica=1)) == 1
+
+    def test_virtual_clock_monotonic(self):
+        clock = VirtualClock(t0=2.0)
+        assert clock() == 2.0
+        clock.advance(0.25)
+        assert clock() == 2.25
+        with pytest.raises(ValueError, match="forward"):
+            clock.advance(-0.1)
+
+    def test_flip_bits_seeded_and_pure(self):
+        a = np.zeros(16, np.float32)
+        b1 = flip_bits(a, n_flips=3, seed=9)
+        b2 = flip_bits(a, n_flips=3, seed=9)
+        np.testing.assert_array_equal(b1, b2)            # replayable
+        assert not np.array_equal(flip_bits(a, n_flips=3, seed=10), b1)
+        assert np.all(a == 0)                            # input untouched
+        changed = np.unpackbits(b1.view(np.uint8)).sum()
+        assert 1 <= changed <= 3
+
+
+class TestNaNQuarantine:
+    def test_injected_nan_fails_one_request_not_engine(self, tiny_model):
+        cfg, params = tiny_model
+        clean = _engine(params, cfg).run(_reqs(4, cfg, gen=8))
+
+        inj = FaultInjector([FaultSpec("nan_logits", at_step=4, rid=1)])
+        eng = _engine(params, cfg, fault_injector=inj)
+        out = eng.run(_reqs(4, cfg, gen=8))
+        assert sorted(out) == [0, 1, 2, 3]
+        assert out[1].reason == "nan"
+        assert eng.stats["quarantined"] == 1
+        for rid in (0, 2, 3):
+            assert clean[rid].reason in ("eos", "length")
+            np.testing.assert_array_equal(clean[rid].tokens, out[rid].tokens)
+        eng.allocator.check_leaks(0)
+
+    def test_real_nan_kv_detected_and_scrubbed(self, tiny_model):
+        """Not just the injected flag: genuinely non-finite KV rows must trip
+        the per-slot isfinite guard. NaNs are written into one active slot's
+        private page mid-run (kv_bits=0 — raw float pool) and that slot alone
+        must quarantine; freed pages are scrubbed so the next owner never
+        attends the poison (the 0×NaN softmax hole)."""
+        cfg, params = tiny_model
+        eng = _engine(params, cfg, plan=PrecisionPlan(kv_bits=0))
+        reqs = _reqs(4, cfg, gen=6)
+        for r in reqs:
+            eng.submit(r)
+        done = {}
+        poisoned = None
+        for _ in range(60):
+            if poisoned is None and eng.n_active >= 2:
+                slot = int(np.flatnonzero(eng._active)[0])
+                poisoned = eng._slots[slot]["req"].rid
+                page = int(eng._slots[slot]["pages"][0])
+                eng.pool = eng.pool._replace(
+                    k_pages=eng.pool.k_pages.at[:, page].set(jnp.nan))
+            for f in eng.step():
+                done[f.rid] = f
+            if not eng.busy:
+                break
+        assert poisoned is not None
+        assert sorted(done) == [0, 1, 2, 3]
+        assert done[poisoned].reason == "nan"
+        assert eng.stats["quarantined"] == 1
+        for rid in done:
+            if rid != poisoned:
+                assert done[rid].reason in ("eos", "length")
+        eng.allocator.check_leaks(0)
+        # scrubbed on free: no page in the pool still carries the NaN rows
+        assert bool(jnp.isfinite(eng.pool.k_pages).all())
+
+    def test_kv_flip_fault_counts(self, tiny_model):
+        """An injected KV bit flip lands in an allocated page and is counted;
+        the engine keeps serving (the flip may or may not change tokens —
+        that is the trie-checksum tests' business, not this one's)."""
+        cfg, params = tiny_model
+        inj = FaultInjector([FaultSpec("kv_flip", at_step=3, n_flips=2,
+                                       seed=5)])
+        eng = _engine(params, cfg, fault_injector=inj)
+        out = eng.run(_reqs(3, cfg))
+        assert len(out) == 3
+        assert eng.stats["kv_flips"] == 1
+        assert inj.n_armed == 0
+        eng.allocator.check_leaks(0)
+
+
+class TestTrieChecksum:
+    @pytest.mark.parametrize("kv_bits", [0, 8, 4])
+    def test_corrupt_shared_page_evicted_not_attended(self, tiny_model,
+                                                      kv_bits):
+        """Bit-flip a cached prefix page between two waves of the same
+        prompt family: the checksum check at use() must evict it (and its
+        descendants), the second wave re-prefills cold and stays
+        token-identical to a cache-less engine, and the corruption never
+        spreads to any output."""
+        cfg, params = tiny_model
+        rng = np.random.default_rng(3)
+        sys_prompt = rng.integers(0, cfg.vocab_size, 8)   # 2 full pages
+        suffixes = [rng.integers(0, cfg.vocab_size, 3) for _ in range(3)]
+
+        def wave():
+            return [Request(rid=i,
+                            prompt=np.concatenate([sys_prompt, suffixes[i]]),
+                            max_new_tokens=4)
+                    for i in range(3)]
+
+        cold = _engine(params, cfg, plan=PrecisionPlan(kv_bits=kv_bits),
+                       chunk_pages=1)
+        cold_out = cold.run(wave())
+        cold.allocator.check_leaks(0)
+
+        warm = _engine(params, cfg, plan=PrecisionPlan(kv_bits=kv_bits),
+                       prefix_cache=True, chunk_pages=1)
+        warm.run(wave())                      # wave 1 populates the trie
+        victim = warm.prefix.match(
+            np.asarray(wave()[0].prompt, np.int32))[0]
+        warm.pool = corrupt_kv_page(warm.pool, victim, n_flips=3, seed=11)
+        warm_out = warm.run(wave())
+        assert warm.prefix.corrupt_evictions >= 1
+        for rid in cold_out:
+            np.testing.assert_array_equal(cold_out[rid].tokens,
+                                          warm_out[rid].tokens)
+        warm.release_prefix_cache()
+        warm.allocator.check_leaks(0)
+
+    def test_checksums_stamped_on_insert(self, tiny_model):
+        cfg, params = tiny_model
+        eng = _engine(params, cfg, prefix_cache=True, chunk_pages=1)
+        eng.run(_reqs(2, cfg, prompt_len=9, seed=4))
+        nodes = list(eng.prefix._root.children.values())
+        assert nodes, "trie should have cached prompt pages"
+        while nodes:
+            n = nodes.pop()
+            assert n.checksum == eng._page_checksum(n.page)
+            nodes.extend(n.children.values())
+        eng.release_prefix_cache()
+        eng.allocator.check_leaks(0)
+
+
+class TestRetryBudget:
+    def test_exhausted_retries_fail_with_status(self, tiny_model):
+        cfg, params = tiny_model
+        eng = _engine(params, cfg, retry_budget=2)
+        req = _reqs(1, cfg)[0]
+        eng.submit_entry({"req": req,
+                          "prompt": np.asarray(req.prompt, np.int32),
+                          "t_submit": 0.0, "retries": 3})
+        out = eng.run()
+        assert out[req.rid].reason == "retries"
+        assert out[req.rid].n_generated == 0
+        assert eng.stats["retries_exhausted"] == 1
+        eng.allocator.check_leaks(0)
+
+    def test_within_budget_request_completes(self, tiny_model):
+        cfg, params = tiny_model
+        eng = _engine(params, cfg, retry_budget=3)
+        req = _reqs(1, cfg)[0]
+        eng.submit_entry({"req": req,
+                          "prompt": np.asarray(req.prompt, np.int32),
+                          "t_submit": 0.0, "retries": 3})
+        out = eng.run()
+        assert out[req.rid].reason in ("eos", "length")
+
+    def test_budget_validation(self, tiny_model):
+        cfg, params = tiny_model
+        with pytest.raises(ValueError, match="retry_budget"):
+            _engine(params, cfg, retry_budget=0)
+
+
+def _replica_set(params, cfg, n=2, *, faults=None, health=None, factory=None,
+                 ship_dir=None, **ekw):
+    from repro.launch.serve import HealthConfig, ReplicaSet
+
+    clock = VirtualClock()
+    if faults is not None:
+        faults.clock = clock
+
+    def default_factory(i):
+        return ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=8),
+                           max_slots=2, page_size=4, max_seq_len=32,
+                           clock=clock, fault_injector=faults, replica_id=i,
+                           **ekw)
+
+    rs = ReplicaSet(factory or default_factory, n, clock=clock,
+                    fault_injector=faults,
+                    health=health or HealthConfig(
+                        step_deadline_s=1.0, dead_after=2,
+                        restart_backoff_s=0.1, backoff_cap_s=0.5,
+                        max_restarts=2),
+                    ship_dir=ship_dir)
+    return rs, clock
+
+
+def _settle(rs, clock, max_steps=200):
+    """Step an idle ReplicaSet until its health machine reaches a fixed
+    point (the drain can finish before the last restart backoff elapses)."""
+    for _ in range(max_steps):
+        if all(h.state in ("healthy", "failed") for h in rs.health):
+            return
+        clock.advance(0.05)
+        rs.step()
+    raise AssertionError("health machine did not settle")
+
+
+def _drain(rs, clock, reqs=(), max_steps=500):
+    for r in reqs:
+        rs.submit(r)
+    out = {}
+    for _ in range(max_steps):
+        if not rs._queue and not any(e.busy for e in rs.engines):
+            return out
+        for rid, f in rs.step().items():
+            assert rid not in out, f"request {rid} finished twice"
+            out[rid] = f
+        clock.advance(0.01)
+    raise AssertionError("drain did not converge")
+
+
+class TestReplicaHealth:
+    def test_stall_suspect_then_recover(self, tiny_model):
+        cfg, params = tiny_model
+        faults = FaultInjector([
+            FaultSpec("replica_stall", at_step=3, replica=0, stall_s=5.0)])
+        rs, clock = _replica_set(params, cfg, faults=faults)
+        out = _drain(rs, clock, _reqs(6, cfg))
+        assert len(out) == 6
+        assert rs.stats["step_failures"] == 1
+        assert rs.stats["deaths"] == 0
+        h = rs.health[0]
+        assert h.state == "healthy"                       # recovered
+        states = [t[2] for t in h.transitions]
+        assert states == ["suspect", "healthy"]
+
+    def test_death_migration_restart_token_identical(self, tiny_model):
+        cfg, params = tiny_model
+        reqs = _reqs(8, cfg, gen=6)
+        rs, clock = _replica_set(params, cfg)
+        clean = _drain(rs, clock, reqs)
+
+        faults = FaultInjector([
+            FaultSpec("replica_raise", at_step=s, replica=0)
+            for s in (4, 5)])
+        rs, clock = _replica_set(params, cfg, faults=faults)
+        out = _drain(rs, clock, _reqs(8, cfg, gen=6))
+        assert len(out) == 8
+        assert rs.stats["deaths"] == 1
+        assert rs.stats["migrated"] >= 1
+        assert rs.stats["restarts"] == 1
+        assert rs.health[0].state == "healthy"            # restarted
+        states = [t[2] for t in rs.health[0].transitions]
+        assert states == ["suspect", "dead", "recovering", "healthy"]
+        for rid in clean:                                 # bit-exact replay
+            np.testing.assert_array_equal(clean[rid].tokens, out[rid].tokens)
+        for e in rs.engines:
+            e.allocator.check_leaks(0)
+
+    def test_restart_failure_exhausts_to_failed(self, tiny_model):
+        cfg, params = tiny_model
+        clock = VirtualClock()
+        faults = FaultInjector(
+            [FaultSpec("replica_raise", at_step=s, replica=0)
+             for s in (3, 4)], clock=clock)
+        built = [0, 0]
+
+        def factory(i):
+            built[i] += 1
+            if i == 0 and built[0] > 1:                  # every rebuild dies
+                raise RuntimeError("device gone for good")
+            return ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=8),
+                               max_slots=2, page_size=4, max_seq_len=32,
+                               clock=clock, fault_injector=faults,
+                               replica_id=i)
+
+        from repro.launch.serve import HealthConfig, ReplicaSet
+        rs = ReplicaSet(factory, 2, clock=clock, fault_injector=faults,
+                        health=HealthConfig(step_deadline_s=1.0, dead_after=2,
+                                            restart_backoff_s=0.1,
+                                            backoff_cap_s=0.5,
+                                            max_restarts=2))
+        out = _drain(rs, clock, _reqs(8, cfg, gen=6))
+        assert len(out) == 8                              # survivor drained it
+        _settle(rs, clock)                 # let the last backoff run down
+        assert rs.health[0].state == "failed"
+        assert rs.health[0].restarts == 2
+        assert "device gone" in rs.health[0].last_error
+        assert rs.health[1].state == "healthy"
+
+    def test_all_replicas_failed_raises(self, tiny_model):
+        cfg, params = tiny_model
+        clock = VirtualClock()
+        faults = FaultInjector(
+            [FaultSpec("replica_raise", at_step=s, replica=0)
+             for s in (2, 3)], clock=clock)
+        built = [0]
+
+        def factory(i):
+            built[0] += 1
+            if built[0] > 1:
+                raise RuntimeError("no devices left")
+            return ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=8),
+                               max_slots=2, page_size=4, max_seq_len=32,
+                               clock=clock, fault_injector=faults,
+                               replica_id=i)
+
+        from repro.launch.serve import HealthConfig, ReplicaSet
+        rs = ReplicaSet(factory, 1, clock=clock, fault_injector=faults,
+                        health=HealthConfig(step_deadline_s=1.0, dead_after=2,
+                                            restart_backoff_s=0.1,
+                                            backoff_cap_s=0.2,
+                                            max_restarts=1))
+        with pytest.raises(RuntimeError, match="failed permanently"):
+            rs.run(_reqs(4, cfg))
+
+    def test_submit_fail_fast_rejects_unservable(self, tiny_model):
+        cfg, params = tiny_model
+        rs, clock = _replica_set(params, cfg)
+        with pytest.raises(ValueError, match="no replica can ever admit"):
+            rs.submit(Request(rid=0, prompt=np.arange(100),
+                              max_new_tokens=4))
+        assert rs.stats["rejected"] == 1
+        with pytest.raises(ValueError, match="no replica"):
+            rs.submit(Request(rid=1, prompt=np.zeros(0, np.int32),
+                              max_new_tokens=4))
+        assert rs.stats["rejected"] == 2
+        # a servable request still goes through
+        out = _drain(rs, clock, _reqs(2, cfg))
+        assert len(out) == 2
+
+    def test_dispatch_avoids_dead_replica(self, tiny_model):
+        cfg, params = tiny_model
+        faults = FaultInjector([
+            FaultSpec("replica_raise", at_step=s, replica=0)
+            for s in (2, 3)])
+        from repro.launch.serve import HealthConfig
+        # backoff far beyond the trace: replica 0 stays dead throughout
+        rs, clock = _replica_set(
+            params, cfg, faults=faults,
+            health=HealthConfig(step_deadline_s=1.0, dead_after=2,
+                                restart_backoff_s=1e6, backoff_cap_s=1e6,
+                                max_restarts=1))
+        before = None
+        out = {}
+        for r in _reqs(8, cfg):
+            rs.submit(r)
+        for _ in range(500):
+            if not rs._queue and not any(e.busy for e in rs.engines):
+                break
+            if rs.health[0].state == "dead" and before is None:
+                before = rs.dispatched[0]
+            out.update(rs.step())
+            clock.advance(0.01)
+        assert len(out) == 8
+        assert rs.health[0].state == "dead"
+        assert rs.dispatched[0] == before                 # nothing after death
+
+    def test_ship_truncate_fault_fails_restart(self, tiny_model, tmp_path):
+        """The ship_truncate fault corrupts the artifact between death and
+        restart: the rebuild raises ShipArtifactError, retries exhaust, and
+        the replica lands in FAILED while the survivor drains the trace."""
+        from repro.ckpt import (ShipArtifactError, load_ship_weights,
+                                save_ship_weights)
+        from repro.launch.serve import HealthConfig, ReplicaSet
+        from repro.precision.qat import quantize_param_tree
+
+        cfg, params = tiny_model
+        ship = str(tmp_path / "ship")
+        save_ship_weights(ship,
+                          quantize_param_tree(params, bits=8,
+                                              layout="bitplane"))
+        clock = VirtualClock()
+        faults = FaultInjector(
+            [FaultSpec("replica_raise", at_step=s, replica=0)
+             for s in (3, 4)]
+            + [FaultSpec("ship_truncate", at_step=0, replica=0)],
+            clock=clock)
+
+        def factory(i):
+            load_ship_weights(ship)        # the restart path reloads
+            return ServeEngine(params, cfg, plan=PrecisionPlan(kv_bits=8),
+                               max_slots=2, page_size=4, max_seq_len=32,
+                               clock=clock, fault_injector=faults,
+                               replica_id=i)
+
+        rs = ReplicaSet(factory, 2, clock=clock, fault_injector=faults,
+                        health=HealthConfig(step_deadline_s=1.0, dead_after=2,
+                                            restart_backoff_s=0.1,
+                                            backoff_cap_s=0.2,
+                                            max_restarts=1),
+                        ship_dir=ship)
+        out = _drain(rs, clock, _reqs(8, cfg, gen=6))
+        assert len(out) == 8
+        _settle(rs, clock)
+        assert rs.health[0].state == "failed"
+        assert "ShipArtifactError" in rs.health[0].last_error
+        with pytest.raises(ShipArtifactError):
+            load_ship_weights(ship)
+
+
+class TestAutoscalerLogCap:
+    def test_decision_log_is_ring_buffer(self):
+        from repro.serve import AutoscalerConfig, PrecisionAutoscaler
+
+        asc = PrecisionAutoscaler(AutoscalerConfig(
+            slo_admit_ms=10.0, bits_ladder=(8, 4, 2, 1),
+            breach_patience=1, restore_patience=1, decision_log_max=4))
+        for _ in range(3):                 # walk down the ladder: 3 drops
+            asc.observe(admit_wait_ms=100.0)
+        for _ in range(3):                 # walk back up: 3 restores
+            asc.observe(admit_wait_ms=0.0)
+        for _ in range(3):
+            asc.observe(admit_wait_ms=100.0)
+        assert asc.n_moves == 9
+        assert len(asc.decisions) == 4     # ring kept only the newest 4
+        assert [d["action"] for d in asc.decisions] == \
+            ["restore", "drop", "drop", "drop"]
+
+    def test_log_max_validation(self):
+        from repro.serve import AutoscalerConfig
+
+        with pytest.raises(ValueError, match="decision_log_max"):
+            AutoscalerConfig(decision_log_max=0)

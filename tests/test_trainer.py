@@ -233,6 +233,38 @@ class TestCheckpointResume:
 
 
 # ---------------------------------------------------------------------------
+# Supervisor restart cap: deterministic crashes propagate, transient recover
+# ---------------------------------------------------------------------------
+
+class TestRestartCap:
+    def test_deterministic_crash_hits_cap(self, tmp_path):
+        """fail_count=None fires the injected fault every time the step is
+        reached — restore lands on the same step forever, so after
+        max_restarts consecutive no-progress crashes the real error must
+        propagate instead of looping."""
+        with registry.using("ref"):
+            tr = _mk(steps=6, ckpt_dir=str(tmp_path), max_restarts=2)
+            tr.ckpt_every = 2
+            with pytest.raises(RuntimeError, match="injected fault"):
+                tr.run(6, fail_at=3, fail_count=None)
+
+    def test_transient_crashes_recover_within_cap(self, tmp_path):
+        with registry.using("ref"):
+            tr = _mk(steps=6, ckpt_dir=str(tmp_path), max_restarts=8)
+            tr.ckpt_every = 2
+            state, losses = tr.run(6, fail_at=3, fail_count=2)
+        assert int(state.step) == 6
+        # each crash replays ≥1 step (from the step-2 checkpoint, or from
+        # scratch when the async save hasn't committed yet — timing decides
+        # which, so the exact replay count isn't pinned)
+        assert 8 <= len(losses) <= 12
+
+    def test_cap_validation(self):
+        with pytest.raises(ValueError, match="max_restarts"):
+            _mk(steps=2, max_restarts=-1)
+
+
+# ---------------------------------------------------------------------------
 # Elastic composition: kill a pod, shrink, restore, nothing skipped/repeated
 # ---------------------------------------------------------------------------
 
